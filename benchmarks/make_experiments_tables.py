@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep JSONs.
+
+    PYTHONPATH=src:. python benchmarks/make_experiments_tables.py \
+        results/dryrun_all.json [results/dryrun_baseline.json]
+"""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def table(cells, baseline=None):
+    base = {}
+    if baseline:
+        for c in baseline:
+            if c.get("status") == "ok" and "t_collective_s" in c:
+                base[(c["arch"], c["shape"], c["mesh"])] = c
+    out = []
+    out.append("| arch | shape | mesh | HBM GiB/dev | t_compute | t_memory"
+               "(hlo) | t_memory(est) | t_collective | dominant | useful |"
+               " roofline frac | vs baseline coll |")
+    out.append("|---|---|---|---:|---:|---:|---:|---:|---|---:|---:|---:|")
+    for c in cells:
+        if c.get("status") == "skip":
+            out.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — |"
+                       f" — | — | — | SKIP | — | — | {c['reason'][:40]}… |")
+            continue
+        if c.get("status") != "ok":
+            out.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — |"
+                       f" — | — | — | ERROR | — | — | — |")
+            continue
+        mem = (c["memory"]["argument_size_in_bytes"]
+               + c["memory"]["temp_size_in_bytes"]) / 2**30
+        if "t_compute_s" not in c:          # multi-pod: compile proof only
+            out.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} |"
+                       f" {mem:.2f} | — | — | — | — | compiled ✓ | — | — |"
+                       f" — |")
+            continue
+        tc, tm, tme, tl = (c["t_compute_s"], c["t_memory_s"],
+                           c.get("t_memory_est_s", 0.0), c["t_collective_s"])
+        dom = max(tc, tme, tl)
+        frac = tc / dom if dom else 0.0
+        b = base.get((c["arch"], c["shape"], c["mesh"]))
+        delta = (f"{b['t_collective_s'] / tl:.2f}x"
+                 if b and tl else "—")
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {mem:.2f} |"
+            f" {tc*1e3:.1f}ms | {tm*1e3:.1f}ms | {tme*1e3:.1f}ms |"
+            f" {tl*1e3:.1f}ms | {c['dominant']} |"
+            f" {c['useful_ratio']:.2f} | {frac:.2f} | {delta} |")
+    return "\n".join(out)
+
+
+def main():
+    cells = json.load(open(sys.argv[1]))
+    baseline = json.load(open(sys.argv[2])) if len(sys.argv) > 2 else None
+    single = [c for c in cells if c["mesh"] == "16x16"]
+    multi = [c for c in cells if c["mesh"] == "2x16x16"]
+    print("### Single-pod (16x16 = 256 chips) — roofline table\n")
+    print(table(single, baseline))
+    print("\n### Multi-pod (2x16x16 = 512 chips) — compile/memory proof\n")
+    print(table(multi, baseline))
+    ok = sum(c["status"] == "ok" for c in cells)
+    sk = sum(c["status"] == "skip" for c in cells)
+    er = sum(c["status"] == "error" for c in cells)
+    print(f"\nTotal: {ok} compiled ok, {sk} documented skips, {er} errors.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  figs 2-8   heuristic sweeps on the seven dataset stand-ins
+  fig 9      best-heuristic summary (speedup vs Original + accuracy)
+  fig 1b     CSR/ELL space conservation
+  scaling    process-count scaling (subprocess per device count)
+  roofline   LM arch x shape terms from results/dryrun_all.json (if present)
+
+Full sweep: ``python -m benchmarks.run``; quick subset: ``--quick``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 datasets, 4 heuristics, no scaling")
+    ap.add_argument("--no-scaling", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import svm_figs
+    print("name,us_per_call,derived")
+
+    datasets = (["a7a", "usps"] if args.quick else
+                ["a7a", "a9a", "usps", "mushrooms", "w7a", "ijcnn", "mnist"])
+    heuristics = (["original", "single500", "multi500", "multi5pc"]
+                  if args.quick else svm_figs.DEFAULT_HEURISTICS)
+
+    results = {}
+    for ds in datasets:
+        rows = svm_figs.bench_dataset(ds, heuristics=heuristics)
+        results[ds] = rows
+        for r in rows:
+            print(r.csv(), flush=True)
+
+    for line in svm_figs.fig9_summary(results):
+        print(line, flush=True)
+    for line in svm_figs.fig1b_space():
+        print(line, flush=True)
+
+    if not (args.quick or args.no_scaling):
+        from benchmarks import scaling
+        for line in scaling.bench_scaling():
+            print(line, flush=True)
+
+    # roofline table (from the dry-run sweep, if it has been produced)
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "results", "dryrun_all.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            cells = json.load(f)
+        for c in cells:
+            if c.get("status") != "ok" or "t_compute_s" not in c:
+                continue
+            dom_t = max(c["t_compute_s"], c.get("t_memory_est_s", 0.0),
+                        c["t_collective_s"])
+            frac = c["t_compute_s"] / dom_t if dom_t else 0.0
+            print(f"roofline/{c['arch']}__{c['shape']}__{c['mesh']},"
+                  f"{dom_t * 1e6:.0f},"
+                  f"dominant={c['dominant']};roofline_frac={frac:.3f};"
+                  f"useful={c['useful_ratio']:.2f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

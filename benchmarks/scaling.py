@@ -1,0 +1,68 @@
+"""Process-scaling benchmark (the x-axis of the paper's Figs. 2-6).
+
+The container has one physical core, so wall-clock cannot show real
+multi-device speedup; what IS hardware-independent and reported here:
+
+  * per-shard work (kernel-row evaluations / p) — the Theta(lambda*N/p)
+    term the paper's scaling rests on,
+  * the iteration count (identical across p — the distributed algorithm is
+    exact, so parallelism divides work without adding iterations),
+  * collective volume per iteration (the all_gather payload, 2d+6 floats).
+
+Each device count runs in a subprocess with its own XLA host-device flag.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CODE = """
+import json
+import numpy as np
+from repro.core import SVMConfig
+from repro.core.parallel import ParallelSMOSolver
+from repro.data import make, SPECS
+
+spec = SPECS['a9a']
+X, y, Xt, yt = make('a9a', scale=0.04, seed=0)
+m = ParallelSMOSolver(SVMConfig(C=spec.C, sigma2=spec.sigma2,
+                                heuristic='{h}', chunk_iters=256,
+                                min_buffer=128)).fit(X, y)
+import jax
+p = len(jax.devices())
+krows = m.stats.flops_est / (4.0 * X.shape[1] + 10.0)
+print(json.dumps(dict(p=p, iters=m.stats.iterations,
+                      krows_per_shard=krows / p,
+                      obj=m.dual_objective(),
+                      bcast_floats=(2 * X.shape[1] + 6) * m.stats.iterations,
+                      time=m.stats.train_time + m.stats.recon_time)))
+"""
+
+
+def bench_scaling(device_counts=(1, 2, 4, 8), heuristic="multi5pc"):
+    rows = []
+    ref_obj = None
+    for p in device_counts:
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={p}",
+                   PYTHONPATH=os.path.join(ROOT, "src"))
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_CODE.format(h=heuristic))],
+            capture_output=True, text=True, env=env, timeout=900)
+        if out.returncode != 0:
+            rows.append(f"scaling_a9a/p{p},0,error")
+            continue
+        r = json.loads(out.stdout.strip().splitlines()[-1])
+        if ref_obj is None:
+            ref_obj = r["obj"]
+        rows.append(
+            f"scaling_a9a/p{p},{r['time'] * 1e6:.0f},"
+            f"iters={r['iters']};krows_per_shard={r['krows_per_shard']:.3e};"
+            f"obj_drift={abs(r['obj'] - ref_obj) / abs(ref_obj):.2e};"
+            f"bcast_floats={r['bcast_floats']:.3e}")
+    return rows

@@ -1,0 +1,62 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode
+with the per-family cache (KV / mLSTM matrix memory / Mamba2 state).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b --tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import train_lib
+from repro.models.api import build
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=configs.ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = configs.smoke_config(args.arch)
+    model = build(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.tokens
+
+    if cfg.frontend == "embeds":
+        emb = rng.normal(scale=0.02,
+                         size=(cfg.vocab_size, cfg.d_model)).astype(np.float32)
+        tok2in = lambda t: {"embeds": jnp.asarray(emb[np.asarray(t)])}
+    else:
+        tok2in = lambda t: {"tokens": jnp.asarray(t)}
+
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    # prefill via chunked decode (state families) — one token at a time
+    # here for simplicity; transformer prefill_step covers the bulk path.
+    cache = model.init_cache(cfg, args.batch, max_len)
+    dec = jax.jit(lambda p, c, b: model.decode(p, cfg, c, b))
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = dec(params, cache, tok2in(prompts[:, t: t + 1]))
+    out = [np.asarray(jnp.argmax(logits[:, -1], -1))]
+    for _ in range(args.tokens - 1):
+        logits, cache = dec(params, cache, tok2in(out[-1][:, None]))
+        out.append(np.asarray(jnp.argmax(logits[:, -1], -1)))
+    dt = time.perf_counter() - t0
+    gen = np.stack(out, 1)
+    print(f"{args.arch}: generated {gen.shape} in {dt:.2f}s "
+          f"({args.batch * args.tokens / dt:.1f} tok/s incl. compile)")
+    print("sample:", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Checkpointing with elastic restore (DESIGN.md §6).
+
+Format: one .npz per top-level state group (params / opt / extra) +
+manifest.json (tree structure, shapes, dtypes, step, sha256 per file).
+Save gathers to host (works from any sharding); restore device_puts onto
+whatever mesh/sharding the *restarted* job uses — elastic rescale (N pods ->
+M pods, or a different mesh shape entirely) is therefore the same code path
+as plain restart. Async saves run on a daemon thread with an atomic
+rename-into-place so a crash mid-save never corrupts the latest checkpoint.
+
+SVM runs checkpoint (alpha, gamma, active, step) the same way — an SMO
+optimization restarts mid-training with bitwise-identical trajectory
+(the chunk runner is deterministic given state).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in leaves:
+        key = "/".join(
+            str(k.key) if hasattr(k, "key") else str(k.idx) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16/fp8): store as
+            arr = arr.astype(np.float32)   # f32 (lossless up); restore casts
+        flat[key] = arr
+    return flat, jax.tree_util.tree_structure(tree)
+
+
+def _sha(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for blk in iter(lambda: f.read(1 << 20), b""):
+            h.update(blk)
+    return h.hexdigest()
+
+
+def save(directory: str, step: int, groups: dict[str, Any],
+         extra: Optional[dict] = None, async_: bool = False):
+    """groups: e.g. {'params': params, 'opt': opt_state}. Blocking unless
+    ``async_`` (daemon thread; join via returned handle)."""
+    def _do():
+        tmp = tempfile.mkdtemp(dir=os.path.dirname(
+            os.path.abspath(directory)) or ".")
+        manifest = {"step": int(step), "groups": {}, "extra": extra or {}}
+        for name, tree in groups.items():
+            flat, _ = _flatten(tree)
+            fn = os.path.join(tmp, f"{name}.npz")
+            np.savez(fn, **flat)
+            manifest["groups"][name] = {
+                "file": f"{name}.npz", "sha256": _sha(fn),
+                "keys": sorted(flat.keys()),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.isdir(directory):
+            shutil.rmtree(directory)
+        os.replace(tmp, directory)
+
+    if async_:
+        t = threading.Thread(target=_do, daemon=True)
+        t.start()
+        return t
+    _do()
+    return None
+
+
+def load_manifest(directory: str) -> dict:
+    with open(os.path.join(directory, "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore(directory: str, name: str, like: Any, shardings: Any = None,
+            verify: bool = True) -> Any:
+    """Restore group ``name`` into the structure of ``like`` (a pytree of
+    arrays or ShapeDtypeStructs). ``shardings``: matching pytree of
+    NamedShardings for the *current* mesh — this is where elastic resharding
+    happens (host arrays -> device_put under the new layout)."""
+    man = load_manifest(directory)
+    info = man["groups"][name]
+    fn = os.path.join(directory, info["file"])
+    if verify:
+        got = _sha(fn)
+        if got != info["sha256"]:
+            raise IOError(f"checkpoint corruption: {fn}: {got[:12]} != "
+                          f"{info['sha256'][:12]}")
+    data = np.load(fn)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    flat_sh = (jax.tree_util.tree_leaves(shardings)
+               if shardings is not None else [None] * len(leaves))
+    for (path, leaf), sh in zip(leaves, flat_sh):
+        key = "/".join(
+            str(k.key) if hasattr(k, "key") else str(k.idx) for k in path)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(base: str) -> Optional[int]:
+    """Scan ``base`` for step_XXXX directories; return the newest step."""
+    if not os.path.isdir(base):
+        return None
+    steps = []
+    for d in os.listdir(base):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(base, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None

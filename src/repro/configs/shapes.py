@@ -1,0 +1,61 @@
+"""The assigned input-shape set (one per arch x shape dry-run cell).
+
+``decode_*`` / ``long_*`` lower serve_step (one token against a seq_len KV
+cache/state), not train_step. ``long_500k`` requires sub-quadratic sequence
+mixing and is only applicable to the SSM/hybrid archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {s.name: s for s in [
+    ShapeSpec("train_4k", "train", 4096, 256),
+    ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    ShapeSpec("decode_32k", "decode", 32768, 128),
+    ShapeSpec("long_500k", "decode", 524288, 1),
+]}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k dense KV decode is "
+                       "quadratic-regime; skipped per DESIGN.md §5")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+    shardable, no device allocation (the dry-run contract)."""
+    B, L = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.frontend == "embeds":
+            return {"embeds": jax.ShapeDtypeStruct((B, L, cfg.d_model), act),
+                    "targets": jax.ShapeDtypeStruct((B, L), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, L), i32),
+                "targets": jax.ShapeDtypeStruct((B, L), i32)}
+    if shape.kind == "prefill":
+        if cfg.frontend == "embeds":
+            return {"embeds": jax.ShapeDtypeStruct((B, L, cfg.d_model), act)}
+        return {"tokens": jax.ShapeDtypeStruct((B, L), i32)}
+    # decode: one new token; the cache ShapeDtypeStructs come from
+    # eval_shape(init_cache) in the dry-run driver.
+    if cfg.frontend == "embeds":
+        return {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), act)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

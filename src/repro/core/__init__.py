@@ -1,0 +1,8 @@
+"""Core: the paper's contribution — parallel SMO with adaptive shrinking."""
+from repro.core.heuristics import TABLE3, ShrinkHeuristic, get as get_heuristic
+from repro.core.solver import SVMConfig, SVMModel, SMOSolver, FitStats, train
+
+__all__ = [
+    "TABLE3", "ShrinkHeuristic", "get_heuristic",
+    "SVMConfig", "SVMModel", "SMOSolver", "FitStats", "train",
+]

@@ -1,0 +1,108 @@
+"""Kernel functions for SVM training.
+
+The paper (Sec. 4.1) uses the Gaussian kernel K(x, z) = exp(-||x - z||^2 / (2 sigma^2))
+for all experiments; linear and polynomial kernels are "straightforward to use"
+(Sec. 4.1) and are provided for completeness.
+
+Kernel *rows* (K(z, X) for one z against the whole active set) are the hot
+path of SMO — no kernel cache is kept (paper Sec. 3.1.1): rows are recomputed
+every iteration. On TPU the fused Pallas kernels in ``repro.kernels`` replace
+the jnp implementations here; these are the reference/CPU path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+KernelRowFn = Callable[..., jax.Array]
+
+
+def rbf_row(X: jax.Array, sq_norms: jax.Array, z: jax.Array, inv_2s2: jax.Array) -> jax.Array:
+    """K(z, X_i) = exp(-||X_i - z||^2 * inv_2s2) for all rows i.
+
+    ``sq_norms`` holds precomputed ||X_i||^2 so each row costs one GEMV pass.
+    """
+    d2 = sq_norms - 2.0 * (X @ z) + jnp.dot(z, z)
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
+def rbf_rows2(X: jax.Array, sq_norms: jax.Array, z2: jax.Array, inv_2s2: jax.Array) -> jax.Array:
+    """Fused two-row RBF: K([z_up; z_low], X) in a single pass over X.
+
+    z2: (2, d). Returns (N, 2). One GEMM instead of two GEMVs — halves HBM
+    traffic on X, which dominates the per-iteration cost (see DESIGN.md §7).
+    """
+    prods = X @ z2.T                                  # (N, 2)
+    zn = jnp.sum(z2 * z2, axis=-1)                    # (2,)
+    d2 = sq_norms[:, None] - 2.0 * prods + zn[None, :]
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
+def linear_row(X: jax.Array, sq_norms: jax.Array, z: jax.Array, inv_2s2: jax.Array) -> jax.Array:
+    del sq_norms, inv_2s2
+    return X @ z
+
+
+def linear_rows2(X: jax.Array, sq_norms: jax.Array, z2: jax.Array, inv_2s2: jax.Array) -> jax.Array:
+    del sq_norms, inv_2s2
+    return X @ z2.T
+
+
+def poly_row(X: jax.Array, sq_norms: jax.Array, z: jax.Array, inv_2s2: jax.Array,
+             degree: int = 3, coef0: float = 1.0) -> jax.Array:
+    del sq_norms
+    # inv_2s2 doubles as the scale parameter for non-RBF kernels.
+    return (inv_2s2 * (X @ z) + coef0) ** degree
+
+
+def poly_rows2(X: jax.Array, sq_norms: jax.Array, z2: jax.Array, inv_2s2: jax.Array,
+               degree: int = 3, coef0: float = 1.0) -> jax.Array:
+    del sq_norms
+    return (inv_2s2 * (X @ z2.T) + coef0) ** degree
+
+
+def self_kernel(kernel: str) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """K(x, x). For RBF this is identically 1 — exploited to skip two kernel
+    evaluations per iteration (Eq. 12 needs K(up,up) and K(low,low))."""
+    if kernel == "rbf":
+        return lambda z, inv_2s2: jnp.float32(1.0)
+    if kernel == "linear":
+        return lambda z, inv_2s2: jnp.dot(z, z)
+    if kernel == "poly":
+        return lambda z, inv_2s2: (inv_2s2 * jnp.dot(z, z) + 1.0) ** 3
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+_ROWS2 = {"rbf": rbf_rows2, "linear": linear_rows2, "poly": poly_rows2}
+_ROW = {"rbf": rbf_row, "linear": linear_row, "poly": poly_row}
+
+
+def get_rows2(kernel: str) -> KernelRowFn:
+    try:
+        return _ROWS2[kernel]
+    except KeyError:
+        raise ValueError(f"unknown kernel {kernel!r}") from None
+
+
+def get_row(kernel: str) -> KernelRowFn:
+    try:
+        return _ROW[kernel]
+    except KeyError:
+        raise ValueError(f"unknown kernel {kernel!r}") from None
+
+
+def full_kernel_matrix(kernel: str, X: jax.Array, Z: jax.Array, inv_2s2: float,
+                       block: int = 2048) -> jax.Array:
+    """K(X_i, Z_j) — test/predict-time helper (never materialized in training;
+    the paper's no-kernel-cache doctrine, Sec. 3.1.1)."""
+    if kernel == "linear":
+        return X @ Z.T
+    if kernel == "poly":
+        return (inv_2s2 * (X @ Z.T) + 1.0) ** 3
+    xn = jnp.sum(X * X, axis=-1)
+    zn = jnp.sum(Z * Z, axis=-1)
+    d2 = xn[:, None] - 2.0 * (X @ Z.T) + zn[None, :]
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)

@@ -1,0 +1,272 @@
+"""Distributed SMO — the paper's Algorithms 3/4 on a JAX device mesh.
+
+Mapping from the paper's MPI/Global-Arrays design (DESIGN.md §2):
+
+  * each mesh shard owns a contiguous, balanced block of samples
+    (X, y, alpha, gamma, active) — the Global-Arrays distribution;
+  * MPI_Bcast of (x_up, x_low)  ->  one fused ``lax.all_gather`` of per-shard
+    candidate payloads [beta_up, beta_low, alpha_up, y_up, alpha_low, y_low,
+    x_up_row, x_low_row] (p x (2d+6) floats) + replicated argmin/argmax —
+    every device then holds the winning rows, same O(log p) tree cost;
+  * MPI_Allreduce of (beta_up, beta_low) -> folded into the same all_gather;
+  * shrinkitercounter allreduce (Alg. 4)  -> ``lax.psum`` of local active
+    counts (one scalar);
+  * gamma update (Eq. 6) runs shard-locally with zero communication.
+
+So the per-iteration communication is exactly one all_gather(p, 2d+6) + one
+psum(1) — two collectives, matching the paper's two (bcast + allreduce).
+
+Gradient reconstruction (Alg. 6) is a ring: (X_shard, coef_shard) blocks
+rotate via ``lax.ppermute`` while each shard accumulates K(X_stale, block) @
+coef partial sums — p steps, compute/comm overlappable, no kernel cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import kernel_fns, smo, solver
+
+AXIS = "shards"
+
+
+def data_mesh(n_devices: Optional[int] = None, axis: str = AXIS) -> Mesh:
+    devs = jax.devices()[: n_devices or len(jax.devices())]
+    return jax.make_mesh((len(devs),), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,),
+                         devices=devs)
+
+
+def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
+                               inv_2s2: float, shrink_interval: int,
+                               axis: str = AXIS, use_pallas: bool = False):
+    """shard_map SMO chunk. State scalars are replicated; arrays sharded."""
+    rows2 = kernel_fns.get_rows2(kernel)
+    kself = kernel_fns.self_kernel(kernel)
+    row1 = kernel_fns.get_row(kernel)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+    def local_chunk(X_l, y_l, sq_l, alpha_l, gamma_l, active_l,
+                    step0, next_shrink0, n_shrinks0, tol, max_iters):
+        p = lax.axis_size(axis)
+        me = lax.axis_index(axis)
+        d = X_l.shape[1]
+
+        def gather_select(gamma_l, alpha_l, active_l):
+            """Local Eq. 8 + fused candidate exchange. Returns replicated
+            (b_up, b_low, payload rows/scalars) and my local candidate idx."""
+            b_up_l, j_up, b_low_l, j_low = smo.select_pair(
+                gamma_l, alpha_l, y_l, active_l, C)
+            pay = jnp.concatenate([
+                jnp.stack([b_up_l, b_low_l, alpha_l[j_up], y_l[j_up],
+                           alpha_l[j_low], y_l[j_low]]),
+                X_l[j_up], X_l[j_low]])                    # (6 + 2d,)
+            pays = lax.all_gather(pay, axis)               # (p, 6 + 2d)
+            k_up = jnp.argmin(pays[:, 0])
+            k_low = jnp.argmax(pays[:, 1])
+            sel = dict(
+                beta_up=pays[k_up, 0], beta_low=pays[k_low, 1],
+                a_up=pays[k_up, 2], y_up=pays[k_up, 3],
+                a_low=pays[k_low, 4], y_low=pays[k_low, 5],
+                x_up=pays[k_up, 6: 6 + d], x_low=pays[k_low, 6 + d:],
+                k_up=k_up, k_low=k_low, j_up=j_up, j_low=j_low)
+            return sel
+
+        def body(carry):
+            (alpha_l, gamma_l, active_l, sel, step, next_shrink,
+             n_shrinks, conv, stalled) = carry
+            x2 = jnp.stack([sel["x_up"], sel["x_low"]])
+            k_ul = row1(sel["x_low"][None, :], jnp.sum(sel["x_low"] ** 2)[None],
+                        sel["x_up"], inv_2s2)[0]           # replicated O(d)
+            a_up_new, a_low_new = smo.pair_update(
+                sel["a_up"], sel["a_low"], sel["y_up"], sel["y_low"],
+                sel["beta_up"], sel["beta_low"], k_ul,
+                kself(sel["x_up"], inv_2s2), kself(sel["x_low"], inv_2s2), C)
+            d_up = a_up_new - sel["a_up"]
+            d_low = a_low_new - sel["a_low"]
+            stalled = (jnp.abs(d_up) < smo._TAU) & (jnp.abs(d_low) < smo._TAU)
+
+            # owner shards write the new alphas back into their block
+            alpha_l = jnp.where(me == sel["k_up"],
+                                alpha_l.at[sel["j_up"]].set(a_up_new), alpha_l)
+            alpha_l = jnp.where(me == sel["k_low"],
+                                alpha_l.at[sel["j_low"]].set(a_low_new), alpha_l)
+            coef2 = jnp.stack([sel["y_up"] * d_up, sel["y_low"] * d_low])
+            if use_pallas:
+                gamma_l = kops.fused_gamma_update(
+                    kernel, X_l, sq_l, gamma_l, x2, coef2, inv_2s2)
+            else:
+                rows = rows2(X_l, sq_l, x2, inv_2s2)       # (m_l, 2)
+                gamma_l = gamma_l + rows @ coef2
+
+            step1 = step + 1
+            do_shrink = (shrink_interval > 0) & (step1 >= next_shrink)
+            active_l = lax.cond(
+                do_shrink,
+                lambda: smo.shrink_rule(gamma_l, alpha_l, y_l, active_l,
+                                        sel["beta_up"], sel["beta_low"], C),
+                lambda: active_l)
+            # Alg. 4 line 12: allreduce of local active counts
+            n_active = lax.psum(jnp.sum(active_l.astype(jnp.int32)), axis)
+            interval = jnp.maximum(
+                jnp.minimum(jnp.int32(shrink_interval), n_active), 1)
+            next_shrink = jnp.where(do_shrink, step1 + interval, next_shrink)
+            n_shrinks = n_shrinks + do_shrink.astype(jnp.int32)
+
+            sel = gather_select(gamma_l, alpha_l, active_l)
+            conv = sel["beta_up"] + tol >= sel["beta_low"]
+            return (alpha_l, gamma_l, active_l, sel, step1, next_shrink,
+                    n_shrinks, conv, stalled)
+
+        def cond(carry):
+            (_, _, _, _, step, _, _, conv, stalled) = carry
+            return (~conv) & (~stalled) & (step - step0 < max_iters)
+
+        sel0 = gather_select(gamma_l, alpha_l, active_l)
+        conv0 = sel0["beta_up"] + tol >= sel0["beta_low"]
+        carry = (alpha_l, gamma_l, active_l, sel0, step0, next_shrink0,
+                 n_shrinks0, conv0, jnp.bool_(False))
+        (alpha_l, gamma_l, active_l, sel, step, next_shrink, n_shrinks,
+         conv, stalled) = lax.while_loop(cond, body, carry)
+        return (alpha_l, gamma_l, active_l, sel["beta_up"], sel["beta_low"],
+                step, next_shrink, n_shrinks, conv, stalled)
+
+    sharded = P(axis)
+    rep = P()
+    mapped = jax.shard_map(
+        local_chunk, mesh=mesh,
+        in_specs=(P(axis, None), sharded, sharded, sharded, sharded, sharded,
+                  rep, rep, rep, rep, rep),
+        out_specs=(sharded, sharded, sharded, rep, rep, rep, rep, rep, rep,
+                   rep),
+        check_vma=False)
+    jitted = jax.jit(mapped)
+
+    def run_chunk(X, y, sq, state: smo.SMOState, tol, max_iters: int):
+        (alpha, gamma, active, b_up, b_low, step, next_shrink, n_shrinks,
+         conv, stalled) = jitted(X, y, sq, state.alpha, state.gamma,
+                                 state.active, state.step, state.next_shrink,
+                                 state.n_shrinks, tol,
+                                 jnp.int32(max_iters))
+        return state._replace(
+            alpha=alpha, gamma=gamma, active=active, beta_up=b_up,
+            beta_low=b_low, step=step, next_shrink=next_shrink,
+            n_shrinks=n_shrinks, converged=conv, stalled=stalled)
+
+    return run_chunk
+
+
+def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
+                            axis: str = AXIS, row_block: int = 4096):
+    """Distributed Alg. 6: ring-rotate (X_shard, coef_shard); every shard
+    accumulates kernel-block @ coef partials for its stale rows."""
+
+    def local(X_l, y_l, alpha_l, gamma_l, stale_l):
+        p = lax.axis_size(axis)
+        coef_l = alpha_l * y_l                    # zero where alpha == 0
+        m_l = X_l.shape[0]
+        sq_l = jnp.sum(X_l * X_l, axis=-1)
+        # pad the *local row* side so the row-block loop stays in bounds;
+        # the ring payload (columns) keeps the uniform shard size m_l.
+        pad = (-m_l) % row_block
+        mp = m_l + pad
+        Xp = jnp.pad(X_l, ((0, pad), (0, 0)))
+        sqp = jnp.pad(sq_l, (0, pad))
+
+        def ring_step(t, carry):
+            Xb, cb, sqb, acc = carry
+
+            def rb(i, acc):
+                s = i * row_block
+                Xi = lax.dynamic_slice_in_dim(Xp, s, row_block)
+                sqi = lax.dynamic_slice_in_dim(sqp, s, row_block)
+                if kernel == "rbf":
+                    d2 = sqi[:, None] - 2.0 * (Xi @ Xb.T) + sqb[None, :]
+                    Kb = jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+                elif kernel == "linear":
+                    Kb = Xi @ Xb.T
+                else:
+                    Kb = (inv_2s2 * (Xi @ Xb.T) + 1.0) ** 3
+                return lax.dynamic_update_slice_in_dim(
+                    acc, lax.dynamic_slice_in_dim(acc, s, row_block) + Kb @ cb,
+                    s, axis=0)
+
+            acc = lax.fori_loop(0, mp // row_block, rb, acc)
+            perm = [(i, (i + 1) % p) for i in range(p)]
+            Xb = lax.ppermute(Xb, axis, perm)
+            cb = lax.ppermute(cb, axis, perm)
+            sqb = lax.ppermute(sqb, axis, perm)
+            return Xb, cb, sqb, acc
+
+        _, _, _, acc = lax.fori_loop(
+            0, p, ring_step, (X_l, coef_l, sq_l, jnp.zeros((mp,), jnp.float32)))
+        return jnp.where(stale_l, acc[:m_l] - y_l, gamma_l)
+
+    sharded = P(axis)
+    mapped = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), sharded, sharded, sharded, sharded),
+        out_specs=sharded, check_vma=False)
+    return jax.jit(mapped)
+
+
+class ParallelSMOSolver(solver.SMOSolver):
+    """Multi-device SMO with adaptive shrinking (Alg. 5 driver + Alg. 3/4
+    shard_map chunks + Alg. 6 ring reconstruction)."""
+
+    def __init__(self, config: solver.SVMConfig, mesh: Optional[Mesh] = None,
+                 axis: str = AXIS):
+        super().__init__(config)
+        self.mesh = mesh if mesh is not None else data_mesh(axis=axis)
+        self.axis = axis if mesh is None else self.mesh.axis_names[0]
+        self._sharding = NamedSharding(self.mesh, P(self.axis))
+        self._sharding2d = NamedSharding(self.mesh, P(self.axis, None))
+        self._runners: dict = {}
+
+    def _nshards(self) -> int:
+        return int(np.prod(self.mesh.devices.shape))
+
+    def _put(self, arr: np.ndarray):
+        sh = self._sharding2d if arr.ndim == 2 else self._sharding
+        return jax.device_put(jnp.asarray(arr), sh)
+
+    def _runner(self, cfg, interval):
+        key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas)
+        if key not in self._runners:
+            self._runners[key] = make_parallel_chunk_runner(
+                self.mesh, cfg.kernel, cfg.C, cfg.inv_2s2, interval,
+                self.axis, cfg.use_pallas)
+        return self._runners[key]
+
+    def _reconstruct(self, X, y, alpha, stale):
+        """Distributed Alg. 6: shard the full problem over the mesh and run
+        the ppermute ring; returns reconstructed gamma for ``stale`` rows."""
+        key = ("recon", self.cfg.kernel, self.cfg.inv_2s2)
+        if key not in self._runners:
+            self._runners[key] = make_ring_reconstructor(
+                self.mesh, self.cfg.kernel, self.cfg.inv_2s2, self.axis,
+                row_block=min(4096, _next_pow2(max(64, X.shape[0]))))
+        recon = self._runners[key]
+        p = self._nshards()
+        n = X.shape[0]
+        m = -(-n // p) * p                       # pad to shard-divisible
+        stale_mask = np.zeros((m,), bool)
+        stale_mask[stale] = True
+        Xp = np.zeros((m, X.shape[1]), np.float32)
+        Xp[:n] = X
+        pad1 = lambda a: np.pad(a.astype(np.float32), (0, m - n))
+        g = recon(self._put(Xp), self._put(pad1(y)), self._put(pad1(alpha)),
+                  self._put(np.zeros((m,), np.float32)),
+                  self._put(stale_mask))
+        return np.asarray(g)[stale]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (int(n - 1)).bit_length()

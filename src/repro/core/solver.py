@@ -1,0 +1,403 @@
+"""SMO driver — the paper's Algorithm 5 control flow.
+
+Phases (faithful to Alg. 5):
+
+  shrink stage    run jitted SMO chunks with in-loop shrinking until
+                  beta_up + 20*eps >= beta_low on the active set; physically
+                  compact the buffer between chunks when enough samples have
+                  been shrunk (this is where the FLOP/byte reduction the
+                  paper measures actually lands on TPU);
+  reconstruct     Alg. 6 for every non-active sample, then un-shrink
+                  (reset pi_q) and re-check optimality over ALL samples;
+  re-optimize     Single: shrinking disabled, run to 2*eps.
+                  Multi:  shrinking re-enabled (counter reset), run to 2*eps
+                          on the active set, reconstruct again, repeat until
+                          Eq. 9 holds over all samples.
+
+The "Original" baseline (Alg. 3, no shrinking) is the same driver with the
+shrink interval = 0 and no reconstruction, run straight to 2*eps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import heuristics as H
+from repro.core import kernel_fns, reconstruct, smo
+
+
+@dataclasses.dataclass
+class SVMConfig:
+    C: float = 1.0
+    kernel: str = "rbf"
+    sigma2: float = 1.0          # Gaussian width; K = exp(-||x-z||^2 / (2 sigma^2))
+    eps: float = 1e-3            # user tolerance (Eq. 9 uses 2*eps)
+    heuristic: "str | H.ShrinkHeuristic" = "original"
+    selection: str = "wss1"      # 'wss2': second-order pair selection (the
+                                 # paper's stated future work; fewer
+                                 # iterations, 2 kernel-row passes/iter)
+    max_iters: int = 4_000_000
+    chunk_iters: int = 256       # jitted while_loop segment length; smaller
+                                 # chunks let physical compaction engage
+                                 # sooner (-16% gamma-update FLOPs measured
+                                 # on a9a; EXPERIMENTS.md section Perf/SVM-2)
+    compact_ratio: float = 0.55  # compact buffer when active fraction < this
+    min_buffer: int = 256
+    recon_eps_factor: float = 20.0  # Alg. 5 line 7 first-reconstruction gate
+    use_pallas: bool = False
+    max_reconstructions: int = 64   # safety bound for Multi
+    checkpoint_dir: "str | None" = None  # save SMO state between chunks
+    checkpoint_every: int = 1       # in chunks
+    resume: bool = False            # restore from checkpoint_dir if present
+
+    @property
+    def inv_2s2(self) -> float:
+        return 1.0 / (2.0 * self.sigma2)
+
+
+@dataclasses.dataclass
+class FitStats:
+    iterations: int = 0
+    n_sv: int = 0
+    n_bound_sv: int = 0
+    reconstructions: int = 0
+    shrink_events: int = 0
+    compactions: int = 0
+    min_active: int = 0
+    train_time: float = 0.0
+    recon_time: float = 0.0
+    total_time: float = 0.0
+    converged: bool = False
+    stalled: bool = False
+    final_gap: float = 0.0
+    buffer_sizes: list = dataclasses.field(default_factory=list)
+    flops_est: float = 0.0       # model FLOPs of the gamma-update hot loop
+
+
+@dataclasses.dataclass
+class SVMModel:
+    config: SVMConfig
+    sv_x: np.ndarray             # (n_sv, d)
+    sv_coef: np.ndarray          # (n_sv,)  alpha_i * y_i
+    beta: float
+    alpha: np.ndarray            # (N,) full multipliers (diagnostics)
+    stats: FitStats
+
+    def decision_function(self, Z: np.ndarray, block: int = 8192) -> np.ndarray:
+        cfg = self.config
+        out = np.empty((Z.shape[0],), np.float32)
+        svx = jnp.asarray(self.sv_x)
+        coef = jnp.asarray(self.sv_coef)
+        f = jax.jit(lambda z: kernel_fns.full_kernel_matrix(
+            cfg.kernel, z, svx, cfg.inv_2s2) @ coef - self.beta)
+        for s in range(0, Z.shape[0], block):
+            zb = Z[s: s + block]
+            pad = block - zb.shape[0]
+            if pad:
+                zb = np.pad(zb, ((0, pad), (0, 0)))
+            out[s: s + min(block, Z.shape[0] - s)] = np.asarray(
+                f(jnp.asarray(zb)))[: Z.shape[0] - s]
+        return out
+
+    def predict(self, Z: np.ndarray) -> np.ndarray:
+        return np.where(self.decision_function(Z) >= 0.0, 1.0, -1.0)
+
+    def dual_objective(self) -> float:
+        """L_D (Eq. 1) over the support set — used by tests/benchmarks."""
+        cfg = self.config
+        K = np.asarray(kernel_fns.full_kernel_matrix(
+            cfg.kernel, jnp.asarray(self.sv_x), jnp.asarray(self.sv_x),
+            cfg.inv_2s2))
+        a = np.abs(self.sv_coef)           # alpha (coef = alpha*y)
+        return float(a.sum() - 0.5 * self.sv_coef @ K @ self.sv_coef)
+
+
+def _bucket(n: int, lo: int) -> int:
+    return min(max(lo, 1 << (int(n - 1)).bit_length()), 1 << 30) if n > 0 else lo
+
+
+_RUNNER_CACHE: dict = {}
+
+
+class SMOSolver:
+    """Single-host SMO with adaptive shrinking. See ``repro.core.parallel``
+    for the shard_map multi-device version."""
+
+    def __init__(self, config: SVMConfig):
+        self.cfg = config
+        self.h = H.get(config.heuristic)
+
+    # -- backend hooks (overridden by repro.core.parallel) --------------------
+    def _runner(self, cfg: SVMConfig, interval: int):
+        key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas,
+               cfg.selection)
+        if key not in _RUNNER_CACHE:
+            _RUNNER_CACHE[key] = smo.make_chunk_runner(
+                cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas,
+                selection=cfg.selection)
+        return _RUNNER_CACHE[key]
+
+    def _reconstruct(self, X, y, alpha, stale):
+        """Alg. 6 for global row indices ``stale``; host-blocked baseline."""
+        return reconstruct.reconstruct_gamma(
+            self.cfg.kernel, X, y, alpha, stale, self.cfg.inv_2s2)
+
+    # -- buffer plumbing -----------------------------------------------------
+    def _nshards(self) -> int:
+        return 1
+
+    def _put(self, arr: np.ndarray):
+        """Device placement hook; the parallel subclass shards over the mesh."""
+        return jnp.asarray(arr)
+
+    def _make_buffer(self, X, y, alpha, gamma, idx):
+        """Gather rows ``idx`` into a padded buffer of p balanced shards.
+
+        Returns (data arrays, fresh state, idx_buf) where idx_buf maps buffer
+        row -> global sample index (-1 on padding rows). Active rows are
+        distributed contiguously and evenly across shards — the paper's
+        "load balancing ... requires contiguous data movement of samples"
+        (Sec. 3.1.2).
+        """
+        p = self._nshards()
+        m_per = _bucket(-(-idx.size // p), max(self.cfg.min_buffer // p, 8))
+        m = m_per * p
+        Xb = np.zeros((m, X.shape[1]), np.float32)
+        yb = np.ones((m,), np.float32)          # padding: y=+1, alpha=0 -> I1
+        ab = np.zeros((m,), np.float32)
+        gb = np.full((m,), np.inf, np.float32)  # padding gamma never selected
+        valid = np.zeros((m,), bool)
+        idx_buf = np.full((m,), -1, np.int64)
+        base, extra = divmod(idx.size, p)
+        off = 0
+        for q in range(p):
+            cnt = base + (1 if q < extra else 0)
+            sl = slice(q * m_per, q * m_per + cnt)
+            sub = idx[off: off + cnt]
+            Xb[sl] = X[sub]
+            yb[sl] = y[sub]
+            ab[sl] = alpha[sub]
+            gb[sl] = gamma[sub]
+            valid[sl] = True
+            idx_buf[sl] = sub
+            off += cnt
+        sq = (Xb * Xb).sum(axis=1).astype(np.float32)
+        state = smo.SMOState(
+            alpha=self._put(ab), gamma=self._put(gb),
+            active=self._put(valid),
+            beta_up=jnp.float32(-1.0), beta_low=jnp.float32(1.0),
+            i_up=jnp.int32(0), i_low=jnp.int32(0),
+            step=jnp.int32(0), next_shrink=jnp.int32(0),
+            n_shrinks=jnp.int32(0), converged=jnp.bool_(False),
+            stalled=jnp.bool_(False))
+        return (self._put(Xb), self._put(yb), self._put(sq)), state, idx_buf
+
+    # -- fault tolerance -------------------------------------------------
+    def _save_ckpt(self, alpha, gamma, act_full, meta: dict):
+        from repro.ckpt import checkpoint as ck
+        import os
+        d = os.path.join(self.cfg.checkpoint_dir, f"step_{meta['step']}")
+        ck.save(d, meta["step"],
+                {"svm": {"alpha": alpha, "gamma": gamma,
+                         "active": act_full.astype(np.int8)}},
+                extra=meta)
+
+    def _load_ckpt(self, n: int):
+        from repro.ckpt import checkpoint as ck
+        step = ck.latest_step(self.cfg.checkpoint_dir)
+        if step is None:
+            return None
+        import os
+        d = os.path.join(self.cfg.checkpoint_dir, f"step_{step}")
+        like = {"alpha": np.zeros(n, np.float32),
+                "gamma": np.zeros(n, np.float32),
+                "active": np.zeros(n, np.int8)}
+        g = ck.restore(d, "svm", like)
+        man = ck.load_manifest(d)
+        return ({k: np.array(v) for k, v in g.items()}, man["extra"])
+
+    # -- main ----------------------------------------------------------------
+    def fit(self, X: np.ndarray, y: np.ndarray) -> SVMModel:
+        cfg, h = self.cfg, self.h
+        t0 = time.perf_counter()
+        X = np.ascontiguousarray(X, np.float32)
+        y = np.ascontiguousarray(y, np.float32)
+        n, d = X.shape
+        assert set(np.unique(y)) <= {-1.0, 1.0}, "labels must be +-1"
+
+        alpha = np.zeros((n,), np.float32)
+        gamma = (-y).astype(np.float32)
+        stats = FitStats(min_active=n)
+
+        interval = h.interval(n)
+        runner = self._runner(cfg, interval)
+        tol20 = jnp.float32(cfg.recon_eps_factor * cfg.eps)
+        tol2 = jnp.float32(2.0 * cfg.eps)
+
+        shrink_on = h.policy != "none"
+        recon_count = 0
+        t_train = 0.0
+        t_recon = 0.0
+        stalled = False
+        step0, nshr0, act_full0 = 0, 0, None
+        if cfg.resume and cfg.checkpoint_dir:
+            got = self._load_ckpt(n)
+            if got is not None:
+                g, meta = got
+                alpha, gamma = g["alpha"], g["gamma"]
+                act_full0 = g["active"].astype(bool)
+                step0 = int(meta["step"])
+                nshr0 = int(meta.get("shrink_events", 0))
+                recon_count = int(meta.get("recon_count", 0))
+                shrink_on = bool(meta.get("shrink_on", shrink_on))
+                stats.reconstructions = recon_count
+
+        if act_full0 is not None and shrink_on:
+            idx = np.flatnonzero(act_full0)
+        else:
+            idx = np.arange(n)
+        (Xb, yb, sqb), state, idx = self._make_buffer(X, y, alpha, gamma, idx)
+        stats.buffer_sizes.append(int(Xb.shape[0]))
+        state = state._replace(step=jnp.int32(step0),
+                               n_shrinks=jnp.int32(nshr0))
+        if interval > 0:
+            state = state._replace(next_shrink=jnp.int32(step0 + interval))
+        ckpt_count = 0
+
+        while True:
+            tol = tol20 if (shrink_on and recon_count == 0) else tol2
+            # ---- inner optimization at current tolerance --------------------
+            while True:
+                tc = time.perf_counter()
+                step_before = int(state.step)
+                state = runner(Xb, yb, sqb, state, tol,
+                               min(cfg.chunk_iters,
+                                   max(1, cfg.max_iters - int(state.step))))
+                state.converged.block_until_ready()
+                t_train += time.perf_counter() - tc
+                n_active = int(jnp.sum(state.active))
+                stats.min_active = min(stats.min_active, n_active)
+                # hot-loop model FLOPs: per iter ~ M*(4d + 10) (2-row GEMM+exp+FMA)
+                stats.flops_est += (int(state.step) - step_before) * \
+                    float(Xb.shape[0]) * (4.0 * d + 10.0)
+                if cfg.checkpoint_dir:
+                    ckpt_count += 1
+                    if ckpt_count % cfg.checkpoint_every == 0:
+                        alpha, gamma = self._writeback(state, idx, alpha,
+                                                       gamma)
+                        act_full = np.zeros((n,), bool)
+                        act_full[idx[(idx >= 0)
+                                     & np.asarray(state.active)]] = True
+                        self._save_ckpt(alpha, gamma, act_full, {
+                            "step": int(state.step),
+                            "shrink_events": int(state.n_shrinks),
+                            "recon_count": recon_count,
+                            "shrink_on": shrink_on})
+                if bool(state.converged) or bool(state.stalled) or \
+                        int(state.step) >= cfg.max_iters:
+                    break
+                # physical compaction between chunks (DESIGN.md SS4)
+                if shrink_on and n_active < cfg.compact_ratio * Xb.shape[0] \
+                        and _bucket(-(-n_active // self._nshards()),
+                                    max(cfg.min_buffer // self._nshards(), 8)) \
+                        * self._nshards() < Xb.shape[0]:
+                    alpha, gamma = self._writeback(state, idx, alpha, gamma)
+                    keep_mask = (idx >= 0) & np.asarray(state.active)
+                    keep = idx[keep_mask]
+                    (Xb, yb, sqb), state2, idx = self._make_buffer(
+                        X, y, alpha, gamma, keep)
+                    state = state2._replace(
+                        step=state.step,
+                        next_shrink=state.step + max(1, min(interval, keep.size)),
+                        n_shrinks=state.n_shrinks)
+                    stats.compactions += 1
+                    stats.buffer_sizes.append(int(Xb.shape[0]))
+            stalled = stalled or bool(state.stalled)
+            stats.shrink_events += int(state.n_shrinks)
+            alpha, gamma = self._writeback(state, idx, alpha, gamma)
+
+            if not shrink_on or recon_count >= cfg.max_reconstructions \
+                    or int(state.step) >= cfg.max_iters:
+                break
+
+            # ---- gradient reconstruction + un-shrink (Alg. 5 lines 26-33) --
+            tr = time.perf_counter()
+            act = np.zeros((n,), bool)
+            live = (idx >= 0) & np.asarray(state.active)
+            act[idx[live]] = True
+            stale = np.flatnonzero(~act)
+            gamma[stale] = self._reconstruct(X, y, alpha, stale)
+            t_recon += time.perf_counter() - tr
+            recon_count += 1
+
+            # optimality over ALL samples (Eq. 9)
+            b_up, b_low = _betas(gamma, alpha, y, cfg.C)
+            if b_up + 2.0 * cfg.eps >= b_low:
+                state = state._replace(converged=jnp.bool_(True))
+                break
+            # un-shrink: rebuild full buffer; Single disables shrinking
+            step_save, nshr = int(state.step), int(state.n_shrinks)
+            (Xb, yb, sqb), state, idx = self._make_buffer(
+                X, y, alpha, gamma, np.arange(n))
+            stats.buffer_sizes.append(int(Xb.shape[0]))
+            if h.policy == "single":
+                shrink_on = False
+                runner = self._runner(cfg, 0)
+            else:
+                runner = self._runner(cfg, interval)
+                state = state._replace(
+                    next_shrink=jnp.int32(step_save + interval))
+            state = state._replace(step=jnp.int32(step_save),
+                                   n_shrinks=jnp.int32(nshr))
+
+        # ---- finalize -------------------------------------------------------
+        b_up, b_low = _betas(gamma, alpha, y, cfg.C)
+        bnd = cfg.C * smo._BND
+        i0 = (alpha > bnd) & (alpha < cfg.C - bnd)
+        beta = float(gamma[i0].mean()) if i0.any() else float((b_low + b_up) / 2)
+        sv = np.flatnonzero(alpha > 0)
+        stats.iterations = int(state.step)
+        stats.n_sv = int(sv.size)
+        stats.n_bound_sv = int(np.sum(alpha >= cfg.C))
+        stats.reconstructions = recon_count
+        stats.train_time = t_train
+        stats.recon_time = t_recon
+        stats.total_time = time.perf_counter() - t0
+        stats.converged = bool(b_up + 2 * cfg.eps >= b_low)
+        stats.stalled = stalled
+        stats.final_gap = float(b_low - b_up)
+        return SVMModel(cfg, X[sv].copy(), (alpha[sv] * y[sv]).astype(np.float32),
+                        beta, alpha, stats)
+
+    @staticmethod
+    def _writeback(state: smo.SMOState, idx: np.ndarray,
+                   alpha: np.ndarray, gamma: np.ndarray):
+        ab = np.asarray(state.alpha)
+        gb = np.asarray(state.gamma)
+        mask = idx >= 0
+        alpha[idx[mask]] = ab[mask]
+        gamma[idx[mask]] = gb[mask]
+        return alpha, gamma
+
+
+def _betas(gamma: np.ndarray, alpha: np.ndarray, y: np.ndarray, C: float):
+    """Eq. 8 on host over all samples (used at reconstruction points)."""
+    pos = y > 0
+    at0 = alpha <= C * smo._BND
+    atc = alpha >= C * (1.0 - smo._BND)
+    i0 = ~at0 & ~atc
+    in_up = i0 | (pos & at0) | (~pos & atc)
+    in_low = i0 | (pos & atc) | (~pos & at0)
+    b_up = gamma[in_up].min() if in_up.any() else np.inf
+    b_low = gamma[in_low].max() if in_low.any() else -np.inf
+    return float(b_up), float(b_low)
+
+
+def train(X: np.ndarray, y: np.ndarray, **kw) -> SVMModel:
+    """Convenience wrapper: repro.core.solver.train(X, y, C=..., sigma2=...)."""
+    return SMOSolver(SVMConfig(**kw)).fit(X, y)

@@ -1,0 +1,110 @@
+"""Sparse sample storage: CSR (the paper's format) and block-ELL (our TPU
+adaptation, DESIGN.md §2).
+
+CSR here is the classic three-array layout (Fig. 1b/1c of the paper, minus
+the co-located alpha/y/gamma cells — those live in the SVMState pytree, which
+is the same co-location argument realized as structure-of-arrays). ELL pads
+every row to a fixed nonzero budget K (multiple of 128 for TPU lanes) so the
+Pallas gather kernel can stream (vals, cols) tiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRMatrix:
+    data: np.ndarray      # (nnz,) f32
+    indices: np.ndarray   # (nnz,) i32 column ids
+    indptr: np.ndarray    # (N+1,) i64 row pointers (the paper's psi)
+    shape: tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.size)
+
+    def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        lo, hi = self.indptr[i], self.indptr[i + 1]
+        return self.data[lo:hi], self.indices[lo:hi]
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, np.float32)
+        n = self.shape[0]
+        for i in range(n):
+            v, c = self.row(i)
+            out[i, c] = v
+        return out
+
+    def memory_bytes(self) -> int:
+        return self.data.nbytes + self.indices.nbytes + self.indptr.nbytes
+
+
+@dataclasses.dataclass
+class ELLMatrix:
+    vals: np.ndarray      # (N, K) f32, zero-padded
+    cols: np.ndarray      # (N, K) i32, zero-padded (val 0 makes it inert)
+    shape: tuple[int, int]
+
+    @property
+    def K(self) -> int:
+        return int(self.vals.shape[1])
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, np.float32)
+        n = self.shape[0]
+        rows = np.repeat(np.arange(n), self.K)
+        np.add.at(out, (rows, self.cols.reshape(-1)), self.vals.reshape(-1))
+        return out
+
+    def memory_bytes(self) -> int:
+        return self.vals.nbytes + self.cols.nbytes
+
+    def sq_norms(self) -> np.ndarray:
+        return (self.vals ** 2).sum(axis=1).astype(np.float32)
+
+
+def to_csr(X: np.ndarray) -> CSRMatrix:
+    n, d = X.shape
+    mask = X != 0
+    counts = mask.sum(axis=1)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    cols = np.nonzero(mask)[1].astype(np.int32)
+    data = X[mask].astype(np.float32)
+    return CSRMatrix(data, cols, indptr, (n, d))
+
+
+def to_ell(X: np.ndarray, K: int | None = None, lane: int = 128) -> ELLMatrix:
+    """Pad rows to K nonzeros (default: max row nnz rounded up to ``lane``)."""
+    n, d = X.shape
+    mask = X != 0
+    counts = mask.sum(axis=1)
+    kmax = int(counts.max()) if n else 0
+    if K is None:
+        K = max(lane, -(-kmax // lane) * lane)
+    if kmax > K:
+        raise ValueError(f"row with {kmax} nnz exceeds K={K}")
+    vals = np.zeros((n, K), np.float32)
+    cols = np.zeros((n, K), np.int32)
+    for i in range(n):
+        c = np.nonzero(mask[i])[0]
+        vals[i, : c.size] = X[i, c]
+        cols[i, : c.size] = c
+    return ELLMatrix(vals, cols, (n, d))
+
+
+def csr_space_report(X: np.ndarray) -> dict:
+    """Fig. 1b: memory conserved by sparse formats vs dense."""
+    dense = X.nbytes
+    csr = to_csr(X).memory_bytes()
+    ell = to_ell(X).memory_bytes()
+    return {
+        "dense_bytes": dense,
+        "csr_bytes": csr,
+        "ell_bytes": ell,
+        "csr_saving_pct": 100.0 * (1 - csr / dense),
+        "ell_saving_pct": 100.0 * (1 - ell / dense),
+        "density": float(np.count_nonzero(X)) / X.size,
+    }

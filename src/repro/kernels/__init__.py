@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
+holds the jit'd public wrappers (padding, block-size choice, interpret-mode
+fallback off-TPU).
+"""

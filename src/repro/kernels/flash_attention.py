@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: causal flash attention (forward) with GQA.
+
+Canonical FA tiling: grid (batch*q_heads, Lq/bq, Lk/bk) with the kv axis
+minor-most ("arbitrary" = sequential on core), online-softmax running
+(m, l, acc) in VMEM scratch that persists across kv grid steps. GQA is
+handled in the BlockSpec index maps — the kv block for q-head h comes from
+kv-head h // (H/Hkv), so grouped heads share K/V HBM reads.
+
+Used by LM train/prefill steps when ``use_pallas=True``; the dry-run and the
+numerics tests use ``ref.mha`` (fp32 softmax oracle). Backward falls back to
+the oracle via custom_vjp (recompute; documented in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: kv block [ki*bk, ki*bk+bk) intersects rows <= qi*bq+bq-1
+    should_run = (ki * block_k <= qi * block_q + block_q - 1) if causal \
+        else (ki >= 0)
+
+    @pl.when(should_run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+
+        m_prev = m_scr[...]                          # (bq, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)                       # (bq, bk)
+        corr = jnp.exp(m_prev - m_cur)               # (bq, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, H, Lq, Dh); k/v: (B, Hkv, Lk, Dh). Returns (B, H, Lq, Dh)."""
+    B, H, Lq, Dh = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    group = H // Hkv
+    block_q = min(block_q, Lq)
+    block_k = min(block_k, Lk)
+    assert Lq % block_q == 0 and Lk % block_k == 0
+    scale = Dh ** -0.5
+    grid = (B * H, Lq // block_q, Lk // block_k)
+
+    kernel = functools.partial(_fa_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k)
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [pltpu.VMEM((block_q, 1), jnp.float32),
+                   pltpu.VMEM((block_q, 1), jnp.float32),
+                   pltpu.VMEM((block_q, Dh), jnp.float32)]
+        params = dict(
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")))
+    except Exception:  # pragma: no cover - non-TPU pallas builds
+        scratch = [pl.MemorySpace.ANY] * 3
+        params = {}
+    if interpret:
+        params = {}
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lq, Dh), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **params,
+    )(q, k, v)

@@ -1,0 +1,113 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Responsibilities: pad shapes to TPU-friendly multiples, pick block sizes that
+fit VMEM, auto-select interpret mode off-TPU, and fall back to the ref.py
+oracles where a kernel doesn't apply (non-RBF kernels, tiny buffers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gamma_update as _gu
+from repro.kernels import rbf_row as _rr
+from repro.kernels import ref
+from repro.kernels import sparse_ell as _se
+
+_VMEM_BUDGET = 12 * 1024 * 1024  # leave headroom of the ~16 MiB per core
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block_m(n: int, d: int) -> int:
+    """Largest power-of-two block (<=2048, >=128) dividing n whose X tile
+    fits the VMEM budget."""
+    bm = 2048
+    while bm > 128 and (n % bm != 0 or bm * max(d, 128) * 4 > _VMEM_BUDGET):
+        bm //= 2
+    return bm if n % bm == 0 else 0
+
+
+def _pad_cols(a: jax.Array, mult: int = 128) -> jax.Array:
+    pad = (-a.shape[-1]) % mult
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+    return a
+
+
+def kernel_rows2(kernel: str, X: jax.Array, sq_norms: jax.Array,
+                 z2: jax.Array, inv_2s2) -> jax.Array:
+    """(N, 2) kernel rows; Pallas for RBF, oracle otherwise."""
+    n, d = X.shape
+    bm = _pick_block_m(n, d)
+    if kernel != "rbf" or bm == 0:
+        if kernel == "rbf":
+            return ref.kernel_rows2(X, sq_norms, z2, inv_2s2)
+        from repro.core import kernel_fns
+        return kernel_fns.get_rows2(kernel)(X, sq_norms, z2, inv_2s2)
+    out = _rr.rbf_rows2(_pad_cols(X), sq_norms, _pad_cols(z2),
+                        jnp.asarray(inv_2s2, jnp.float32),
+                        block_m=bm, interpret=_interpret())
+    return out.T
+
+
+def fused_gamma_update(kernel: str, X: jax.Array, sq_norms: jax.Array,
+                       gamma: jax.Array, z2: jax.Array, coef2: jax.Array,
+                       inv_2s2) -> jax.Array:
+    """gamma + coef2[0]*K(z_up, X) + coef2[1]*K(z_low, X), one HBM pass."""
+    n, d = X.shape
+    bm = _pick_block_m(n, d)
+    if kernel != "rbf" or bm == 0:
+        if kernel == "rbf":
+            return ref.gamma_update(X, sq_norms, gamma, z2, coef2, inv_2s2)
+        from repro.core import kernel_fns
+        rows = kernel_fns.get_rows2(kernel)(X, sq_norms, z2, inv_2s2)
+        return gamma + rows @ coef2
+    return _gu.gamma_update(_pad_cols(X), sq_norms, gamma, _pad_cols(z2),
+                            coef2, jnp.asarray(inv_2s2, jnp.float32),
+                            block_m=bm, interpret=_interpret())
+
+
+def ell_kernel_row(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                   z: jax.Array, inv_2s2) -> jax.Array:
+    n, K = vals.shape
+    bm = 512
+    while bm > 64 and n % bm != 0:
+        bm //= 2
+    if n % bm != 0:
+        return ref.ell_kernel_row(vals, cols, sq_norms, z, inv_2s2)
+    return _se.ell_kernel_row(_pad_cols(vals), _pad_cols(cols), sq_norms, z,
+                              jnp.asarray(inv_2s2, jnp.float32),
+                              block_m=bm, interpret=_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal: bool = True):
+    """(B, H, L, Dh) causal attention; Pallas fwd, oracle-recompute bwd."""
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               interpret=_interpret())
+
+
+def _fa_ref(q, k, v, causal):
+    # ref.mha uses (B, L, H, D) layout
+    o = ref.mha(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal=causal)
+    return o.transpose(0, 2, 1, 3)
+
+
+def _fa_fwd(q, k, v, causal):
+    return flash_attention(q, k, v, causal), (q, k, v)
+
+
+def _fa_bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _fa_ref(q, k, v, causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused two-query RBF kernel rows.
+
+out[i, j] = exp(-(||X_i||^2 - 2 <X_i, z_j> + ||z_j||^2) / (2 sigma^2)),
+j in {up, low} — the per-iteration hot spot of SMO (DESIGN.md §7).
+
+TPU mapping: the contraction is laid out as z2 (2, d) x X_blk^T (d, bm) ->
+(2, bm) so the *lane* dimension is the long sample axis (bm, a multiple of
+128) and the MXU sees a well-shaped (pad-to-8, d) x (d, bm) matmul; the
+exp runs on the VPU over the same (2, bm) tile. X streams HBM->VMEM once;
+norms/γ tiles ride along as (1, bm) row vectors.
+
+Grid: (N / bm,). VMEM per step ~ bm*d*4 bytes for the X tile (+ O(bm)) —
+ops.py picks bm so this fits the ~16 MiB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rows2_kernel(x_ref, sq_ref, z_ref, inv_ref, out_ref):
+    x = x_ref[...]                                   # (bm, d)
+    z = z_ref[...]                                   # (2, d)
+    # (2, d) x (bm, d)^T -> (2, bm): lane dim = bm
+    prods = jax.lax.dot_general(
+        z, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (2, bm)
+    zn = jnp.sum(z * z, axis=1)                      # (2,)
+    d2 = sq_ref[...] - 2.0 * prods + zn[:, None]     # (2, bm) via (1,bm) bcast
+    out_ref[...] = jnp.exp(-jnp.maximum(d2, 0.0) * inv_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def rbf_rows2(X: jax.Array, sq_norms: jax.Array, z2: jax.Array,
+              inv_2s2: jax.Array, *, block_m: int = 1024,
+              interpret: bool = False) -> jax.Array:
+    """Returns (2, N) kernel rows. Caller pads N to block_m and d to 128."""
+    n, d = X.shape
+    assert n % block_m == 0, (n, block_m)
+    grid = (n // block_m,)
+    out = pl.pallas_call(
+        _rows2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_m), lambda i: (0, i)),
+            pl.BlockSpec((2, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, n), jnp.float32),
+        interpret=interpret,
+    )(X, sq_norms.reshape(1, n), z2, inv_2s2.reshape(1, 1))
+    return out

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantics each kernel must reproduce; tests sweep shapes and
+dtypes and assert allclose against these. They are also the path used by the
+multi-pod dry-run so ``cost_analysis()`` sees the real FLOPs (a Pallas custom
+call would hide them from the XLA cost model — see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kernel_rows2(X: jax.Array, sq_norms: jax.Array, z2: jax.Array,
+                 inv_2s2: float) -> jax.Array:
+    """RBF rows for two query points: out[i, j] = K(z2[j], X[i]). (N, 2)."""
+    prods = X @ z2.T
+    zn = jnp.sum(z2 * z2, axis=-1)
+    d2 = sq_norms[:, None] - 2.0 * prods + zn[None, :]
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
+def gamma_update(X: jax.Array, sq_norms: jax.Array, gamma: jax.Array,
+                 z2: jax.Array, coef2: jax.Array, inv_2s2: float) -> jax.Array:
+    """Fused Eq. 6: gamma + coef2[0]*K(z_up, X) + coef2[1]*K(z_low, X)."""
+    k = kernel_rows2(X, sq_norms, z2, inv_2s2)
+    return gamma + k @ coef2
+
+
+def ell_kernel_row(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                   z: jax.Array, inv_2s2: float) -> jax.Array:
+    """RBF row against block-ELL samples.
+
+    vals: (N, K) padded nonzero values, cols: (N, K) their column ids
+    (padding: val 0 / col 0), sq_norms: (N,) = sum(vals^2), z: (d,) dense.
+    out[i] = exp(-(||x_i||^2 - 2 <x_i, z> + ||z||^2) * inv_2s2).
+    """
+    zg = jnp.take(z, cols, axis=0)               # (N, K) gather
+    dots = jnp.sum(vals * zg, axis=-1)           # (N,)
+    d2 = sq_norms - 2.0 * dots + jnp.dot(z, z)
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+        scale: float | None = None) -> jax.Array:
+    """Reference attention. q: (B, Lq, H, Dh), k/v: (B, Lk, Hkv, Dh) with
+    H a multiple of Hkv (GQA). Returns (B, Lq, H, Dh). fp32 softmax."""
+    B, Lq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    if scale is None:
+        scale = Dh ** -0.5
+    group = H // Hkv
+    qg = q.reshape(B, Lq, Hkv, group, Dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        Lk = k.shape[1]
+        # decode-style offset: query i attends to keys <= i + (Lk - Lq)
+        mask = (jnp.arange(Lq)[:, None] + (Lk - Lq)) >= jnp.arange(Lk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Lq, H, Dh).astype(q.dtype)

@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analyses, and extract the roofline
+terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two lines above MUST stay first — jax locks the device count at first
+init. Nothing else (conftest, benchmarks, smoke tests) sets this flag.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse        # noqa: E402
+import functools       # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                     # noqa: E402
+from repro.configs.shapes import SHAPES       # noqa: E402
+from repro.launch import roofline, sharding as shd, train_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.models.api import build            # noqa: E402
+from repro.optim import adamw                 # noqa: E402
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _tok_out_sharding(mesh, batch: int):
+    """Next-token output: batch-sharded when divisible, replicated else
+    (long_500k has global_batch=1)."""
+    import numpy as np
+    ba = shd.batch_axes(mesh)
+    n = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                     for a in ba])) if ba else 1
+    if ba and batch % n == 0:
+        return NamedSharding(mesh, P(ba))
+    return NamedSharding(mesh, P())
+
+
+def _layout_for(cfg, shape) -> str:
+    """Auto layout per cell (§Perf iteration 6): pure-FSDP (model axis folded
+    into data parallelism) wins 3.8x on collectives for dense train cells
+    whose global batch covers the whole mesh and whose activations fit at
+    accum=1; TP/EP otherwise (MoE dispatch + wide-arch memory)."""
+    if (shape.kind == "train" and not cfg.is_moe
+            and cfg.family in ("dense", "audio", "vlm")
+            and cfg.d_model <= 4096 and shape.global_batch >= 256):
+        return "fsdp"
+    return cfg.layout
+
+
+def _moe_impl_for(cfg, shape) -> str:
+    """Per-shape MoE dispatch policy (§Perf known-regression fix): scatter
+    wins on train/decode; at 32k-token prefill groups the scatter/gather
+    resharding outweighs the phantom-FLOP savings — use the GShard einsum
+    there."""
+    return "einsum" if shape.kind == "prefill" else cfg.moe_impl
+
+
+def _accum_for(cfg, shape) -> int:
+    """Microbatch accumulation factor for train cells (memory knob).
+    Wide archs (d_model >= 5120) need 16 to fit 16 GiB v5e HBM at global
+    batch 256 x 4k; the fsdp layout requires accum=1 (microbatch must cover
+    the full 256-device combined axis)."""
+    if shape.kind != "train":
+        return 1
+    if _layout_for(cfg, shape) == "fsdp":
+        return 1
+    # microbatch must stay divisible by the 16-way data axis (256/16): a
+    # smaller microbatch un-shards the batch dim and replicates activations
+    return 16 if cfg.d_model >= 5120 else 8
+
+
+def lower_cell(arch: str, shape_name: str, mesh, verbose: bool = True,
+               overrides: dict | None = None, tier: str = "full"):
+    """Lower + compile one (arch x shape x mesh) cell.
+
+    tier='full':  the deliverable artifact — full global batch, scanned
+                  layers, microbatch accumulation on train shapes. Proves
+                  the sharding compiles and gives memory_analysis().
+    tier='cost':  unrolled layers on one microbatch — exact cost_analysis
+                  and collective counts (XLA doesn't scale while-loop bodies
+                  by trip count); the caller scales by accum_steps.
+    Returns (lowered, compiled, model_flops, chips, accum).
+    """
+    import dataclasses
+    cfg = dataclasses.replace(configs.full_config(arch),
+                              scan_layers=(tier == "full"),
+                              **(overrides or {}))
+    shape = SHAPES[shape_name]
+    if "layout" not in (overrides or {}):
+        cfg = dataclasses.replace(cfg, layout=_layout_for(cfg, shape))
+    if cfg.is_moe and "moe_impl" not in (overrides or {}):
+        cfg = dataclasses.replace(cfg, moe_impl=_moe_impl_for(cfg, shape))
+    ok, why = configs.applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    chips = mesh.devices.size
+    model = build(cfg)
+    accum = _accum_for(cfg, shape)
+    batch_sds = configs.input_specs(cfg, shape)
+    if tier == "cost" and accum > 1:
+        batch_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                (x.shape[0] // accum,) + x.shape[1:], x.dtype), batch_sds)
+    n_act = cfg.active_params()
+
+    if shape.kind == "train":
+        p_sh, o_sh, b_sh, (p_shapes, o_shapes) = train_lib.shardings_for(
+            cfg, mesh, batch_sds, gathered_params=GATHERED_PARAMS)
+        step = train_lib.make_train_step(
+            cfg, adamw.AdamWConfig(), mesh,
+            accum_steps=accum if tier == "full" else 1)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(p_shapes, o_shapes, batch_sds)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_act * tokens
+    elif shape.kind == "prefill":
+        p_sh, _, b_sh, (p_shapes, _) = train_lib.shardings_for(
+            cfg, mesh, batch_sds)
+        step = train_lib.make_prefill_step(cfg)
+        out_sh = _tok_out_sharding(mesh, shape.global_batch)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, b_sh), out_shardings=out_sh,
+            ).lower(p_shapes, batch_sds)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_act * tokens
+    else:  # decode
+        p_sh, _, b_sh, (p_shapes, _) = train_lib.shardings_for(
+            cfg, mesh, batch_sds)
+        c_sh, c_shapes = train_lib.serve_shardings(
+            cfg, mesh, shape.global_batch, shape.seq_len)
+        step = train_lib.make_serve_step(cfg)
+        out_sh = _tok_out_sharding(mesh, shape.global_batch)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, c_sh, b_sh),
+                out_shardings=(out_sh, c_sh), donate_argnums=(1,),
+            ).lower(p_shapes, c_shapes, batch_sds)
+        tokens = shape.global_batch * 1
+        model_flops = 2.0 * n_act * tokens
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    dt = time.perf_counter() - t0
+    if verbose:
+        print(f"  [{tier}] compiled in {dt:.1f}s")
+    return lowered, compiled, model_flops, chips, accum
+
+
+GATHERED_PARAMS = False   # cost-tier toggle for §Perf iteration 5
+
+
+class SkipCell(Exception):
+    pass
+
+
+def _unit_layers(cfg) -> int:
+    """Smallest homogeneous repeat unit (layers per scan group)."""
+    if cfg.family == "ssm" and cfg.slstm_every:
+        return cfg.slstm_every
+    if cfg.family == "hybrid" and cfg.attn_every:
+        return cfg.attn_every
+    return 1
+
+
+def cost_extrapolated(arch: str, shape_name: str, mesh, verbose=True):
+    """Exact-by-linearity cost extraction: lower 1-unit and 2-unit UNROLLED
+    models on one microbatch, difference them for the per-unit cost, and
+    extrapolate to full depth. Valid because repeat units are identical
+    (same shapes/ops per unit); the base term captures embedding, logits,
+    loss and optimizer. ~100x faster than unrolling 60 layers.
+
+    Returns (totals dict, accum, chips, model_flops, mem_cost_tier)."""
+    cfg = configs.full_config(arch)
+    unit = _unit_layers(cfg)
+    n_units = cfg.n_layers // unit
+    tail = cfg.n_layers - n_units * unit
+
+    def measure(n_layers):
+        _, comp, model_flops, chips, accum = lower_cell(
+            arch, shape_name, mesh, verbose=verbose,
+            overrides={"n_layers": n_layers}, tier="cost")
+        rl = roofline.analyze(comp, chips, model_flops)
+        mem = comp.memory_analysis()
+        return rl, chips, accum, mem
+
+    rl_a, chips, accum, mem_a = measure(unit)
+    rl_b, _, _, mem_b = measure(2 * unit)
+    per_unit = {
+        "flops": rl_b.flops_global - rl_a.flops_global,
+        "bytes": rl_b.hbm_bytes_global - rl_a.hbm_bytes_global,
+        "link": rl_b.link_bytes_per_chip - rl_a.link_bytes_per_chip,
+        "temp": (mem_b.temp_size_in_bytes - mem_a.temp_size_in_bytes),
+    }
+    base = {
+        "flops": rl_a.flops_global - per_unit["flops"],
+        "bytes": rl_a.hbm_bytes_global - per_unit["bytes"],
+        "link": rl_a.link_bytes_per_chip - per_unit["link"],
+        "temp": mem_a.temp_size_in_bytes - per_unit["temp"],
+    }
+    tot = {k: base[k] + n_units * per_unit[k] for k in base}
+    if tail:  # hybrid tail = plain backbone layers (no shared-attn call)
+        rl_c, _, _, mem_c = measure(unit + tail)
+        per_tail = {
+            "flops": (rl_c.flops_global - rl_a.flops_global) / tail,
+            "bytes": (rl_c.hbm_bytes_global - rl_a.hbm_bytes_global) / tail,
+            "link": (rl_c.link_bytes_per_chip
+                     - rl_a.link_bytes_per_chip) / tail,
+            "temp": (mem_c.temp_size_in_bytes
+                     - mem_a.temp_size_in_bytes) / tail,
+        }
+        tot = {k: tot[k] + tail * per_tail[k] for k in tot}
+    # collective op counts: same linear model
+    counts = {}
+    for k in set(rl_a.collectives["counts"]) | set(rl_b.collectives["counts"]):
+        ca = rl_a.collectives["counts"].get(k, 0)
+        cb = rl_b.collectives["counts"].get(k, 0)
+        counts[k] = int(ca + (n_units - 1 + (tail / unit if unit else 0))
+                        * (cb - ca)) if cb >= ca else ca
+    # full-shape model flops
+    n_act = cfg.active_params()
+    shape = SHAPES[shape_name]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mf = (6.0 if shape.kind == "train" else 2.0) * n_act * tokens
+    args_bytes = mem_a.argument_size_in_bytes
+    return tot, counts, accum, chips, mf, args_bytes
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, cost_tier: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"{arch} x {shape_name} x {'2x16x16' if multi_pod else '16x16'}"
+    print(f"[dryrun] {tag}", flush=True)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    shape = SHAPES[shape_name]
+    try:
+        # tier FULL: compile + memory proof at the full global batch
+        _, compiled, model_flops, chips, accum = lower_cell(
+            arch, shape_name, mesh, verbose, tier="full")
+    except SkipCell as e:
+        print(f"  SKIP: {e}")
+        rec.update(status="skip", reason=str(e))
+        return rec
+    mem = compiled.memory_analysis()
+    rec.update(status="ok", accum_steps=accum,
+               memory={k: int(getattr(mem, k, 0)) for k in
+                       ("argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes", "alias_size_in_bytes")})
+    hbm_gib = (rec["memory"]["argument_size_in_bytes"]
+               + rec["memory"]["temp_size_in_bytes"]) / 2**30
+    if verbose:
+        print(f"  memory/device: args+temp = {hbm_gib:.2f} GiB "
+              f"(accum={accum})")
+
+    if cost_tier:
+        # tier COST: unit-differenced unrolled lowerings -> exact-by-
+        # linearity roofline terms for the full depth, x accum for the
+        # full global batch.
+        tot, counts, accum, chips, model_flops, args_b = cost_extrapolated(
+            arch, shape_name, mesh, verbose)
+        sc = accum
+        flops_g = tot["flops"] * sc
+        bytes_g = tot["bytes"] * sc
+        link_pc = tot["link"] * sc
+        t_c = flops_g / (chips * roofline._PEAK_FLOPS)
+        t_m = bytes_g / (chips * roofline._HBM_BW)
+        # fusion-aware HBM estimate: peak-live temp (write+read) + args
+        # read per microbatch — cost_analysis "bytes accessed" counts every
+        # HLO op's operands as if unfused (pessimistic ~100x on TPU).
+        est_bytes_dev = (2.0 * tot["temp"] + args_b) * sc
+        t_m_est = est_bytes_dev / roofline._HBM_BW
+        t_l = link_pc / roofline._LINK_BW
+        dom = max((("compute", t_c), ("memory", t_m_est),
+                   ("collective", t_l)), key=lambda kv: kv[1])[0]
+        rec.update(
+            flops_global=flops_g, hbm_bytes_global=bytes_g,
+            hbm_bytes_est_per_dev=est_bytes_dev,
+            link_bytes_per_chip=link_pc,
+            t_compute_s=t_c, t_memory_s=t_m, t_memory_est_s=t_m_est,
+            t_collective_s=t_l, dominant=dom, model_flops=model_flops,
+            useful_ratio=model_flops / flops_g if flops_g else 0.0,
+            collectives={"counts": counts})
+        if verbose:
+            print(f"  roofline: compute={t_c*1e3:.2f}ms "
+                  f"memory(hlo)={t_m*1e3:.2f}ms "
+                  f"memory(est)={t_m_est*1e3:.2f}ms "
+                  f"collective={t_l*1e3:.2f}ms -> {dom}"
+                  f" | useful={model_flops/flops_g if flops_g else 0:.2f}")
+            print(f"  collectives: {counts}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or
+                               (args.all and not args.multi_pod)) \
+        else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shp in shapes:
+                try:
+                    # roofline table is single-pod only (§Roofline); the
+                    # multi-pod pass proves the 'pod' axis compiles
+                    results.append(run_cell(arch, shp, mp,
+                                            cost_tier=not mp))
+                except Exception:
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shp,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "status": "error",
+                                    "error": traceback.format_exc()[-2000:]})
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,74 @@
+"""Elastic scaling + straggler mitigation utilities (DESIGN.md §6).
+
+Elastic rescale is checkpoint-mediated: ``rescale`` restores a checkpoint
+saved under ANY mesh onto the current one (restore() device_puts host
+arrays under the new NamedShardings — the layouts need not match). The
+deterministic token pipeline (pure function of step) replays the stream
+exactly, so an N-pod -> M-pod move is bitwise-consistent modulo reduction
+order.
+
+StragglerWatchdog bounds the blast radius of a slow/hung host: it tracks a
+robust step-time estimate and invokes a callback (checkpoint + alert in
+train drivers) when a step exceeds ``threshold``x the running median —
+on a real deployment the callback triggers the preemption/replace path,
+here it checkpoints so the elastic restart path takes over.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Optional
+
+from repro.ckpt import checkpoint as ckpt
+
+
+def rescale(ckpt_base: str, like_trees: dict, shardings: dict,
+            step: Optional[int] = None) -> tuple[dict, int]:
+    """Restore the latest (or given) step onto the CURRENT mesh/shardings.
+
+    like_trees/shardings: {'params': ..., 'opt': ...} pytrees (shapes may be
+    ShapeDtypeStructs). Returns (restored groups, step)."""
+    step = step if step is not None else ckpt.latest_step(ckpt_base)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_base}")
+    d = os.path.join(ckpt_base, f"step_{step}")
+    out = {name: ckpt.restore(d, name, like_trees[name],
+                              shardings.get(name))
+           for name in like_trees}
+    return out, step
+
+
+class StragglerWatchdog:
+    """Step-time anomaly detector with a bounded-memory running median."""
+
+    def __init__(self, threshold: float = 3.0, window: int = 32,
+                 on_straggle: Optional[Callable[[int, float, float], None]]
+                 = None, warmup: int = 3):
+        self.threshold = threshold
+        self.window = window
+        self.on_straggle = on_straggle
+        self.warmup = warmup
+        self._times: list[float] = []
+        self._last = None
+        self._step = 0
+        self.events: list[tuple[int, float, float]] = []
+
+    def start_step(self):
+        self._last = time.perf_counter()
+
+    def end_step(self) -> bool:
+        """Returns True if this step straggled."""
+        assert self._last is not None, "start_step() not called"
+        dt = time.perf_counter() - self._last
+        self._step += 1
+        if len(self._times) >= self.warmup:
+            med = sorted(self._times)[len(self._times) // 2]
+            if dt > self.threshold * med:
+                self.events.append((self._step, dt, med))
+                if self.on_straggle:
+                    self.on_straggle(self._step, dt, med)
+                return True
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        return False

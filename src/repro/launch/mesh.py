@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required by the dry-run protocol, which must
+set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axis roles (DESIGN.md §6):
+      pod    inter-pod data parallelism (DCI links; gradient psum hierarchy)
+      data   intra-pod data parallelism + FSDP/ZeRO param-and-moment sharding
+      model  tensor / expert parallelism (+ SVM feature-dim sharding)
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    need = int(np.prod(shape))
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                         devices=jax.devices()[:need])
+
+
+def make_host_mesh(max_devices: int | None = None):
+    """Whatever this host offers, as a 1D 'data' mesh (tests/examples)."""
+    n = len(jax.devices()) if max_devices is None else max_devices
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch: ('pod', 'data') when both exist."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,170 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+  compute    = HLO_FLOPs_global  / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes_global  / (chips * 819e9  B/s HBM)
+  collective = link_bytes_per_chip / 50e9 B/s ICI
+               (== collective_bytes_global / (chips * link_bw))
+
+cost_analysis() reports the per-device (SPMD-partitioned) program, so
+globals are per-device * chips. Collective bytes are NOT in cost_analysis:
+we parse the optimized per-device HLO and charge each op the ring-algorithm
+link traffic on its largest replica-group axis:
+
+  all-gather      out_bytes * (g-1)/g      reduce-scatter  in_bytes * (g-1)/g
+  all-reduce      2 * bytes * (g-1)/g      all-to-all      bytes * (g-1)/g
+  collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e-class)
+_HBM_BW = 819e9             # B/s / chip
+_LINK_BW = 50e9             # B/s / link ICI
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*\(?([a-z0-9\[\],\s{}#*_.-]+?)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shapes_str: str, f32_scale: float = 1.0) -> float:
+    """f32_scale: XLA:CPU promotes bf16 arithmetic to f32, inflating every
+    collective payload 2x relative to the TPU target where the model dtype
+    is bf16 end-to-end. f32_scale=0.5 undoes that for f32 tensors (ints and
+    true-f32 scalars are small; bounded error, documented in EXPERIMENTS)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shapes_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dt]
+        if dt == "f32":
+            b *= f32_scale
+        total += b
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    link_bytes: float      # per-device ring-model link traffic
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def parse_collectives(hlo_text: str,
+                      f32_scale: float = 1.0) -> CollectiveStats:
+    counts: dict = {}
+    byk: dict = {}
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:   # charge -start, skip -done twins
+            continue
+        kind = m.group(2).lower()
+        size = _shape_bytes(m.group(1), f32_scale)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+        else:
+            gm2 = _GROUPS2_RE.search(line)
+            if gm2:
+                g = int(gm2.group(2))
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-reduce":
+            link += 2.0 * size * frac
+        elif kind == "collective-permute":
+            link += size
+        else:  # all-gather / reduce-scatter / all-to-all
+            link += size * frac
+        counts[kind] = counts.get(kind, 0) + 1
+        byk[kind] = byk.get(kind, 0.0) + size
+    return CollectiveStats(counts, byk, link)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_global: float
+    hbm_bytes_global: float
+    link_bytes_per_chip: float
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    collectives: dict
+    bytes_per_device: float = 0.0
+
+    def row(self) -> dict:
+        return {
+            "flops_global": self.flops_global,
+            "hbm_bytes_global": self.hbm_bytes_global,
+            "link_bytes_per_chip": self.link_bytes_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "collectives": self.collectives,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def analyze(compiled, chips: int, model_flops: float,
+            bf16_model: bool = True) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned [dict]
+        cost = cost[0]
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text(),
+                             0.5 if bf16_model else 1.0)
+    flops_g = flops_dev * chips
+    bytes_g = bytes_dev * chips
+    t_c = flops_g / (chips * _PEAK_FLOPS)
+    t_m = bytes_g / (chips * _HBM_BW)
+    t_l = coll.link_bytes / _LINK_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_l)),
+              key=lambda kv: kv[1])[0]
+    try:
+        mem = compiled.memory_analysis()
+        bpd = float(getattr(mem, "temp_size_in_bytes", 0) +
+                    getattr(mem, "argument_size_in_bytes", 0) +
+                    getattr(mem, "output_size_in_bytes", 0) -
+                    getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        bpd = 0.0
+    return Roofline(
+        flops_global=flops_g, hbm_bytes_global=bytes_g,
+        link_bytes_per_chip=coll.link_bytes, chips=chips,
+        t_compute=t_c, t_memory=t_m, t_collective=t_l, dominant=dom,
+        model_flops=model_flops,
+        useful_ratio=model_flops / flops_g if flops_g else 0.0,
+        collectives={"counts": coll.counts, "bytes": coll.bytes_by_kind},
+        bytes_per_device=bpd)

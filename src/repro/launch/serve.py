@@ -1,0 +1,11 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``.
+Thin CLI over the decode/prefill step builders (see examples/serve_lm.py)."""
+import os
+import runpy
+import sys
+
+if __name__ == "__main__":
+    sys.argv[0] = "serve.py"
+    runpy.run_path(os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                                "examples", "serve_lm.py"),
+                   run_name="__main__")

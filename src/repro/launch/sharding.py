@@ -1,0 +1,212 @@
+"""Sharding rules: logical parameter/activation layouts -> PartitionSpecs.
+
+MaxText-style rule table with *divisibility-aware fallbacks*: each parameter
+leaf (matched by its tree-path suffix) carries an ordered list of candidate
+specs over its trailing dims; the first candidate whose named axes divide the
+corresponding dims wins. This is what lets one rule set serve all ten
+architectures (e.g. yi-34b's 56 heads don't divide the 16-way model axis, so
+attention falls back to sharding head_dim=128, which does).
+
+Conventions:
+  'model'  tensor/expert parallel axis
+  'data'   FSDP axis for parameters & optimizer moments (intra-pod);
+           multi-pod keeps params replicated across 'pod' (gradient psum
+           crosses DCI once per step, param all-gathers stay on ICI)
+  batch    activations shard over ('pod','data') combined
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# (regex on the dot-joined tree path, [candidate trailing-dim specs])
+_PARAM_RULES: list[tuple[str, list[tuple]]] = [
+    (r"\bembed$",        [("model", "data"), (None, "data"), (None, None)]),
+    (r"\bunembed$",      [("data", "model"), (None, "model"), (None, None)]),
+    (r"\bw[qkv]$",       [("data", "model", None), ("data", None, "model"),
+                          (None, "model", None), (None, None, "model"),
+                          (None, None, None)]),
+    (r"\bwo$",           [("model", None, "data"), (None, "model", "data"),
+                          (None, None, "data"), (None, None, None)]),
+    (r"\bw_(gate|up)$",  [("data", "model"), (None, "model"), (None, None)]),
+    (r"\bw_down$",       [("model", "data"), ("model", None), (None, None)]),
+    (r"\bwe_(gate|up)$", [("model", "data", None), (None, "data", None),
+                          (None, None, None)]),
+    (r"\bwe_down$",      [("model", None, "data"), (None, None, "data"),
+                          (None, None, None)]),
+    (r"\brouter$",       [(None, None)]),
+    (r"\bb[qkv]$",       [("model", None), (None, "model"), (None, None)]),
+    # xLSTM
+    (r"\bw_gates$",      [(None, None, None)]),
+    (r"\br$",            [(None, "model", None, None),
+                          (None, None, None, None)]),
+    (r"\bwx$",           [("data", None, "model", None),
+                          ("data", None, None, "model"),
+                          (None, None, None, None)]),
+    # mamba / zamba
+    (r"\bw_in$",         [("data", "model"), (None, "model"), (None, None)]),
+    (r"\bw_out$",        [("model", "data"), ("model", None), (None, None)]),
+    (r"\bconv_w$",       [(None, "model"), (None, None)]),
+    (r"\b(a_log|dt_bias|bias|b_gates)$", [("model",), (None,)]),
+    (r"\bln", [(None,)]),
+]
+
+_CACHE_RULES: list[tuple[str, list[tuple]]] = [
+    # transformer KV cache: (layers, B, S, Hkv, hd)
+    (r"\b[kv]$", [("batch", None, "model", None), ("batch", None, None, "model"),
+                  (None, None, "model", None), (None, None, None, "model"),
+                  (None, None, None, None)]),
+    # zamba shared-attn caches: (G, B, S, Hkv, hd) — B may be 1 (long_500k):
+    # fall back to sharding the sequence dim (contraction dim -> psum)
+    (r"\ba[kv]$", [("batch", None, "model", None),
+                   (None, "batch", "model", None),
+                   (None, "batch", None, "model"),
+                   (None, None, None, None)]),
+    # xlstm mLSTM matrix memory: (..., B, H, dh, dh)
+    (r"\b(m_C|t_C)$", [("batch", "model", None, None),
+                       ("batch", None, "model", None),
+                       (None, "model", None, None), (None,) * 4]),
+    (r"\b(m_n|t_n)$", [("batch", "model", None), (None, "model", None),
+                       (None, None, None)]),
+    (r"\b(m_m|t_m)$", [("batch", "model"), (None, "model"), (None, None)]),
+    (r"\bs_state",    [("batch", "model", None), (None, "model", None),
+                       (None, None, None)]),
+    # mamba states: conv (..., B, K-1, C), ssm (..., B, H, N, P)
+    (r"\b(g_conv|t_conv)$", [("batch", None, "model"), (None, None, "model"),
+                             (None, None, None)]),
+    (r"\b(g_ssm|t_ssm)$", [("batch", "model", None, None),
+                           (None, "model", None, None), (None,) * 4]),
+    (r"\bpos$",       [()]),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return ".".join(parts)
+
+
+def _spec_for(path_s: str, shape: tuple, mesh: Mesh, rules, batch_ax) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def ax_size(name) -> int:
+        if name == "batch":
+            return int(np.prod([sizes[a] for a in batch_ax])) if batch_ax else 1
+        return sizes.get(name, 0)
+
+    def resolve(name):
+        return batch_ax if name == "batch" else name
+
+    for pat, candidates in rules:
+        if re.search(pat, path_s):
+            for cand in candidates:
+                if len(cand) > len(shape):
+                    continue
+                dims = shape[len(shape) - len(cand):]
+                ok = all(a is None or (ax_size(a) and dim % ax_size(a) == 0)
+                         for a, dim in zip(cand, dims))
+                if ok:
+                    full = (None,) * (len(shape) - len(cand)) + tuple(
+                        resolve(a) for a in cand)
+                    return P(*full)
+            return P()
+    # default: replicate (scalars, counters)
+    return P()
+
+
+def param_specs(shape_tree: Any, mesh: Mesh, layout: str = "tp"):
+    """PartitionSpec pytree for a parameter (or optimizer-state) tree.
+
+    layout='fsdp': the model axis joins data parallelism — every parameter
+    shards its first divisible dim over the combined ('data','model') axes
+    (pure ZeRO-3; no tensor parallelism)."""
+    ba = batch_axes(mesh)
+    if layout == "fsdp":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        fs = tuple(a for a in ("data", "model") if a in sizes)
+        nfs = int(np.prod([sizes[a] for a in fs])) if fs else 1
+
+        def f(path, leaf):
+            shape = tuple(leaf.shape)
+            # largest-first: prefer sharding the biggest divisible dim
+            order = sorted(range(len(shape)), key=lambda i: -shape[i])
+            for i in order:
+                if shape[i] % nfs == 0 and shape[i] >= nfs:
+                    spec = [None] * len(shape)
+                    spec[i] = fs
+                    return P(*spec)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(f, shape_tree)
+
+    def f(path, leaf):
+        return _spec_for(_path_str(path), tuple(leaf.shape), mesh,
+                         _PARAM_RULES, ba)
+
+    return jax.tree_util.tree_map_with_path(f, shape_tree)
+
+
+def strip_fsdp(spec_tree: Any):
+    """Remove 'data'/'pod' (FSDP) axes from parameter specs -> the
+    gathered-weights layout used by gather-params-once-per-step (ZeRO
+    gathering hoisted out of the microbatch loop; §Perf iteration 5)."""
+    def strip(spec):
+        def keep(a):
+            if a is None:
+                return None
+            if isinstance(a, (tuple, list)):
+                kept = tuple(x for x in a if x not in ("data", "pod"))
+                return kept if kept else None
+            return None if a in ("data", "pod") else a
+        return P(*[keep(a) for a in spec])
+
+    return jax.tree_util.tree_map(strip, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(shape_tree: Any, mesh: Mesh):
+    ba = batch_axes(mesh)
+
+    def f(path, leaf):
+        return _spec_for(_path_str(path), tuple(leaf.shape), mesh,
+                         _CACHE_RULES, ba)
+
+    return jax.tree_util.tree_map_with_path(f, shape_tree)
+
+
+def batch_specs(batch_tree: Any, mesh: Mesh, layout: str = "tp"):
+    """Token/embedding batches: shard dim 0 over the batch axes when it
+    divides, else replicate (long_500k's batch=1)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if layout == "fsdp":
+        ba = tuple(a for a in ("pod", "data", "model") if a in sizes)
+    else:
+        ba = batch_axes(mesh)
+    n = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                     for a in ba])) if ba else 1
+
+    def f(leaf):
+        if leaf.ndim >= 1 and n and leaf.shape[0] % n == 0:
+            return P(ba, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map(f, batch_tree)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh), None, "model")
+
+
+def named(tree, mesh: Mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs)

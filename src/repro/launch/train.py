@@ -1,0 +1,16 @@
+"""LM training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+Thin CLI over the same machinery as examples/train_lm.py (step builders in
+train_lib, checkpointing in ckpt, deterministic data in data.tokens). On a
+real multi-host TPU deployment this module is the per-host entry point
+(jax.distributed.initialize + make_production_mesh instead of a host mesh).
+"""
+import os
+import runpy
+import sys
+
+if __name__ == "__main__":
+    sys.argv[0] = "train.py"
+    runpy.run_path(os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                                "examples", "train_lm.py"),
+                   run_name="__main__")

@@ -1,0 +1,200 @@
+"""Step builders: jit-compiled, sharding-annotated train / prefill / decode
+steps for every architecture. These are what the examples run and what the
+multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import common
+from repro.models.api import ModelConfig, build
+from repro.optim import adamw, compress
+from repro.launch import sharding as shd
+from repro.launch.mesh import batch_axes
+
+
+# ----------------------------------------------------------------- train
+def make_loss_fn(cfg: ModelConfig):
+    model = build(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, cfg, batch)
+        loss, metrics = common.cross_entropy(logits, batch["targets"])
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_weight * aux
+            metrics = dict(metrics, router_aux=aux)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    mesh, grad_compress: Optional[str] = None,
+                    accum_steps: int = 1, gather_params_once: bool = False):
+    """Returns train_step(params, opt, batch) -> (params, opt, metrics).
+
+    ``accum_steps`` > 1 runs microbatch gradient accumulation (lax.scan over
+    the leading batch split): activation memory scales 1/accum while the
+    optimizer still sees the full global batch — the overlap knob for big
+    global batches (DESIGN.md §6). ``grad_compress`` ('bf16'|'int8')
+    compresses the cross-pod gradient all-reduce (multi-pod meshes only)."""
+    loss_fn = make_loss_fn(cfg)
+    use_pod = grad_compress and "pod" in mesh.axis_names
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    if use_pod:
+        # Compressed cross-pod gradient reduction, expressed in pure
+        # auto-sharding: vmap the per-pod grad computation over a leading
+        # pod-sharded axis (spmd_axis_name pins it to 'pod'), quantize each
+        # pod's gradient slice (with error feedback), then mean over the
+        # stacked axis — XLA lowers that mean to the cross-pod all-reduce,
+        # whose operands are the compressed (dequantized bf16/int8-grid)
+        # values. See optim/compress.py for the codec semantics.
+        npod = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+
+        def g1(params, b):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, b)
+            return loss, metrics, grads
+
+        def compute_grads(params, batch, residuals):
+            micro = jax.tree.map(
+                lambda x: x.reshape((npod, x.shape[0] // npod)
+                                    + x.shape[1:]), batch)
+            with common.exclude_batch_axes("pod"):
+                loss_s, metrics_s, grads_s = jax.vmap(
+                    g1, in_axes=(None, 0), spmd_axis_name="pod")(params,
+                                                                 micro)
+            if residuals is None:
+                residuals = jax.tree.map(
+                    lambda g: jnp.zeros(g.shape, jnp.float32), grads_s)
+
+            def codec(g, e):
+                x = g.astype(jnp.float32) + e                 # (npod, ...)
+                if grad_compress == "int8":
+                    amax = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)),
+                                   keepdims=True)
+                    scale = jnp.maximum(amax, 1e-12) / 127.0
+                    deq = jnp.clip(jnp.round(x / scale), -127, 127) * scale
+                else:                                          # bf16
+                    deq = x.astype(jnp.bfloat16).astype(jnp.float32)
+                return deq, x - deq
+
+            flat_g, tdef = jax.tree.flatten(grads_s)
+            flat_e = tdef.flatten_up_to(residuals)
+            pairs = [codec(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = tdef.unflatten([p[0].mean(axis=0) for p in pairs])
+            residuals = tdef.unflatten([p[1] for p in pairs])
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_s)
+            return loss_s.mean(), metrics, grads, residuals
+    else:
+        def compute_grads(params, batch, residuals):
+            loss, metrics, grads = grads_of(params, batch)
+            return loss, metrics, grads, residuals
+
+    gspecs = None
+    if gather_params_once:
+        p_shapes = jax.eval_shape(
+            functools.partial(build(cfg).init, cfg), jax.random.PRNGKey(0))
+        gspecs = shd.strip_fsdp(shd.param_specs(p_shapes, mesh))
+
+    def train_step(params, opt_state, batch, residuals=None):
+        if gather_params_once:
+            # ZeRO gather hoisted out of the microbatch loop: one AG per
+            # step instead of one per microbatch; the constraint transpose
+            # reduce-scatters grads back to the FSDP layout for the update.
+            params = jax.tree.map(
+                lambda x, sp: jax.lax.with_sharding_constraint(x, sp),
+                params, gspecs)
+        if accum_steps > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def mb(carry, b):
+                gsum, lsum = carry
+                loss, metrics, grads, _ = compute_grads(params, b, None)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), ms = jax.lax.scan(
+                mb, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        else:
+            loss, metrics, grads, residuals = compute_grads(
+                params, batch, residuals)
+        params, opt_state, om = adamw.update(opt_cfg, grads, opt_state,
+                                             params)
+        metrics = dict(metrics, loss=loss, **om)
+        out = (params, opt_state, metrics)
+        return out + ((residuals,) if use_pod else ())
+
+    return train_step
+
+
+def shardings_for(cfg: ModelConfig, mesh, batch_shapes: dict,
+                  gathered_params: bool = False):
+    """(param_shardings, opt_shardings, batch_shardings) NamedSharding trees
+    derived from eval_shape — no allocation. ``gathered_params`` strips the
+    FSDP axes (cost-tier measurement of gather-params-once)."""
+    model = build(cfg)
+    p_shapes = jax.eval_shape(
+        functools.partial(model.init, cfg), jax.random.PRNGKey(0))
+    o_shapes = jax.eval_shape(adamw.init, p_shapes)
+    p_specs = shd.param_specs(p_shapes, mesh, cfg.layout)
+    if gathered_params:
+        p_specs = shd.strip_fsdp(p_specs)
+    o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+    b_specs = shd.batch_specs(batch_shapes, mesh, cfg.layout)
+    mk = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return mk(p_specs), mk(o_specs), mk(b_specs), (p_shapes, o_shapes)
+
+
+# ----------------------------------------------------------------- serve
+def make_prefill_step(cfg: ModelConfig):
+    """Prefill: forward over the prompt; returns last-position logits (the
+    next-token distribution). Transformer archs additionally fill a KV cache
+    during real serving; SSM/hybrid archs build state by chunked decode
+    (DESIGN.md §5 notes)."""
+    model = build(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, cfg, batch)
+        return jnp.argmax(logits[:, -1, :], axis=-1)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One greedy decode step against the cache."""
+    model = build(cfg)
+
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode(params, cfg, cache, batch)
+        return jnp.argmax(logits[:, -1, :], axis=-1), cache
+
+    return serve_step
+
+
+def serve_shardings(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    model = build(cfg)
+    c_shapes = jax.eval_shape(lambda: model.init_cache(cfg, batch, max_len))
+    c_specs = shd.cache_specs(c_shapes, mesh)
+    mk = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return mk(c_specs), c_shapes

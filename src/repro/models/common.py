@@ -1,0 +1,273 @@
+"""Shared building blocks for the model zoo: norms, RoPE, attention (GQA),
+gated MLPs, stable cross-entropy, parameter init helpers.
+
+Everything is functional: params are plain nested dicts of jax.Arrays,
+models are pure functions — pjit/shard_map handle distribution, and
+``jax.eval_shape`` over ``init`` gives the dry-run its ShapeDtypeStructs
+without allocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------- init utils
+def _normal(key, shape, dtype, scale):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return _normal(key, (d_in, d_out), dtype, scale)
+
+
+# ------------------------------------------------------------------ norms
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, L, H, Dh); positions: (B, L) or (L,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B?, L, dh/2)
+    if ang.ndim == 2:                                   # (L, dh/2)
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        block_q: int = 512) -> jax.Array:
+    """Causal GQA attention scanned over q blocks: peak logits memory is
+    (B, bq, H, Lk) instead of (B, Lq, H, Lk) — the jnp-path answer to the
+    paper's recompute-over-cache doctrine, and what keeps prefill_32k inside
+    HBM without the Pallas kernel. Exact (not an approximation)."""
+    B, L, H, Dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = Dh ** -0.5
+    nb = L // block_q
+    qb = q.reshape(B, nb, block_q, H, Dh).transpose(1, 0, 2, 3, 4)
+    cols = jnp.arange(L)
+
+    def step(_, xs):
+        qi, bi = xs                                     # (B, bq, H, Dh)
+        qg = qi.reshape(B, block_q, Hkv, g, Dh)
+        # bf16 operands, fp32 accumulation — a f32 cast of K/V would double
+        # both HBM traffic and the sharded-collective payloads
+        logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        rows = bi * block_q + jnp.arange(block_q)
+        mask = rows[:, None] >= cols[None, :]
+        logits = jnp.where(mask[None, :, None, None, :], logits, -jnp.inf)
+        p = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return None, o.reshape(B, block_q, H, Dh)
+
+    _, ob = jax.lax.scan(step, None, (qb, jnp.arange(nb)))
+    return ob.transpose(1, 0, 2, 3, 4).reshape(B, L, H, Dh).astype(q.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, use_flash: bool = False,
+              block_q: int = 512) -> jax.Array:
+    """GQA attention. q: (B, Lq, H, Dh), k/v: (B, Lk, Hkv, Dh)."""
+    if use_flash and q.shape[1] > 1:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3), causal)
+        return o.transpose(0, 2, 1, 3)
+    L = q.shape[1]
+    if causal and L == k.shape[1] and L > block_q and L % block_q == 0:
+        return blockwise_attention(q, k, v, block_q)
+    from repro.kernels import ref
+    return ref.mha(q, k, v, causal=causal)
+
+
+# ------------------------------------------------------------------ MLPs
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# --------------------------------------------------- activation sharding
+import contextlib as _contextlib
+
+_EXCLUDED_AXES: set = set()
+
+
+@_contextlib.contextmanager
+def exclude_batch_axes(*axes: str):
+    """Drop axes from activation sharding constraints — used when an outer
+    vmap(spmd_axis_name=...) already owns them (compressed pod-DP path)."""
+    global _EXCLUDED_AXES
+    old = set(_EXCLUDED_AXES)
+    _EXCLUDED_AXES |= set(axes)
+    try:
+        yield
+    finally:
+        _EXCLUDED_AXES = old
+
+
+def _ambient_batch_axes(layout: str = "tp"):
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return (), {}
+    if m is None or not m.axis_names:
+        return (), {}
+    sizes = dict(zip(m.axis_names, m.axis_sizes))
+    names = ("pod", "data", "model") if layout == "fsdp" else ("pod", "data")
+    ba = tuple(a for a in names
+               if a in sizes and a not in _EXCLUDED_AXES)
+    return ba, sizes
+
+
+def constrain_batch(x: jax.Array, layout: str = "tp") -> jax.Array:
+    """Pin dim 0 to the batch axes ('pod','data'; + 'model' under the fsdp
+    layout). GSPMD loses the batch sharding at the embedding gather (both
+    operands carry 'data'), which silently un-shards every downstream
+    activation — this constraint is the fix (EXPERIMENTS.md §Perf iter 0)."""
+    from jax.sharding import PartitionSpec as P
+    ba, sizes = _ambient_batch_axes(layout)
+    if not ba:
+        return x
+    n = 1
+    for a in ba:
+        n *= sizes[a]
+    if x.ndim < 1 or x.shape[0] % n != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(ba, *([None] * (x.ndim - 1))))
+
+
+def constrain_hidden(x: jax.Array, seq_parallel: bool = False,
+                     layout: str = "tp") -> jax.Array:
+    """Residual stream (B, L, d): batch over ('pod','data') (+ 'model' under
+    fsdp); with ``seq_parallel``, L over 'model'."""
+    from jax.sharding import PartitionSpec as P
+    ba, sizes = _ambient_batch_axes(layout)
+    if not sizes:
+        return x
+    n = 1
+    for a in ba:
+        n *= sizes[a]
+    spec = [None] * x.ndim
+    if ba and x.ndim >= 1 and x.shape[0] % n == 0:
+        spec[0] = ba
+    if seq_parallel and x.ndim == 3 and "model" in sizes             and x.shape[1] % sizes["model"] == 0 and x.shape[1] > 1:
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_heads(x: jax.Array, layout: str = "tp") -> jax.Array:
+    """(B, L, H, Dh): batch over ('pod','data'), heads over 'model' (tp
+    layout) or fully batch-parallel (fsdp layout)."""
+    from jax.sharding import PartitionSpec as P
+    ba, sizes = _ambient_batch_axes(layout)
+    if not sizes:
+        return x
+    n = 1
+    for a in ba:
+        n *= sizes[a]
+    spec = [None] * x.ndim
+    if ba and x.shape[0] % n == 0:
+        spec[0] = ba
+    if layout != "fsdp" and "model" in sizes             and x.shape[2] % sizes["model"] == 0:
+        spec[2] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA -> MHA by repeating kv heads. Done *before* attention so the full
+    head dim shards over 'model' even when Hkv < tp (kv=8 vs tp=16); the
+    grouped-einsum formulation would force GSPMD to replicate heads because
+    the (Hkv, g) reshape can't carry a 16-way sharding on an 8-dim."""
+    Hkv = k.shape[2]
+    if Hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // Hkv, axis=2)
+
+
+def constrain_logits(x: jax.Array, layout: str = "tp") -> jax.Array:
+    """(B, L, V): batch over ('pod','data'), vocab over 'model' (tp) or
+    fully batch-sharded (fsdp: logsumexp stays local)."""
+    from jax.sharding import PartitionSpec as P
+    ba, sizes = _ambient_batch_axes(layout)
+    if not ba:
+        return x
+    n = 1
+    for a in ba:
+        n *= sizes[a]
+    spec = [None] * x.ndim
+    if x.shape[0] % n == 0:
+        spec[0] = ba
+    if layout != "fsdp" and "model" in sizes             and x.shape[-1] % sizes["model"] == 0:
+        spec[-1] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ------------------------------------------------------------- layer loop
+def scan_or_unroll(body, carry, xs, length: int, use_scan: bool):
+    """lax.scan when ``use_scan`` (compact HLO, fast compile) else a python
+    unroll (exact cost_analysis/collective counts for the dry-run — XLA does
+    not scale while-body costs by trip count)."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *z: jnp.stack(z), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  z_loss: float = 1e-4):
+    """Stable CE in fp32; targets < 0 are masked. Returns (loss, aux).
+
+    The target logit is extracted with an iota==target masked sum, not
+    take_along_axis: a gather along the vocab dim forces GSPMD to all-gather
+    the vocab-sharded logits (33 GiB/device at llama-scale); the masked sum
+    stays sharded and reduces with one tiny psum."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    v = logits.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+              == jnp.maximum(targets, 0)[..., None])
+    tgt = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1)
+    nll = lse - tgt
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    mask = (targets >= 0).astype(jnp.float32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / n
+    return loss, {"ce": (jnp.where(mask > 0, lse - tgt, 0.0)).sum() / n}

@@ -1,0 +1,276 @@
+"""Decoder-only transformer covering the dense / MoE / VLM / audio archs:
+GQA + RoPE + RMSNorm + SwiGLU, optional QKV bias (qwen), optional MoE FFN
+(GShard-style capacity dispatch, expert-parallel over the 'model' axis),
+optional stub frontend (precomputed embeddings instead of token lookup).
+
+Layers are scanned (compact HLO for 60-layer archs) and optionally remat'd
+("no kernel cache" doctrine applied to activations — recompute beats HBM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.api import ModelConfig
+
+
+# ----------------------------------------------------------------- params
+def _init_layer(cfg: ModelConfig, key) -> dict:
+    d, hd, H, Hkv, ff = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    p = {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "wq": common._normal(ks[0], (d, H, hd), dt, d ** -0.5),
+        "wk": common._normal(ks[1], (d, Hkv, hd), dt, d ** -0.5),
+        "wv": common._normal(ks[2], (d, Hkv, hd), dt, d ** -0.5),
+        "wo": common._normal(ks[3], (H, hd, d), dt, (H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((Hkv, hd), dt)
+        p["bv"] = jnp.zeros((Hkv, hd), dt)
+    if cfg.is_moe:
+        E = cfg.n_experts
+        p["router"] = common._normal(ks[4], (d, E), jnp.float32, d ** -0.5)
+        p["we_gate"] = common._normal(ks[5], (E, d, ff), dt, d ** -0.5)
+        p["we_up"] = common._normal(ks[6], (E, d, ff), dt, d ** -0.5)
+        p["we_down"] = common._normal(ks[7], (E, ff, d), dt, ff ** -0.5)
+    else:
+        p["w_gate"] = common._normal(ks[4], (d, ff), dt, d ** -0.5)
+        p["w_up"] = common._normal(ks[5], (d, ff), dt, d ** -0.5)
+        p["w_down"] = common._normal(ks[6], (ff, d), dt, ff ** -0.5)
+    return p
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    kl, ke, ku = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    layers = jax.vmap(lambda k: _init_layer(cfg, k))(
+        jax.random.split(kl, cfg.n_layers))
+    p = {"layers": layers,
+         "ln_f": jnp.ones((cfg.d_model,), dt),
+         "unembed": common._normal(ku, (cfg.d_model, cfg.vocab_size), dt,
+                                   cfg.d_model ** -0.5)}
+    if cfg.frontend == "tokens":
+        p["embed"] = common._normal(ke, (cfg.vocab_size, cfg.d_model), dt, 1.0)
+    return p
+
+
+# ------------------------------------------------------------------- MoE
+def _route(x, p, cfg):
+    """Top-k routing + in-expert positions. Shared by both dispatch impls."""
+    B, L, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * L * k / E))
+    logits = x.astype(jnp.float32) @ p["router"]            # (B, L, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv, gi = jax.lax.top_k(probs, k)                        # (B, L, k)
+    gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(gi, E, dtype=jnp.float32)       # (B, L, k, E)
+    # position of each (token, slot) within its expert, flattened (L*k) order
+    flat = onehot.reshape(B, L * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                   # (B, L*k, E)
+    pos = jnp.sum(pos * flat, -1).reshape(B, L, k).astype(jnp.int32)
+    keep = pos < cap
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    frac = jnp.mean(onehot[..., 0, :], axis=(0, 1))
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_p)
+    return gi, gv, pos, keep, onehot, cap, aux
+
+
+def _experts(xin, p):
+    """xin: (E, B, cap, d) -> (E, B, cap, d)."""
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xin, p["we_gate"])) \
+        * jnp.einsum("ebcd,edf->ebcf", xin, p["we_up"])
+    return jnp.einsum("ebcf,efd->ebcd", h, p["we_down"])
+
+
+def _moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig):
+    """Capacity-bounded top-k MoE. x: (B, L, d); each sequence is a dispatch
+    group (capacity = L*k*cf/E). Two dispatch implementations:
+
+    'einsum' (GShard): one-hot (B,L,E,cap) dispatch/combine matmuls —
+        simple, but costs ~E*cap*d MACs per token, rivaling the expert
+        FLOPs themselves at 16e/top-1.
+    'scatter' (default): scatter-add tokens into (B, E*cap, d) slots and
+        gather back — O(tokens * d) data movement, no phantom FLOPs
+        (EXPERIMENTS.md §Perf iteration 4).
+    """
+    B, L, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    gi, gv, pos, keep, onehot, cap, aux = _route(x, p, cfg)
+
+    if cfg.moe_impl == "einsum":
+        kf = keep.astype(jnp.float32)
+        disp_pos = jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+        dmat = jnp.einsum("blke,blkc->blec", onehot * kf[..., None],
+                          disp_pos).astype(x.dtype)
+        comb = jnp.einsum("blke,blkc,blk->blec", onehot * kf[..., None],
+                          disp_pos, gv).astype(x.dtype)
+        xin = jnp.einsum("blec,bld->ebcd", dmat, x)
+        out_e = _experts(xin, p)
+        y = jnp.einsum("blec,ebcd->bld", comb, out_e)
+        return y, aux
+
+    # scatter dispatch: slot id within the (E*cap,) expert buffer per group;
+    # dropped tokens target a sentinel slot that is sliced away
+    slot = jnp.where(keep, gi * cap + pos, E * cap)         # (B, L, k)
+    buf = jnp.zeros((B, E * cap + 1, d), x.dtype)
+    bidx = jnp.arange(B)[:, None, None]
+    buf = buf.at[bidx, slot].add(
+        jnp.broadcast_to(x[:, :, None, :], (B, L, k, d)))
+    xin = buf[:, :-1].reshape(B, E, cap, d).transpose(1, 0, 2, 3)
+    out_e = _experts(xin, p)                                # (E, B, cap, d)
+    out_b = out_e.transpose(1, 0, 2, 3).reshape(B, E * cap, d)
+    out_b = jnp.concatenate(
+        [out_b, jnp.zeros((B, 1, d), x.dtype)], axis=1)     # dropped -> 0
+    gathered = out_b[bidx, slot]                            # (B, L, k, d)
+    y = jnp.einsum("blkd,blk->bld", gathered, gv.astype(x.dtype))
+    return y, aux
+
+
+# ------------------------------------------------------------------ layer
+def _layer(cfg: ModelConfig, p: dict, h: jax.Array, positions: jax.Array):
+    x = common.rms_norm(h, p["ln1"])
+    # GQA -> MHA repeat on the WEIGHT side: repeating kv heads before the
+    # projection keeps K/V head-sharded from birth — repeating activations
+    # would all-gather B*L*Hkv*hd per layer across 'model' (the dominant
+    # collective in the baseline dry-run; EXPERIMENTS.md §Perf iter 1).
+    g = cfg.n_heads // cfg.n_kv_heads
+    wk = p["wk"] if g == 1 else jnp.repeat(p["wk"], g, axis=1)
+    wv = p["wv"] if g == 1 else jnp.repeat(p["wv"], g, axis=1)
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    kk = jnp.einsum("bld,dhk->blhk", x, wk)
+    v = jnp.einsum("bld,dhk->blhk", x, wv)
+    if cfg.qkv_bias:
+        bk = p["bk"] if g == 1 else jnp.repeat(p["bk"], g, axis=0)
+        bv = p["bv"] if g == 1 else jnp.repeat(p["bv"], g, axis=0)
+        q, kk, v = q + p["bq"], kk + bk, v + bv
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    kk = common.apply_rope(kk, positions, cfg.rope_theta)
+    q = common.constrain_heads(q, cfg.layout)
+    kk = common.constrain_heads(kk, cfg.layout)
+    v = common.constrain_heads(v, cfg.layout)
+    attn = common.attention(q, kk, v, causal=True, use_flash=cfg.use_flash,
+                            block_q=cfg.attn_block_q)
+    h = h + jnp.einsum("blhk,hkd->bld", attn, p["wo"])
+
+    x = common.rms_norm(h, p["ln2"])
+    if cfg.is_moe:
+        y, aux = _moe_ffn(x, p, cfg)
+    else:
+        y = common.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+        aux = jnp.float32(0.0)
+    return h + y, aux
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> tuple:
+    """batch: {'tokens': (B, L)} or {'embeds': (B, L, d)}. Returns
+    (logits (B, L, V), aux_loss scalar)."""
+    if cfg.frontend == "tokens":
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+        L = batch["tokens"].shape[1]
+    else:
+        h = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        L = h.shape[1]
+    h = common.constrain_hidden(h, cfg.seq_parallel, cfg.layout)
+    positions = jnp.arange(L, dtype=jnp.int32)[None]
+
+    layer_fn = functools.partial(_layer, cfg)
+    if cfg.remat == "full":
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(carry, lp):
+        h, aux = carry
+        h, a = layer_fn(lp, h, positions)
+        return (common.constrain_hidden(h, cfg.seq_parallel,
+                                        cfg.layout), aux + a), None
+
+    (h, aux), _ = common.scan_or_unroll(
+        scan_body, (h, jnp.float32(0.0)), params["layers"],
+        cfg.n_layers, cfg.scan_layers)
+    h = common.rms_norm(h, params["ln_f"])
+    logits = common.constrain_logits(
+        jnp.einsum("bld,dv->blv", h, params["unembed"]), cfg.layout)
+    return logits, aux
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def _decode_attention(q, kc, vc, pos):
+    """q: (B, 1, H, hd); kc/vc: (B, L, Hkv, hd); mask keys > pos."""
+    B, L, Hkv, hd = kc.shape
+    H = q.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, 1, Hkv, g, hd)
+    # bf16 cache operands with fp32 accumulation: casting the 32k-deep
+    # cache to f32 would materialize a 2x copy per layer per step
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc,
+                        preferred_element_type=jnp.float32)
+    logits *= hd ** -0.5
+    mask = jnp.arange(L)[None, None, None, None, :] <= pos
+    logits = jnp.where(mask, logits, -jnp.inf)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pr.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _decode_layer(cfg: ModelConfig, p: dict, kc, vc, h, pos):
+    x = common.rms_norm(h, p["ln1"])
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    kk = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, kk, v = q + p["bq"], kk + p["bk"], v + p["bv"]
+    posv = pos[None, None]                       # (1,1) broadcast positions
+    q = common.apply_rope(q, posv, cfg.rope_theta)
+    kk = common.apply_rope(kk, posv, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, kk, pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+    attn = _decode_attention(q, kc, vc, pos)
+    h = h + jnp.einsum("blhk,hkd->bld", attn, p["wo"])
+    x = common.rms_norm(h, p["ln2"])
+    if cfg.is_moe:
+        y, _ = _moe_ffn(x, p, cfg)
+    else:
+        y = common.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    return kc, vc, h + y
+
+
+def decode(params: dict, cfg: ModelConfig, cache: dict, batch: dict):
+    """One decode step. batch: {'tokens': (B, 1)} or {'embeds': (B, 1, d)}.
+    Returns (logits (B, 1, V), new cache)."""
+    if cfg.frontend == "tokens":
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        h = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    h = common.constrain_batch(h, cfg.layout)
+    pos = cache["pos"]
+
+    def scan_body(h, xs):
+        lp, kc, vc = xs
+        kc, vc, h = _decode_layer(cfg, lp, kc, vc, h, pos)
+        return h, (kc, vc)
+
+    h, (kcs, vcs) = common.scan_or_unroll(
+        scan_body, h, (params["layers"], cache["k"], cache["v"]),
+        cfg.n_layers, cfg.scan_layers)
+    h = common.rms_norm(h, params["ln_f"])
+    logits = common.constrain_logits(
+        jnp.einsum("bld,dv->blv", h, params["unembed"]), cfg.layout)
+    return logits, {"k": kcs, "v": vcs, "pos": pos + 1}

@@ -1,0 +1,347 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix-memory, chunkwise-parallel) and
+sLSTM (scalar-memory, recurrent) blocks.
+
+Layout: groups of (slstm_every - 1) mLSTM blocks followed by one sLSTM
+block, scanned. d_ff = 0 in the assigned config — per the paper, blocks are
+gated up/down projections rather than separate FFNs (mLSTM pf=2, sLSTM
+pf=4/3).
+
+The mLSTM trains in a *chunkwise* form (exact, stabilized): within a chunk
+the decay matrix D_ij = b_i - b_j + ig_j gives an attention-like (c x c)
+contraction; across chunks a (dh x dh) matrix memory C, normalizer n and a
+log-space stabilizer m carry state — sub-quadratic in L, which is why this
+arch runs the long_500k cell (DESIGN.md §5). Decode is the O(dh^2)
+single-step recurrence on (C, n, m).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.api import ModelConfig
+
+_NEG = -1e30
+
+
+# ----------------------------------------------------------- mLSTM core
+def _mlstm_chunk_scan(q, k, v, ig, lf, chunk):
+    """q,k,v: (L, dh_k/dh_v); ig/lf: (L,) raw input gate & log-sigmoid forget.
+    Returns h: (L, dh_v). Exact chunkwise mLSTM with shared per-chunk
+    stabilizer (stabilizers cancel algebraically; see module docstring)."""
+    L, dhk = q.shape
+    dhv = v.shape[1]
+    nc = L // chunk
+    scale = dhk ** -0.5
+    qc = q.reshape(nc, chunk, dhk)
+    kc = k.reshape(nc, chunk, dhk)
+    vc = v.reshape(nc, chunk, dhv)
+    igc = ig.reshape(nc, chunk)
+    lfc = lf.reshape(nc, chunk)
+    b = jnp.cumsum(lfc, axis=1)                       # (nc, c)
+    total = b[:, -1]                                  # (nc,)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # D_ij = (b_i - b_j) + ig_j  for j <= i
+    D = jnp.where(tri[None], b[:, :, None] - b[:, None, :] + igc[:, None, :],
+                  _NEG)                               # (nc, c, c)
+
+    def step(carry, xs):
+        C, n, m_prev = carry
+        q_c, k_c, v_c, D_c, b_c, ig_c, tot = xs
+        inter = m_prev + b_c                          # (c,)
+        m_c = jax.lax.stop_gradient(
+            jnp.maximum(jnp.max(D_c), jnp.max(inter)))
+        S = (q_c @ k_c.T) * scale * jnp.exp(D_c - m_c)        # (c, c)
+        w_int = jnp.exp(inter - m_c)[:, None]                 # (c, 1)
+        num = S @ v_c + w_int * ((q_c @ C) * scale)
+        den = jnp.sum(S, -1) + (w_int[:, 0] * (q_c @ n)) * scale
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_c))
+        h = num / den[:, None]
+        # state to end-of-chunk
+        m_new = jax.lax.stop_gradient(jnp.maximum(
+            m_prev + tot, jnp.max(tot - b_c + ig_c)))
+        dk = jnp.exp(tot - b_c + ig_c - m_new)[:, None]       # (c, 1)
+        decay = jnp.exp(m_prev + tot - m_new)
+        C = decay * C + (k_c * dk).T @ v_c
+        n = decay * n + jnp.sum(k_c * dk, axis=0)
+        return (C, n, m_new), h
+
+    init = (jnp.zeros((dhk, dhv), jnp.float32), jnp.zeros((dhk,), jnp.float32),
+            jnp.float32(0.0))
+    _, h = jax.lax.scan(step, init, (qc, kc, vc, D, b, igc, total))
+    return h.reshape(L, dhv)
+
+
+def _mlstm_decode_step(C, n, m_prev, q, k, v, ig, lf):
+    """Single-token mLSTM recurrence. Shapes: C (dhk, dhv), q/k (dhk,)."""
+    scale = q.shape[-1] ** -0.5
+    m_new = jnp.maximum(lf + m_prev, ig)
+    fp = jnp.exp(lf + m_prev - m_new)
+    ip = jnp.exp(ig - m_new)
+    C = fp * C + ip * jnp.outer(k, v)
+    n = fp * n + ip * k
+    num = (q @ C) * scale
+    den = jnp.maximum(jnp.abs(jnp.dot(q, n)) * scale, jnp.exp(-m_new))
+    return C, n, m_new, num / den
+
+
+# ---------------------------------------------------------- mLSTM block
+def _init_mlstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di = 2 * d                     # pf = 2 up-projection
+    H = cfg.n_heads
+    dh = di // H
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w_up": common._normal(ks[0], (d, 2 * di), dt, d ** -0.5),  # x | z
+        "wq": common._normal(ks[1], (di, H, dh), dt, di ** -0.5),
+        "wk": common._normal(ks[2], (di, H, dh), dt, di ** -0.5),
+        "wv": common._normal(ks[3], (di, H, dh), dt, di ** -0.5),
+        "w_gates": common._normal(ks[4], (di, 2, H), jnp.float32, di ** -0.5),
+        "b_gates": jnp.concatenate([
+            jnp.full((1, H), 0.0), jnp.full((1, H), 3.0)]),  # i, f bias
+        "ln_h": jnp.ones((di,), dt),
+        "w_down": common._normal(ks[5], (di, d), dt, di ** -0.5),
+    }
+
+
+def _mlstm_block(cfg: ModelConfig, p, h):
+    B, L, d = h.shape
+    H = cfg.n_heads
+    x = common.rms_norm(h, p["ln"])
+    xz = x @ p["w_up"]
+    xm, z = jnp.split(xz, 2, axis=-1)                 # (B, L, di)
+    di = xm.shape[-1]
+    dh = di // H
+    q = jnp.einsum("bld,dhk->bhlk", xm, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bld,dhk->bhlk", xm, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bld,dhk->bhlk", xm, p["wv"]).astype(jnp.float32)
+    gates = jnp.einsum("bld,dgh->bghl", xm.astype(jnp.float32),
+                       p["w_gates"]) + p["b_gates"][None, :, :, None]
+    ig = gates[:, 0]                                  # (B, H, L)
+    lf = jax.nn.log_sigmoid(gates[:, 1])
+    chunk = min(cfg.chunk, L)
+    core = jax.vmap(jax.vmap(
+        functools.partial(_mlstm_chunk_scan, chunk=chunk)))
+    hh = core(q, k, v, ig, lf)                        # (B, H, L, dh)
+    hh = hh.transpose(0, 2, 1, 3).reshape(B, L, di).astype(h.dtype)
+    hh = common.rms_norm(hh, p["ln_h"]) * jax.nn.silu(z)
+    return h + hh @ p["w_down"]
+
+
+# ---------------------------------------------------------- sLSTM block
+def _init_slstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ff = max(1, (4 * d) // 3)      # pf = 4/3 post-block MLP
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "wx": common._normal(ks[0], (d, 4, H, dh), jnp.float32, d ** -0.5),
+        "r": common._normal(ks[1], (4, H, dh, dh), jnp.float32, dh ** -0.5),
+        "bias": jnp.zeros((4, H, dh), jnp.float32)
+                 .at[1].set(3.0),  # forget-gate bias
+        "ln_h": jnp.ones((d,), dt),
+        "w_up": common._normal(ks[2], (d, ff), dt, d ** -0.5),
+        "w_gate": common._normal(ks[3], (d, ff), dt, d ** -0.5),
+        "w_down": common._normal(ks[4], (ff, d), dt, ff ** -0.5),
+    }
+
+
+def _slstm_scan(p, x, state):
+    """x: (B, L, 4, H, dh) preactivations; recurrent over L.
+    state: (c, n, hs, m) each (B, H, dh)."""
+
+    def step(carry, xt):                              # xt: (B, 4, H, dh)
+        c, n, hs, m = carry
+        pre = xt + jnp.einsum("bhk,ghkj->bghj", hs, p["r"]) + p["bias"]
+        # gate order: z, f, i, o
+        zt = jnp.tanh(pre[:, 0])
+        ft = pre[:, 1]
+        it = pre[:, 2]
+        ot = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m, it)
+        fp = jnp.exp(jax.nn.log_sigmoid(ft) + m - m_new)
+        ip = jnp.exp(it - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        hs = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, hs, m_new), hs
+
+    (c, n, hs, m), hseq = jax.lax.scan(step, state, x.transpose(1, 0, 2, 3, 4))
+    return hseq.transpose(1, 0, 2, 3), (c, n, hs, m)
+
+
+def _slstm_block(cfg: ModelConfig, p, h, state=None):
+    B, L, d = h.shape
+    H = cfg.n_heads
+    dh = d // H
+    x = common.rms_norm(h, p["ln"])
+    pre = jnp.einsum("bld,dghk->blghk", x.astype(jnp.float32), p["wx"])
+    if state is None:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        state = (z, z, z, jnp.full((B, H, dh), 0.0))
+    hseq, state = _slstm_scan(p, pre, state)          # (B, L, H, dh)
+    hh = hseq.reshape(B, L, d).astype(h.dtype)
+    hh = common.rms_norm(hh, p["ln_h"])
+    h = h + hh
+    x2 = jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])
+    return h + x2 @ p["w_down"], state
+
+
+# ------------------------------------------------------------- full model
+def _group_struct(cfg: ModelConfig):
+    every = cfg.slstm_every or (cfg.n_layers + 1)
+    n_groups = cfg.n_layers // every
+    n_m_group = every - 1
+    tail = cfg.n_layers - n_groups * every
+    return n_groups, n_m_group, tail
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    G, M, tail = _group_struct(cfg)
+    p = {"ln_f": jnp.ones((cfg.d_model,), dt),
+         "embed": common._normal(ks[0], (cfg.vocab_size, cfg.d_model), dt, 1.0),
+         "unembed": common._normal(ks[1], (cfg.d_model, cfg.vocab_size), dt,
+                                   cfg.d_model ** -0.5)}
+    if G:
+        p["m_groups"] = jax.vmap(jax.vmap(lambda k: _init_mlstm(cfg, k)))(
+            jax.random.split(ks[2], G * M).reshape(G, M, 2))
+        p["s_groups"] = jax.vmap(lambda k: _init_slstm(cfg, k))(
+            jax.random.split(ks[3], G))
+    if tail:
+        p["m_tail"] = jax.vmap(lambda k: _init_mlstm(cfg, k))(
+            jax.random.split(ks[4], tail))
+    return p
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict):
+    h = common.constrain_batch(
+        jnp.take(params["embed"], batch["tokens"], axis=0))
+    G, M, tail = _group_struct(cfg)
+
+    mblock = functools.partial(_mlstm_block, cfg)
+    if cfg.remat == "full":
+        mblock = jax.checkpoint(
+            mblock, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def group_body(h, gp):
+        mp, sp = gp
+
+        def inner(h, lp):
+            return mblock(lp, h), None
+
+        h, _ = common.scan_or_unroll(inner, h, mp, M, cfg.scan_layers)
+        h, _ = _slstm_block(cfg, sp, h)
+        return h, None
+
+    if G:
+        h, _ = common.scan_or_unroll(
+            group_body, h, (params["m_groups"], params["s_groups"]),
+            G, cfg.scan_layers)
+    if tail:
+        def inner_t(h, lp):
+            return mblock(lp, h), None
+        h, _ = common.scan_or_unroll(inner_t, h, params["m_tail"], tail,
+                                     cfg.scan_layers)
+    h = common.rms_norm(h, params["ln_f"])
+    return common.constrain_logits(
+        jnp.einsum("bld,dv->blv", h, params["unembed"])), jnp.float32(0.0)
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Constant-size state: no KV cache — O(1) in max_len (the point of the
+    long_500k cell). max_len kept for interface parity."""
+    G, M, tail = _group_struct(cfg)
+    d = cfg.d_model
+    H = cfg.n_heads
+    di = 2 * d
+    dh_m = di // H
+    dh_s = d // H
+    f32 = jnp.float32
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if G:
+        cache["m_C"] = jnp.zeros((G, M, batch, H, dh_m, dh_m), f32)
+        cache["m_n"] = jnp.zeros((G, M, batch, H, dh_m), f32)
+        cache["m_m"] = jnp.zeros((G, M, batch, H), f32)
+        z = jnp.zeros((G, batch, H, dh_s), f32)
+        cache["s_state"] = (z, z, z, z)
+    if tail:
+        cache["t_C"] = jnp.zeros((tail, batch, H, dh_m, dh_m), f32)
+        cache["t_n"] = jnp.zeros((tail, batch, H, dh_m), f32)
+        cache["t_m"] = jnp.zeros((tail, batch, H), f32)
+    return cache
+
+
+def _mlstm_decode_block(cfg, p, h, C, n, m):
+    """h: (B, 1, d). C: (B, H, dh, dh)."""
+    B = h.shape[0]
+    H = cfg.n_heads
+    x = common.rms_norm(h, p["ln"])
+    xz = x @ p["w_up"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    di = xm.shape[-1]
+    q = jnp.einsum("bld,dhk->bhk", xm, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bld,dhk->bhk", xm, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bld,dhk->bhk", xm, p["wv"]).astype(jnp.float32)
+    gates = jnp.einsum("bld,dgh->bgh", xm.astype(jnp.float32),
+                       p["w_gates"]) + p["b_gates"][None]
+    ig = gates[:, 0]
+    lf = jax.nn.log_sigmoid(gates[:, 1])
+    step = jax.vmap(jax.vmap(_mlstm_decode_step))     # over B, H
+    C, n, m, hh = step(C, n, m, q, k, v, ig, lf)
+    hh = hh.reshape(B, 1, di).astype(h.dtype)
+    hh = common.rms_norm(hh, p["ln_h"]) * jax.nn.silu(z)
+    return h + hh @ p["w_down"], C, n, m
+
+
+def decode(params: dict, cfg: ModelConfig, cache: dict, batch: dict):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)    # (B, 1, d)
+    G, M, tail = _group_struct(cfg)
+    new = dict(cache)
+
+    if G:
+        def group_body(h, xs):
+            mp, sp, C, n, m, s_st = xs
+
+            def inner(carry, ys):
+                h = carry
+                lp, Ci, ni, mi = ys
+                h, Ci, ni, mi = _mlstm_decode_block(cfg, lp, h, Ci, ni, mi)
+                return h, (Ci, ni, mi)
+
+            h, (C, n, m) = common.scan_or_unroll(inner, h, (mp, C, n, m),
+                                                 M, cfg.scan_layers)
+            h, s_st = _slstm_block(cfg, sp, h, s_st)
+            return h, (C, n, m, s_st)
+
+        h, (Cs, ns, ms, s_states) = common.scan_or_unroll(
+            group_body, h,
+            (params["m_groups"], params["s_groups"], cache["m_C"],
+             cache["m_n"], cache["m_m"], cache["s_state"]),
+            G, cfg.scan_layers)
+        new.update(m_C=Cs, m_n=ns, m_m=ms, s_state=s_states)
+    if tail:
+        def inner_t(carry, ys):
+            h = carry
+            lp, Ci, ni, mi = ys
+            h, Ci, ni, mi = _mlstm_decode_block(cfg, lp, h, Ci, ni, mi)
+            return h, (Ci, ni, mi)
+        h, (C, n, m) = common.scan_or_unroll(
+            inner_t, h, (params["m_tail"], cache["t_C"], cache["t_n"],
+                         cache["t_m"]), tail, cfg.scan_layers)
+        new.update(t_C=C, t_n=n, t_m=m)
+    h = common.rms_norm(h, params["ln_f"])
+    logits = common.constrain_logits(
+        jnp.einsum("bld,dv->blv", h, params["unembed"]))
+    new["pos"] = cache["pos"] + 1
+    return logits, new

@@ -1,0 +1,330 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): Mamba2 (SSD) backbone with a
+single *shared* full-attention+MLP block invoked every ``attn_every``
+layers (shared weights — the Zamba trick that buys attention quality at
+~1/6 of the KV/parameter cost).
+
+Mamba2/SSD trains chunkwise (exact): within a chunk, the scalar-decay
+kernel L_ij = exp(b_i - b_j) gates a (c x c) C@B^T contraction; across
+chunks an (N x P) state per head carries. Decode is the O(N*P) recurrence.
+Sub-quadratic overall (the single shared-attention KV cache is the only
+L-sized state), so this arch runs long_500k (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.api import ModelConfig
+
+
+# ------------------------------------------------------------- SSD core
+def _ssd_chunk_scan(xdt, B_, C_, la, chunk):
+    """Single head. xdt: (L, P) inputs pre-scaled by dt; B_, C_: (L, N);
+    la: (L,) log decay (= dt * A, <= 0). Returns y: (L, P)."""
+    L, P = xdt.shape
+    N = B_.shape[1]
+    nc = L // chunk
+    x = xdt.reshape(nc, chunk, P)
+    Bc = B_.reshape(nc, chunk, N)
+    Cc = C_.reshape(nc, chunk, N)
+    lac = la.reshape(nc, chunk)
+    b = jnp.cumsum(lac, axis=1)                     # (nc, c)
+    tot = b[:, -1]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # L_ij = exp(b_i - b_j) for j <= i (decay from j+1..i); diag includes own
+    Dmat = jnp.where(tri[None], b[:, :, None] - b[:, None, :], -jnp.inf)
+
+    def step(carry, xs):
+        S = carry                                    # (N, P)
+        x_c, B_c, C_c, D_c, b_c, t = xs
+        G = (C_c @ B_c.T) * jnp.exp(D_c)             # (c, c)
+        y = G @ x_c                                  # intra
+        y = y + jnp.exp(b_c)[:, None] * (C_c @ S)    # inter
+        dk = jnp.exp(t - b_c)[:, None]               # decay j -> chunk end
+        S = jnp.exp(t) * S + (B_c * dk).T @ x_c      # (N, P)
+        return S, y
+
+    S0 = jnp.zeros((N, P), jnp.float32)
+    _, y = jax.lax.scan(step, S0, (x, Bc, Cc, Dmat, b, tot))
+    return y.reshape(L, P)
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B, L, C); w: (K, C). state: (B, K-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return out, new_state
+
+
+# ------------------------------------------------------------ mamba block
+def _init_mamba(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * N
+    return {
+        "ln": jnp.ones((d,), dt),
+        # in_proj -> [z (di) | x (di) | B (N) | C (N) | dt (H)]
+        "w_in": common._normal(ks[0], (d, 2 * di + 2 * N + H), dt, d ** -0.5),
+        "conv_w": common._normal(ks[1], (cfg.ssm_conv, conv_ch), dt,
+                                 cfg.ssm_conv ** -0.5),
+        "a_log": jnp.zeros((H,), jnp.float32) + jnp.log(
+            jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "ln_h": jnp.ones((di,), dt),
+        "w_out": common._normal(ks[2], (di, d), dt, di ** -0.5),
+    }
+
+
+def _mamba_split(cfg, p, h):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    x = common.rms_norm(h, p["ln"])
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di: 2 * di]
+    Bc = zxbcdt[..., 2 * di: 2 * di + N]
+    Cc = zxbcdt[..., 2 * di + N: 2 * di + 2 * N]
+    dtr = zxbcdt[..., 2 * di + 2 * N:]
+    return z, xin, Bc, Cc, dtr, di, N, H
+
+
+def _mamba_block(cfg: ModelConfig, p, h, conv_state=None, ssm_state=None,
+                 single_step=False):
+    B, L, d = h.shape
+    z, xin, Bc, Cc, dtr, di, N, H = _mamba_split(cfg, p, h)
+    P = cfg.ssm_head_dim
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :di]
+    Bc = conv_out[..., di: di + N]
+    Cc = conv_out[..., di + N:]
+
+    dt_ = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    A = -jnp.exp(p["a_log"])                         # (H,) negative
+    la = dt_ * A                                     # (B, L, H) log decay
+    xh = xin.astype(jnp.float32).reshape(B, L, H, P)
+    xdt = xh * dt_[..., None]
+
+    if single_step:
+        # recurrent: S' = exp(la) S + dt * B x^T ; y = C S'
+        S = ssm_state                                # (B, H, N, P)
+        dec = jnp.exp(la[:, 0])                      # (B, H)
+        S = dec[:, :, None, None] * S + jnp.einsum(
+            "bn,bhp->bhnp", Bc[:, 0].astype(jnp.float32), xdt[:, 0])
+        y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), S)
+        y = y.reshape(B, 1, di)
+        new_ssm = S
+    else:
+        chunk = min(cfg.chunk, L)
+        # vmap over batch (axis 0), then heads (axis 1 of xdt/la; B_, C_
+        # are shared across heads)
+        core = jax.vmap(jax.vmap(
+            functools.partial(_ssd_chunk_scan, chunk=chunk),
+            in_axes=(1, None, None, 1), out_axes=1))
+        y = core(xdt, Bc.astype(jnp.float32), Cc.astype(jnp.float32), la)
+        y = y.reshape(B, L, di)                      # (B, L, H, P) contiguous
+        new_ssm = None
+    y = y.astype(h.dtype) * jax.nn.silu(z)
+    y = common.rms_norm(y, p["ln_h"])
+    return h + y @ p["w_out"], new_conv, new_ssm
+
+
+# ------------------------------------------------- shared attention block
+def _init_shared_attn(cfg: ModelConfig, key):
+    d, H, Hkv, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                         cfg.d_ff)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "wq": common._normal(ks[0], (d, H, hd), dt, d ** -0.5),
+        "wk": common._normal(ks[1], (d, Hkv, hd), dt, d ** -0.5),
+        "wv": common._normal(ks[2], (d, Hkv, hd), dt, d ** -0.5),
+        "wo": common._normal(ks[3], (H, hd, d), dt, (H * hd) ** -0.5),
+        "w_gate": common._normal(ks[4], (d, ff), dt, d ** -0.5),
+        "w_up": common._normal(ks[5], (d, ff), dt, d ** -0.5),
+        "w_down": common._normal(ks[6], (ff, d), dt, ff ** -0.5),
+    }
+
+
+def _shared_attn_block(cfg, p, h, positions):
+    x = common.rms_norm(h, p["ln1"])
+    g = cfg.n_heads // cfg.n_kv_heads
+    wk = p["wk"] if g == 1 else jnp.repeat(p["wk"], g, axis=1)
+    wv = p["wv"] if g == 1 else jnp.repeat(p["wv"], g, axis=1)
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, wk)
+    v = jnp.einsum("bld,dhk->blhk", x, wv)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    q = common.constrain_heads(q)
+    k = common.constrain_heads(k)
+    v = common.constrain_heads(v)
+    attn = common.attention(q, k, v, causal=True, use_flash=cfg.use_flash,
+                            block_q=cfg.attn_block_q)
+    h = h + jnp.einsum("blhk,hkd->bld", attn, p["wo"])
+    x = common.rms_norm(h, p["ln2"])
+    return h + common.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+# ------------------------------------------------------------- full model
+def _group_struct(cfg: ModelConfig):
+    every = cfg.attn_every or (cfg.n_layers + 1)
+    G = cfg.n_layers // every
+    tail = cfg.n_layers - G * every
+    return G, every, tail
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    G, every, tail = _group_struct(cfg)
+    p = {"ln_f": jnp.ones((cfg.d_model,), dt),
+         "embed": common._normal(ks[0], (cfg.vocab_size, cfg.d_model), dt, 1.0),
+         "unembed": common._normal(ks[1], (cfg.d_model, cfg.vocab_size), dt,
+                                   cfg.d_model ** -0.5),
+         "shared_attn": _init_shared_attn(cfg, ks[2])}
+    if G:
+        p["groups"] = jax.vmap(jax.vmap(lambda k: _init_mamba(cfg, k)))(
+            jax.random.split(ks[3], G * every).reshape(G, every, 2))
+    if tail:
+        p["tail"] = jax.vmap(lambda k: _init_mamba(cfg, k))(
+            jax.random.split(ks[4], tail))
+    return p
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict):
+    h = common.constrain_batch(
+        jnp.take(params["embed"], batch["tokens"], axis=0))
+    L = h.shape[1]
+    positions = jnp.arange(L, dtype=jnp.int32)[None]
+    G, every, tail = _group_struct(cfg)
+
+    def mblock(lp, h):
+        return _mamba_block(cfg, lp, h)[0]
+
+    if cfg.remat == "full":
+        mblock = jax.checkpoint(
+            mblock, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def group_body(h, gp):
+        def inner(h, lp):
+            return mblock(lp, h), None
+        h, _ = common.scan_or_unroll(inner, h, gp, every, cfg.scan_layers)
+        h = _shared_attn_block(cfg, params["shared_attn"], h, positions)
+        return h, None
+
+    if G:
+        h, _ = common.scan_or_unroll(group_body, h, params["groups"], G,
+                                     cfg.scan_layers)
+    if tail:
+        def inner_t(h, lp):
+            return mblock(lp, h), None
+        h, _ = common.scan_or_unroll(inner_t, h, params["tail"], tail,
+                                     cfg.scan_layers)
+    h = common.rms_norm(h, params["ln_f"])
+    return common.constrain_logits(
+        jnp.einsum("bld,dv->blv", h, params["unembed"])), jnp.float32(0.0)
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    G, every, tail = _group_struct(cfg)
+    di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    conv_ch = di + 2 * N
+    f32 = jnp.float32
+    dt = jnp.dtype(cfg.dtype)
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if G:
+        # the ONLY L-sized state: one KV cache per shared-attn invocation
+        # (weights are shared; activations — hence caches — are not)
+        cache["ak"] = jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dt)
+        cache["av"] = jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dt)
+        cache["g_conv"] = jnp.zeros((G, every, batch, K - 1, conv_ch), dt)
+        cache["g_ssm"] = jnp.zeros((G, every, batch, H, N, P), f32)
+    if tail:
+        cache["t_conv"] = jnp.zeros((tail, batch, K - 1, conv_ch), dt)
+        cache["t_ssm"] = jnp.zeros((tail, batch, H, N, P), f32)
+    return cache
+
+
+def _shared_attn_decode(cfg, p, h, ak, av, pos):
+    from repro.models import transformer as T
+    x = common.rms_norm(h, p["ln1"])
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    posv = pos[None, None]
+    q = common.apply_rope(q, posv, cfg.rope_theta)
+    k = common.apply_rope(k, posv, cfg.rope_theta)
+    ak = jax.lax.dynamic_update_slice_in_dim(ak, k, pos, axis=1)
+    av = jax.lax.dynamic_update_slice_in_dim(av, v, pos, axis=1)
+    attn = T._decode_attention(q, ak, av, pos)
+    h = h + jnp.einsum("blhk,hkd->bld", attn, p["wo"])
+    x = common.rms_norm(h, p["ln2"])
+    return h + common.swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), ak, av
+
+
+def decode(params: dict, cfg: ModelConfig, cache: dict, batch: dict):
+    h = common.constrain_batch(
+        jnp.take(params["embed"], batch["tokens"], axis=0))
+    pos = cache["pos"]
+    G, every, tail = _group_struct(cfg)
+    new = dict(cache)
+
+    if G:
+        # scan over groups; each group owns its shared-attn KV cache slice
+        def group_body(h, xs):
+            gp, conv_s, ssm_s, ak_g, av_g = xs
+
+            def inner(h, ys):
+                lp, cs, ss = ys
+                h, ncs, nss = _mamba_block(cfg, lp, h, cs, ss,
+                                           single_step=True)
+                return h, (ncs, nss)
+
+            h, (ncs, nss) = common.scan_or_unroll(
+                inner, h, (gp, conv_s, ssm_s), every, cfg.scan_layers)
+            h, ak_g, av_g = _shared_attn_decode(cfg, params["shared_attn"], h,
+                                                ak_g, av_g, pos)
+            return h, (ncs, nss, ak_g, av_g)
+
+        h, (gconv, gssm, ak, av) = common.scan_or_unroll(
+            group_body, h,
+            (params["groups"], cache["g_conv"], cache["g_ssm"],
+             cache["ak"], cache["av"]), G, cfg.scan_layers)
+        new.update(g_conv=gconv, g_ssm=gssm, ak=ak, av=av)
+    if tail:
+        def inner_t(h, ys):
+            lp, cs, ss = ys
+            h, ncs, nss = _mamba_block(cfg, lp, h, cs, ss, single_step=True)
+            return h, (ncs, nss)
+        h, (tconv, tssm) = common.scan_or_unroll(
+            inner_t, h, (params["tail"], cache["t_conv"], cache["t_ssm"]),
+            tail, cfg.scan_layers)
+        new.update(t_conv=tconv, t_ssm=tssm)
+    h = common.rms_norm(h, params["ln_f"])
+    logits = common.constrain_logits(
+        jnp.einsum("bld,dv->blv", h, params["unembed"]))
+    new["pos"] = pos + 1
+    return logits, new

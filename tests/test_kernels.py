@@ -1,0 +1,115 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.rbf_row import rbf_rows2
+from repro.kernels.gamma_update import gamma_update
+from repro.kernels.sparse_ell import ell_kernel_row
+from repro.kernels.flash_attention import flash_attention
+
+
+@pytest.mark.parametrize("n,d,bm", [(256, 32, 128), (512, 100, 256),
+                                    (1024, 784, 512), (2048, 123, 1024)])
+def test_rbf_rows2_sweep(n, d, bm):
+    r = np.random.default_rng(n + d)
+    X = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    sq = jnp.sum(X * X, axis=-1)
+    z2 = jnp.asarray(r.normal(size=(2, d)).astype(np.float32))
+    inv = jnp.float32(1 / 8)
+    got = rbf_rows2(X, sq, z2, inv, block_m=bm, interpret=True).T
+    want = ref.kernel_rows2(X, sq, z2, inv)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,d", [(256, 17), (512, 256), (1024, 64)])
+def test_gamma_update_sweep(n, d):
+    r = np.random.default_rng(n * d)
+    X = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    sq = jnp.sum(X * X, axis=-1)
+    g = jnp.asarray(r.normal(size=(n,)).astype(np.float32))
+    z2 = jnp.asarray(r.normal(size=(2, d)).astype(np.float32))
+    c2 = jnp.asarray(r.normal(size=(2,)).astype(np.float32))
+    inv = jnp.float32(0.3)
+    got = gamma_update(X, sq, g, z2, c2, inv, block_m=256 if n % 256 == 0
+                       else 128, interpret=True)
+    want = ref.gamma_update(X, sq, g, z2, c2, inv)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,d,K", [(256, 100, 16), (512, 300, 64),
+                                   (512, 123, 128)])
+def test_ell_row_sweep(n, d, K):
+    r = np.random.default_rng(n + K)
+    cols = r.integers(0, d, size=(n, K)).astype(np.int32)
+    vals = r.normal(size=(n, K)).astype(np.float32)
+    # random padding tail
+    for i in range(n):
+        t = r.integers(0, K)
+        vals[i, t:] = 0.0
+        cols[i, t:] = 0
+    sq = jnp.sum(jnp.asarray(vals) ** 2, axis=-1)
+    z = jnp.asarray(r.normal(size=(d,)).astype(np.float32))
+    inv = jnp.float32(0.2)
+    got = ell_kernel_row(jnp.asarray(vals), jnp.asarray(cols), sq, z, inv,
+                         block_m=128, interpret=True)
+    want = ref.ell_kernel_row(jnp.asarray(vals), jnp.asarray(cols), sq, z,
+                              inv)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,h,hkv,l,dh,dtype",
+                         [(1, 4, 4, 128, 32, np.float32),
+                          (2, 4, 2, 256, 64, np.float32),
+                          (1, 8, 1, 256, 64, np.float32),
+                          (2, 4, 2, 128, 64, jnp.bfloat16)])
+def test_flash_attention_sweep(b, h, hkv, l, dh, dtype):
+    r = np.random.default_rng(b * l + h)
+    mk = lambda *s: jnp.asarray(r.normal(size=s).astype(np.float32)).astype(
+        dtype)
+    q = mk(b, h, l, dh)
+    k = mk(b, hkv, l, dh)
+    v = mk(b, hkv, l, dh)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = ops._fa_ref(q, k, v, True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal():
+    r = np.random.default_rng(0)
+    q = jnp.asarray(r.normal(size=(1, 2, 128, 32)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(1, 2, 128, 32)).astype(np.float32))
+    v = jnp.asarray(r.normal(size=(1, 2, 128, 32)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    want = ops._fa_ref(q, k, v, False)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grad_path():
+    """custom_vjp backward (oracle recompute) is differentiable."""
+    r = np.random.default_rng(1)
+    q = jnp.asarray(r.normal(size=(1, 2, 64, 16)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(1, 1, 64, 16)).astype(np.float32))
+    v = jnp.asarray(r.normal(size=(1, 1, 64, 16)).astype(np.float32))
+    g = jax.grad(lambda q: ops.flash_attention(q, k, v, True).sum())(q)
+    gr = jax.grad(lambda q: ops._fa_ref(q, k, v, True).sum())(q)
+    np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-4)
+
+
+def test_ops_fallback_paths():
+    """Non-RBF kernels and non-pow2 sizes fall back to the oracle."""
+    r = np.random.default_rng(2)
+    X = jnp.asarray(r.normal(size=(100, 7)).astype(np.float32))  # 100 % 128
+    sq = jnp.sum(X * X, axis=-1)
+    z2 = jnp.asarray(r.normal(size=(2, 7)).astype(np.float32))
+    out = ops.kernel_rows2("rbf", X, sq, z2, jnp.float32(0.5))
+    assert out.shape == (100, 2)
+    out_lin = ops.kernel_rows2("linear", X, sq, z2, jnp.float32(0.5))
+    np.testing.assert_allclose(out_lin, X @ z2.T, rtol=1e-5)

@@ -1,0 +1,179 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import smo
+from repro.core.kernel_fns import full_kernel_matrix, rbf_rows2
+from repro.data import sparse as sp
+
+_f = st.floats(-10.0, 10.0, allow_nan=False, width=32)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a_up=st.floats(0, 4), a_low=st.floats(0, 4),
+       y_up=st.sampled_from([-1.0, 1.0]), y_low=st.sampled_from([-1.0, 1.0]),
+       g_up=_f, g_low=_f, k_ul=st.floats(-1.0, 1.0))
+def test_pair_update_preserves_constraints(a_up, a_low, y_up, y_low,
+                                           g_up, g_low, k_ul):
+    """Eq. 11 + joint clipping: both alphas stay in the box and
+    sum(alpha*y) is exactly preserved (the dual equality constraint)."""
+    C = 4.0
+    au, al = smo.pair_update(
+        jnp.float32(a_up), jnp.float32(a_low), jnp.float32(y_up),
+        jnp.float32(y_low), jnp.float32(g_up), jnp.float32(g_low),
+        jnp.float32(k_ul), jnp.float32(1.0), jnp.float32(1.0), C)
+    au, al = float(au), float(al)
+    assert -1e-5 <= au <= C + 1e-5
+    assert -1e-5 <= al <= C + 1e-5
+    before = a_up * y_up + a_low * y_low
+    after = au * y_up + al * y_low
+    assert abs(before - after) < 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(4, 64), d=st.integers(1, 20), seed=st.integers(0, 99))
+def test_rbf_kernel_bounds_and_symmetry(n, d, seed):
+    r = np.random.default_rng(seed)
+    X = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    K = np.asarray(full_kernel_matrix("rbf", X, X, 0.25))
+    assert (K > 0).all() and (K <= 1.0 + 1e-6).all()
+    assert np.allclose(K, K.T, atol=1e-5)
+    assert np.allclose(np.diag(K), 1.0, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 40), d=st.integers(2, 30), seed=st.integers(0, 99),
+       density=st.floats(0.05, 0.9))
+def test_sparse_roundtrip(n, d, seed, density):
+    r = np.random.default_rng(seed)
+    X = r.normal(size=(n, d)).astype(np.float32)
+    X[r.random((n, d)) > density] = 0.0
+    assert np.allclose(sp.to_csr(X).to_dense(), X)
+    ell = sp.to_ell(X, lane=8)
+    assert np.allclose(ell.to_dense(), X)
+    assert np.allclose(ell.sq_norms(), (X * X).sum(1), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_shrink_rule_only_drops_bound_samples(seed):
+    """Eq. 10 never eliminates a free (0 < alpha < C) sample."""
+    r = np.random.default_rng(seed)
+    n, C = 64, 4.0
+    alpha = r.choice([0.0, C, 1.3], size=n).astype(np.float32)
+    y = r.choice([-1.0, 1.0], size=n).astype(np.float32)
+    gamma = jnp.asarray(r.normal(size=n).astype(np.float32))
+    active = jnp.ones(n, bool)
+    new = smo.shrink_rule(gamma, jnp.asarray(alpha), jnp.asarray(y), active,
+                          jnp.float32(-0.1), jnp.float32(0.1), C)
+    dropped = ~np.asarray(new)
+    free = (alpha > 0) & (alpha < C)
+    assert not (dropped & free).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 3), lq=st.sampled_from([16, 32, 64]),
+       h=st.sampled_from([2, 4]), hkv=st.sampled_from([1, 2]),
+       seed=st.integers(0, 99))
+def test_blockwise_attention_matches_ref(b, lq, h, hkv, seed):
+    from repro.models import common
+    from repro.kernels import ref
+    if h % hkv:
+        hkv = 1
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(b, lq, h, 16)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(b, lq, hkv, 16)).astype(np.float32))
+    v = jnp.asarray(r.normal(size=(b, lq, hkv, 16)).astype(np.float32))
+    out_b = common.blockwise_attention(q, k, v, block_q=8)
+    out_r = ref.mha(q, k, v, causal=True)
+    assert np.allclose(out_b, out_r, atol=2e-5), \
+        np.abs(np.asarray(out_b - out_r)).max()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([128, 256]), d=st.integers(3, 40),
+       seed=st.integers(0, 99))
+def test_pallas_rows_match_oracle_property(n, d, seed):
+    from repro.kernels import ops, ref
+    r = np.random.default_rng(seed)
+    X = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    sq = jnp.sum(X * X, axis=-1)
+    z2 = jnp.asarray(r.normal(size=(2, d)).astype(np.float32))
+    got = ops.kernel_rows2("rbf", X, sq, z2, jnp.float32(0.125))
+    want = ref.kernel_rows2(X, sq, z2, jnp.float32(0.125))
+    assert np.allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 4), l=st.integers(2, 32), v=st.integers(4, 64),
+       seed=st.integers(0, 99))
+def test_cross_entropy_matches_naive(b, l, v, seed):
+    from repro.models import common
+    r = np.random.default_rng(seed)
+    logits = jnp.asarray(r.normal(size=(b, l, v)).astype(np.float32))
+    tgt = jnp.asarray(r.integers(0, v, size=(b, l)), dtype=jnp.int32)
+    loss, aux = common.cross_entropy(logits, tgt, z_loss=0.0)
+    lp = jax.nn.log_softmax(np.asarray(logits), axis=-1)
+    want = -np.take_along_axis(np.asarray(lp), np.asarray(tgt)[..., None],
+                               axis=-1).mean()
+    assert abs(float(loss) - float(want)) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([4, 8, 16, 32]), seed=st.integers(0, 50))
+def test_mlstm_chunk_size_invariance(chunk, seed):
+    """The chunkwise mLSTM is exact: any chunk size gives the same output
+    (the per-chunk stabilizers cancel algebraically)."""
+    from repro.models.xlstm import _mlstm_chunk_scan
+    r = np.random.default_rng(seed)
+    L, dh = 32, 8
+    q, k, v = (jnp.asarray(r.normal(size=(L, dh)).astype(np.float32))
+               for _ in range(3))
+    ig = jnp.asarray(r.normal(size=(L,)).astype(np.float32))
+    lf = jnp.asarray(-np.abs(r.normal(size=(L,))).astype(np.float32))
+    ref = _mlstm_chunk_scan(q, k, v, ig, lf, chunk=L)   # single chunk
+    got = _mlstm_chunk_scan(q, k, v, ig, lf, chunk=chunk)
+    assert np.allclose(got, ref, rtol=1e-4, atol=1e-4), \
+        np.abs(np.asarray(got - ref)).max()
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([4, 8, 16, 32]), seed=st.integers(0, 50))
+def test_ssd_chunk_size_invariance(chunk, seed):
+    """Mamba2/SSD chunkwise scan is exact for any chunk size."""
+    from repro.models.zamba import _ssd_chunk_scan
+    r = np.random.default_rng(seed)
+    L, P, N = 32, 8, 4
+    xdt = jnp.asarray(r.normal(size=(L, P)).astype(np.float32))
+    B_ = jnp.asarray(r.normal(size=(L, N)).astype(np.float32))
+    C_ = jnp.asarray(r.normal(size=(L, N)).astype(np.float32))
+    la = jnp.asarray(-np.abs(r.normal(scale=0.2, size=(L,)))
+                     .astype(np.float32))
+    ref = _ssd_chunk_scan(xdt, B_, C_, la, chunk=L)
+    got = _ssd_chunk_scan(xdt, B_, C_, la, chunk=chunk)
+    assert np.allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 99), cap_f=st.floats(0.3, 2.0))
+def test_moe_scatter_equals_einsum_dispatch(seed, cap_f):
+    """The two MoE dispatch implementations are the same function,
+    including under capacity overflow (dropped tokens)."""
+    import dataclasses
+    from repro import configs
+    from repro.models.api import build
+    cfg = dataclasses.replace(configs.smoke_config("phi3.5-moe-42b-a6.6b"),
+                              capacity_factor=cap_f)
+    model = build(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(seed))
+    r = np.random.default_rng(seed)
+    toks = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 32)),
+                       dtype=jnp.int32)
+    le, _ = model.forward(params, dataclasses.replace(cfg, moe_impl="einsum"),
+                          {"tokens": toks})
+    ls, _ = model.forward(params, dataclasses.replace(cfg,
+                                                      moe_impl="scatter"),
+                          {"tokens": toks})
+    assert np.allclose(le, ls, atol=5e-3), np.abs(np.asarray(le - ls)).max()
