@@ -47,14 +47,12 @@ def main():
     cfg = dataclasses.replace(cfg, remat="none")
     model = build(cfg)
 
+    from repro.launch.mesh import make_mesh
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split(","))
-        mesh = jax.make_mesh(shape, ("data", "model")[: len(shape)],
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(shape))
+        mesh = make_mesh(shape, ("data", "model")[: len(shape)])
     else:
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",))
 
     tp = TokenPipeline(cfg.vocab_size, batch=args.batch, seq_len=args.seq,
                        seed=0)
@@ -79,7 +77,8 @@ def main():
     step_fn = train_lib.make_train_step(cfg, ocfg, mesh)
 
     start = 0
-    with jax.set_mesh(mesh):
+    from repro.launch import mesh as meshlib
+    with meshlib.set_mesh(mesh):
         if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir):
             start = ckpt.latest_step(args.ckpt_dir)
             d = os.path.join(args.ckpt_dir, f"step_{start}")

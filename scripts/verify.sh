@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification: pin test deps and run the full suite on CPU.
+# Usage: scripts/verify.sh  (from anywhere inside the repo)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Test deps (hypothesis included — tests/test_property.py skips without it,
+# but CI should run it). Offline containers keep going with what they have.
+python -m pip install --quiet "pytest>=7" "hypothesis>=6.90" "scipy>=1.10" \
+    2>/dev/null || echo "WARN: pip install failed (offline?); running with installed deps"
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

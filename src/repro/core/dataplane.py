@@ -1,0 +1,180 @@
+"""Training-time sample storage: the dense vs block-ELL data plane.
+
+The paper stores training samples in CSR so large sparse datasets fit in
+memory (Sec. 2.2, Fig. 1b). On TPU we use block-ELL instead (DESIGN.md §2):
+every row is padded to a fixed nonzero budget K so the (vals, cols) tiles
+stream through the VPU with lane-wise gathers. This module gives the SMO
+driver one abstraction over both layouts:
+
+  * device side — ``DenseData`` (X, sq_norms) and ``ELLData``
+    (vals, cols, sq_norms): registered pytrees the jitted chunk runners
+    consume directly. ``n_features`` on ``ELLData`` is static metadata so
+    rows can be densified under jit (working-set rows travel dense; they
+    are O(d) per iteration against O(M*K) for the gamma pass).
+  * host side — ``DenseStore`` / ``ELLStore``: own the full training set in
+    numpy and gather arbitrary row subsets into padded device buffers. This
+    is what shrinking-driven physical compaction calls between chunks, so
+    compaction moves ELL rows (2K+1 floats) instead of dense rows (d+1).
+
+Memory rule of thumb: ELL wins whenever density < d / 2K — the paper's
+Fig. 1b argument in vector-friendly form.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseData:
+    """Device buffer, dense layout: (X, sq_norms)."""
+    X: jax.Array          # (M, d) f32
+    sq_norms: jax.Array   # (M,) f32 — precomputed ||x_i||^2
+
+    @property
+    def m(self) -> int:
+        return int(self.X.shape[0])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.X.shape[1])
+
+    def dense_row(self, i) -> jax.Array:
+        return self.X[i]
+
+    def memory_bytes(self) -> int:
+        return self.X.size * 4 + self.sq_norms.size * 4
+
+    def flops_per_row(self) -> float:
+        """Model FLOPs of one fused two-row gamma update, per buffer row."""
+        return 4.0 * self.n_features + 10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ELLData:
+    """Device buffer, block-ELL layout: (vals, cols, sq_norms).
+
+    Padding slots hold (val=0, col=0) and contribute exactly 0 to every
+    gather-FMA; padding *rows* are all-padding (sq_norm 0).
+    """
+    vals: jax.Array       # (M, K) f32
+    cols: jax.Array       # (M, K) i32
+    sq_norms: jax.Array   # (M,) f32
+    n_features: int       # static: original feature dimension d
+
+    @property
+    def m(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def K(self) -> int:
+        return int(self.vals.shape[1])
+
+    def dense_row(self, i) -> jax.Array:
+        """Scatter one ELL row to dense (d,) — used for the O(d) working-set
+        rows (z_up, z_low) each iteration; duplicated padding cols add 0."""
+        return jnp.zeros((self.n_features,), jnp.float32) \
+            .at[self.cols[i]].add(self.vals[i])
+
+    def memory_bytes(self) -> int:
+        return self.vals.size * 4 + self.cols.size * 4 + self.sq_norms.size * 4
+
+    def flops_per_row(self) -> float:
+        # two gather-FMA passes over K slots + exp/FMA epilogue
+        return 8.0 * self.K + 10.0
+
+
+jax.tree_util.register_dataclass(
+    DenseData, data_fields=["X", "sq_norms"], meta_fields=[])
+jax.tree_util.register_dataclass(
+    ELLData, data_fields=["vals", "cols", "sq_norms"],
+    meta_fields=["n_features"])
+
+
+class DenseStore:
+    """Host-side dense training set; gathers row subsets into buffers."""
+    fmt = "dense"
+
+    def __init__(self, X: np.ndarray):
+        self.X = np.ascontiguousarray(X, np.float32)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.X.shape[1]
+
+    def alloc(self, m: int):
+        return np.zeros((m, self.n_features), np.float32)
+
+    def fill(self, buf, sl: slice, rows: np.ndarray) -> None:
+        buf[sl] = self.X[rows]
+
+    def to_device(self, buf, put) -> DenseData:
+        sq = (buf * buf).sum(axis=1).astype(np.float32)
+        return DenseData(put(buf), put(sq))
+
+    def dense_rows(self, rows: np.ndarray) -> np.ndarray:
+        return self.X[rows]
+
+
+class ELLStore:
+    """Host-side block-ELL training set (vals, cols padded to K nonzeros)."""
+    fmt = "ell"
+
+    def __init__(self, vals: np.ndarray, cols: np.ndarray, n_features: int):
+        self.vals = np.ascontiguousarray(vals, np.float32)
+        self.cols = np.ascontiguousarray(cols, np.int32)
+        self._n_features = int(n_features)
+
+    @property
+    def n(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self._n_features
+
+    @property
+    def K(self) -> int:
+        return self.vals.shape[1]
+
+    def alloc(self, m: int):
+        return (np.zeros((m, self.K), np.float32),
+                np.zeros((m, self.K), np.int32))
+
+    def fill(self, buf, sl: slice, rows: np.ndarray) -> None:
+        vb, cb = buf
+        vb[sl] = self.vals[rows]
+        cb[sl] = self.cols[rows]
+
+    def to_device(self, buf, put) -> ELLData:
+        vb, cb = buf
+        sq = (vb * vb).sum(axis=1).astype(np.float32)
+        return ELLData(put(vb), put(cb), put(sq), self._n_features)
+
+    def dense_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Densify a row subset (reconstruction streams bounded blocks, so
+        ELL storage never forces a full dense materialization)."""
+        out = np.zeros((rows.size, self._n_features), np.float32)
+        r = np.repeat(np.arange(rows.size), self.K)
+        np.add.at(out, (r, self.cols[rows].reshape(-1)),
+                  self.vals[rows].reshape(-1))
+        return out
+
+
+def make_store(X: np.ndarray, fmt: str, ell_K: "int | None" = None,
+               ell_lane: int = 128):
+    """Build the host store for ``fmt`` from a dense sample matrix."""
+    if fmt == "dense":
+        return DenseStore(X)
+    if fmt == "ell":
+        from repro.data import sparse
+        ell = sparse.to_ell(np.asarray(X), K=ell_K, lane=ell_lane)
+        return ELLStore(ell.vals, ell.cols, X.shape[1])
+    raise ValueError(f"unknown data format {fmt!r} (want 'dense' or 'ell')")

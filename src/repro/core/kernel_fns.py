@@ -94,6 +94,104 @@ def get_row(kernel: str) -> KernelRowFn:
         raise ValueError(f"unknown kernel {kernel!r}") from None
 
 
+# --------------------------------------------------------------------------
+# Block-ELL sparse sample storage (paper Sec. 2.2 / Fig. 1b; DESIGN.md §2).
+# The query z stays dense; samples are (vals, cols) rows padded to K
+# nonzeros. <x_i, z> = sum_k vals[i,k] * z[cols[i,k]] — a lane-wise gather
+# plus FMA. Padding slots (val=0, col=0) contribute exactly 0.
+
+def ell_dots(vals: jax.Array, cols: jax.Array, z: jax.Array) -> jax.Array:
+    """<x_i, z> for every ELL row i. vals/cols: (M, K), z: (d,). -> (M,)."""
+    return jnp.sum(vals * jnp.take(z, cols, axis=0), axis=-1)
+
+
+def ell_dots2(vals: jax.Array, cols: jax.Array, z2: jax.Array) -> jax.Array:
+    """<x_i, z_j> for two dense queries. z2: (2, d). -> (M, 2)."""
+    zg = jnp.take(z2, cols, axis=1)                   # (2, M, K)
+    return jnp.einsum("mk,jmk->mj", vals, zg)
+
+
+def ell_rbf_row(vals, cols, sq_norms, z, inv_2s2):
+    d2 = sq_norms - 2.0 * ell_dots(vals, cols, z) + jnp.dot(z, z)
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
+def ell_rbf_rows2(vals, cols, sq_norms, z2, inv_2s2):
+    zn = jnp.sum(z2 * z2, axis=-1)                    # (2,)
+    d2 = sq_norms[:, None] - 2.0 * ell_dots2(vals, cols, z2) + zn[None, :]
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
+def ell_linear_row(vals, cols, sq_norms, z, inv_2s2):
+    del sq_norms, inv_2s2
+    return ell_dots(vals, cols, z)
+
+
+def ell_linear_rows2(vals, cols, sq_norms, z2, inv_2s2):
+    del sq_norms, inv_2s2
+    return ell_dots2(vals, cols, z2)
+
+
+def ell_poly_row(vals, cols, sq_norms, z, inv_2s2, degree=3, coef0=1.0):
+    del sq_norms
+    return (inv_2s2 * ell_dots(vals, cols, z) + coef0) ** degree
+
+
+def ell_poly_rows2(vals, cols, sq_norms, z2, inv_2s2, degree=3, coef0=1.0):
+    del sq_norms
+    return (inv_2s2 * ell_dots2(vals, cols, z2) + coef0) ** degree
+
+
+_ELL_ROWS2 = {"rbf": ell_rbf_rows2, "linear": ell_linear_rows2,
+              "poly": ell_poly_rows2}
+_ELL_ROW = {"rbf": ell_rbf_row, "linear": ell_linear_row,
+            "poly": ell_poly_row}
+
+
+def get_ell_rows2(kernel: str) -> KernelRowFn:
+    try:
+        return _ELL_ROWS2[kernel]
+    except KeyError:
+        raise ValueError(f"unknown kernel {kernel!r}") from None
+
+
+def get_ell_row(kernel: str) -> KernelRowFn:
+    try:
+        return _ELL_ROW[kernel]
+    except KeyError:
+        raise ValueError(f"unknown kernel {kernel!r}") from None
+
+
+def ell_cross_kernel(kernel: str, Z: jax.Array, vals: jax.Array,
+                     cols: jax.Array, sq_norms: jax.Array, inv_2s2: float,
+                     max_gather: int = 1 << 24) -> jax.Array:
+    """K(Z_j, x_i) for dense queries Z (nZ, d) against ELL samples. (nZ, M).
+
+    Predict/objective-time helper — the ELL analogue of
+    ``full_kernel_matrix``. The gather intermediate is (nZ, m_blk, K), so
+    the sample axis is blocked to keep it under ``max_gather`` elements
+    regardless of how large the SV set or the query block is.
+    """
+    nZ = Z.shape[0]
+    M, K = vals.shape
+    blk = max(1, min(M, max_gather // max(nZ * K, 1)))
+
+    def dots_block(v, c):
+        zg = jnp.take(Z, c, axis=1)                   # (nZ, blk, K)
+        return jnp.einsum("mk,jmk->jm", v, zg)
+
+    dots = jnp.concatenate(
+        [dots_block(vals[s: s + blk], cols[s: s + blk])
+         for s in range(0, M, blk)], axis=1)
+    if kernel == "linear":
+        return dots
+    if kernel == "poly":
+        return (inv_2s2 * dots + 1.0) ** 3
+    zn = jnp.sum(Z * Z, axis=-1)
+    d2 = zn[:, None] - 2.0 * dots + sq_norms[None, :]
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
 def full_kernel_matrix(kernel: str, X: jax.Array, Z: jax.Array, inv_2s2: float,
                        block: int = 2048) -> jax.Array:
     """K(X_i, Z_j) — test/predict-time helper (never materialized in training;

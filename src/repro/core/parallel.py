@@ -32,32 +32,55 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import kernel_fns, smo, solver
+from repro.launch.mesh import shard_map_compat
 
 AXIS = "shards"
 
 
 def data_mesh(n_devices: Optional[int] = None, axis: str = AXIS) -> Mesh:
+    from repro.launch.mesh import make_mesh
     devs = jax.devices()[: n_devices or len(jax.devices())]
-    return jax.make_mesh((len(devs),), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,),
-                         devices=devs)
+    return make_mesh((len(devs),), (axis,), devices=devs)
 
 
 def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
                                inv_2s2: float, shrink_interval: int,
-                               axis: str = AXIS, use_pallas: bool = False):
-    """shard_map SMO chunk. State scalars are replicated; arrays sharded."""
-    rows2 = kernel_fns.get_rows2(kernel)
+                               axis: str = AXIS, use_pallas: bool = False,
+                               fmt: str = "dense", n_features: int = 0):
+    """shard_map SMO chunk. State scalars are replicated; arrays sharded.
+
+    ``fmt='ell'`` consumes block-ELL shards (vals, cols, sq); candidate rows
+    are densified locally before the all_gather so the collective payload
+    stays the paper's (p, 2d+6) bcast shape, and the shard-local gamma sweep
+    runs on the sparse stream.
+    """
     kself = kernel_fns.self_kernel(kernel)
     row1 = kernel_fns.get_row(kernel)
+    if fmt == "ell":
+        ell_rows2 = kernel_fns.get_ell_rows2(kernel)
+    else:
+        rows2 = kernel_fns.get_rows2(kernel)
     if use_pallas:
         from repro.kernels import ops as kops
 
-    def local_chunk(X_l, y_l, sq_l, alpha_l, gamma_l, active_l,
-                    step0, next_shrink0, n_shrinks0, tol, max_iters):
-        p = lax.axis_size(axis)
+    def local_chunk(*args):
+        if fmt == "ell":
+            (vals_l, cols_l, sq_l, y_l, alpha_l, gamma_l, active_l,
+             step0, next_shrink0, n_shrinks0, tol, max_iters) = args
+            d = n_features
+
+            def dense_row_local(j):
+                return jnp.zeros((d,), jnp.float32) \
+                    .at[cols_l[j]].add(vals_l[j])
+        else:
+            (X_l, sq_l, y_l, alpha_l, gamma_l, active_l,
+             step0, next_shrink0, n_shrinks0, tol, max_iters) = args
+            d = X_l.shape[1]
+
+            def dense_row_local(j):
+                return X_l[j]
+        p = mesh.shape[axis]          # static (lax.axis_size is JAX >= 0.6)
         me = lax.axis_index(axis)
-        d = X_l.shape[1]
 
         def gather_select(gamma_l, alpha_l, active_l):
             """Local Eq. 8 + fused candidate exchange. Returns replicated
@@ -67,7 +90,7 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
             pay = jnp.concatenate([
                 jnp.stack([b_up_l, b_low_l, alpha_l[j_up], y_l[j_up],
                            alpha_l[j_low], y_l[j_low]]),
-                X_l[j_up], X_l[j_low]])                    # (6 + 2d,)
+                dense_row_local(j_up), dense_row_local(j_low)])  # (6 + 2d,)
             pays = lax.all_gather(pay, axis)               # (p, 6 + 2d)
             k_up = jnp.argmin(pays[:, 0])
             k_low = jnp.argmax(pays[:, 1])
@@ -99,7 +122,14 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
             alpha_l = jnp.where(me == sel["k_low"],
                                 alpha_l.at[sel["j_low"]].set(a_low_new), alpha_l)
             coef2 = jnp.stack([sel["y_up"] * d_up, sel["y_low"] * d_low])
-            if use_pallas:
+            if fmt == "ell" and use_pallas:
+                gamma_l = kops.ell_fused_gamma_update(
+                    kernel, vals_l, cols_l, sq_l, gamma_l, x2, coef2,
+                    inv_2s2)
+            elif fmt == "ell":
+                rows = ell_rows2(vals_l, cols_l, sq_l, x2, inv_2s2)
+                gamma_l = gamma_l + rows @ coef2
+            elif use_pallas:
                 gamma_l = kops.fused_gamma_update(
                     kernel, X_l, sq_l, gamma_l, x2, coef2, inv_2s2)
             else:
@@ -140,18 +170,21 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
 
     sharded = P(axis)
     rep = P()
-    mapped = jax.shard_map(
+    data_specs = ((P(axis, None), P(axis, None), sharded) if fmt == "ell"
+                  else (P(axis, None), sharded))
+    mapped = shard_map_compat(
         local_chunk, mesh=mesh,
-        in_specs=(P(axis, None), sharded, sharded, sharded, sharded, sharded,
-                  rep, rep, rep, rep, rep),
+        in_specs=data_specs + (sharded, sharded, sharded, sharded,
+                               rep, rep, rep, rep, rep),
         out_specs=(sharded, sharded, sharded, rep, rep, rep, rep, rep, rep,
-                   rep),
-        check_vma=False)
+                   rep))
     jitted = jax.jit(mapped)
 
-    def run_chunk(X, y, sq, state: smo.SMOState, tol, max_iters: int):
+    def run_chunk(data, y, state: smo.SMOState, tol, max_iters: int):
+        dargs = ((data.vals, data.cols, data.sq_norms) if fmt == "ell"
+                 else (data.X, data.sq_norms))
         (alpha, gamma, active, b_up, b_low, step, next_shrink, n_shrinks,
-         conv, stalled) = jitted(X, y, sq, state.alpha, state.gamma,
+         conv, stalled) = jitted(*dargs, y, state.alpha, state.gamma,
                                  state.active, state.step, state.next_shrink,
                                  state.n_shrinks, tol,
                                  jnp.int32(max_iters))
@@ -164,28 +197,50 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
 
 
 def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
-                            axis: str = AXIS, row_block: int = 4096):
-    """Distributed Alg. 6: ring-rotate (X_shard, coef_shard); every shard
-    accumulates kernel-block @ coef partials for its stale rows."""
+                            axis: str = AXIS, row_block: int = 4096,
+                            fmt: str = "dense", n_features: int = 0):
+    """Distributed Alg. 6: ring-rotate each shard's sample block + coef;
+    every shard accumulates kernel-block @ coef partials for its stale rows.
 
-    def local(X_l, y_l, alpha_l, gamma_l, stale_l):
-        p = lax.axis_size(axis)
+    ``fmt='dense'`` rotates (X, coef, sq) — d+2 floats per row. ``fmt='ell'``
+    rotates the *sparse* payload (vals, cols, coef, sq) — 2K+2 floats per
+    row — so inter-device traffic shrinks by the same density factor as
+    storage (the paper's Fig. 1b argument applied to communication); each
+    shard densifies the incoming block and its own row blocks into bounded
+    (m, d) scratch and runs the same dense kernel-block GEMM.
+    """
+    n_data = 2 if fmt == "ell" else 1      # arrays rotated besides coef/sq
+
+    def block_dense(*parts):
+        """Sample block as dense rows: identity for dense, scatter for ELL."""
+        if fmt == "dense":
+            return parts[0]
+        vals, cols = parts
+        m = vals.shape[0]
+        return jnp.zeros((m, n_features), jnp.float32) \
+            .at[jnp.arange(m)[:, None], cols].add(vals)
+
+    def local(*args):
+        data_l, (y_l, alpha_l, gamma_l, stale_l) = args[:n_data], args[n_data:]
+        p = mesh.shape[axis]                      # static axis size
         coef_l = alpha_l * y_l                    # zero where alpha == 0
-        m_l = X_l.shape[0]
-        sq_l = jnp.sum(X_l * X_l, axis=-1)
+        m_l = data_l[0].shape[0]
+        sq_l = jnp.sum(data_l[0] * data_l[0], axis=-1)
         # pad the *local row* side so the row-block loop stays in bounds;
         # the ring payload (columns) keeps the uniform shard size m_l.
         pad = (-m_l) % row_block
         mp = m_l + pad
-        Xp = jnp.pad(X_l, ((0, pad), (0, 0)))
+        data_p = tuple(jnp.pad(a, ((0, pad), (0, 0))) for a in data_l)
         sqp = jnp.pad(sq_l, (0, pad))
 
         def ring_step(t, carry):
-            Xb, cb, sqb, acc = carry
+            datab, cb, sqb, acc = carry
+            Xb = block_dense(*datab)              # dense view of ring block
 
             def rb(i, acc):
                 s = i * row_block
-                Xi = lax.dynamic_slice_in_dim(Xp, s, row_block)
+                Xi = block_dense(*(lax.dynamic_slice_in_dim(a, s, row_block)
+                                   for a in data_p))
                 sqi = lax.dynamic_slice_in_dim(sqp, s, row_block)
                 if kernel == "rbf":
                     d2 = sqi[:, None] - 2.0 * (Xi @ Xb.T) + sqb[None, :]
@@ -200,20 +255,20 @@ def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
 
             acc = lax.fori_loop(0, mp // row_block, rb, acc)
             perm = [(i, (i + 1) % p) for i in range(p)]
-            Xb = lax.ppermute(Xb, axis, perm)
-            cb = lax.ppermute(cb, axis, perm)
-            sqb = lax.ppermute(sqb, axis, perm)
-            return Xb, cb, sqb, acc
+            rotate = lambda a: lax.ppermute(a, axis, perm)
+            return (tuple(rotate(a) for a in datab), rotate(cb), rotate(sqb),
+                    acc)
 
         _, _, _, acc = lax.fori_loop(
-            0, p, ring_step, (X_l, coef_l, sq_l, jnp.zeros((mp,), jnp.float32)))
+            0, p, ring_step,
+            (data_l, coef_l, sq_l, jnp.zeros((mp,), jnp.float32)))
         return jnp.where(stale_l, acc[:m_l] - y_l, gamma_l)
 
     sharded = P(axis)
-    mapped = jax.shard_map(
+    mapped = shard_map_compat(
         local, mesh=mesh,
-        in_specs=(P(axis, None), sharded, sharded, sharded, sharded),
-        out_specs=sharded, check_vma=False)
+        in_specs=(P(axis, None),) * n_data + (sharded,) * 4,
+        out_specs=sharded)
     return jax.jit(mapped)
 
 
@@ -238,31 +293,52 @@ class ParallelSMOSolver(solver.SMOSolver):
         return jax.device_put(jnp.asarray(arr), sh)
 
     def _runner(self, cfg, interval):
-        key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas)
+        fmt = self._store.fmt
+        # n_features is baked into the ELL closures (candidate-row densify),
+        # so it must key the cache: a refit on a different-width dataset
+        # would otherwise silently scatter out-of-bounds.
+        key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas, fmt,
+               self._store.n_features)
         if key not in self._runners:
             self._runners[key] = make_parallel_chunk_runner(
                 self.mesh, cfg.kernel, cfg.C, cfg.inv_2s2, interval,
-                self.axis, cfg.use_pallas)
+                self.axis, cfg.use_pallas, fmt=fmt,
+                n_features=self._store.n_features)
         return self._runners[key]
 
-    def _reconstruct(self, X, y, alpha, stale):
+    def _reconstruct(self, y, alpha, stale):
         """Distributed Alg. 6: shard the full problem over the mesh and run
-        the ppermute ring; returns reconstructed gamma for ``stale`` rows."""
-        key = ("recon", self.cfg.kernel, self.cfg.inv_2s2)
+        the ppermute ring; returns reconstructed gamma for ``stale`` rows.
+        ELL stores rotate the sparse (vals, cols) payload through the ring."""
+        store = self._store
+        n = store.n
+        fmt = store.fmt
+        rb = min(4096, _next_pow2(max(64, n)))
+        # row_block and (for ELL) n_features are closed over by the ring —
+        # key them so refits on different datasets rebuild the closure.
+        key = ("recon", self.cfg.kernel, self.cfg.inv_2s2, fmt, rb,
+               store.n_features)
         if key not in self._runners:
             self._runners[key] = make_ring_reconstructor(
                 self.mesh, self.cfg.kernel, self.cfg.inv_2s2, self.axis,
-                row_block=min(4096, _next_pow2(max(64, X.shape[0]))))
+                row_block=rb, fmt=fmt, n_features=store.n_features)
         recon = self._runners[key]
         p = self._nshards()
-        n = X.shape[0]
         m = -(-n // p) * p                       # pad to shard-divisible
         stale_mask = np.zeros((m,), bool)
         stale_mask[stale] = True
-        Xp = np.zeros((m, X.shape[1]), np.float32)
-        Xp[:n] = X
         pad1 = lambda a: np.pad(a.astype(np.float32), (0, m - n))
-        g = recon(self._put(Xp), self._put(pad1(y)), self._put(pad1(alpha)),
+        if fmt == "ell":
+            vp = np.zeros((m, store.K), np.float32)
+            vp[:n] = store.vals
+            cp = np.zeros((m, store.K), np.int32)
+            cp[:n] = store.cols
+            dargs = (self._put(vp), self._put(cp))
+        else:
+            Xp = np.zeros((m, store.n_features), np.float32)
+            Xp[:n] = store.X
+            dargs = (self._put(Xp),)
+        g = recon(*dargs, self._put(pad1(y)), self._put(pad1(alpha)),
                   self._put(np.zeros((m,), np.float32)),
                   self._put(stale_mask))
         return np.asarray(g)[stale]

@@ -69,3 +69,47 @@ def reconstruct_gamma(kernel: str, X: np.ndarray, y: np.ndarray,
                          Xsv_d, coef_d, jnp.float32(inv_2s2))
         out[s: s + blk.size] = np.asarray(g)[: blk.size]
     return out
+
+
+def reconstruct_gamma_store(kernel: str, store, y: np.ndarray,
+                            alpha: np.ndarray, rows: np.ndarray,
+                            inv_2s2: float, row_block: int = 8192,
+                            sv_block: int = 8192) -> np.ndarray:
+    """Alg. 6 over a data-plane store (dense or block-ELL).
+
+    Dense stores delegate to :func:`reconstruct_gamma`. ELL stores densify
+    *blocks* on the fly — (row_block, d) stale rows x (sv_block, d) support
+    vectors — so storage stays sparse and peak dense scratch is bounded by
+    the block sizes, never N*d (the paper's Fig. 1b memory argument holds
+    through reconstruction).
+    """
+    if store.fmt == "dense":
+        return reconstruct_gamma(kernel, store.X, y, alpha, rows, inv_2s2,
+                                 row_block)
+    if rows.size == 0:
+        return np.zeros((0,), np.float32)
+    sv_idx = np.flatnonzero(alpha > 0.0)
+    if sv_idx.size == 0:
+        return (-y[rows]).astype(np.float32)
+
+    d = store.n_features
+    out = np.empty((rows.size,), np.float32)
+    for s in range(0, rows.size, row_block):
+        blk = rows[s: s + row_block]
+        nb = _bucket(blk.size)
+        Xi = np.zeros((nb, d), np.float32)
+        Xi[: blk.size] = store.dense_rows(blk)
+        Xi_d = jnp.asarray(Xi)
+        acc = np.zeros((nb,), np.float32)
+        for t in range(0, sv_idx.size, sv_block):
+            sub = sv_idx[t: t + sv_block]
+            nsv = _bucket(sub.size)
+            Xsv = np.zeros((nsv, d), np.float32)
+            Xsv[: sub.size] = store.dense_rows(sub)
+            coef = np.zeros((nsv,), np.float32)
+            coef[: sub.size] = (alpha[sub] * y[sub]).astype(np.float32)
+            acc += np.asarray(_recon_block(
+                kernel, Xi_d, jnp.zeros((nb,), jnp.float32),
+                jnp.asarray(Xsv), jnp.asarray(coef), jnp.float32(inv_2s2)))
+        out[s: s + blk.size] = acc[: blk.size] - y[blk]
+    return out

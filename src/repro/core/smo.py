@@ -131,7 +131,8 @@ def wss2_select_low(gamma, alpha, y, active, C, g_up, row_up, kdiag, k_uu):
 
 def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
                       shrink_interval: int, use_pallas: bool = False,
-                      shrink_min_interval: int = 1, selection: str = "wss1"):
+                      shrink_min_interval: int = 1, selection: str = "wss1",
+                      fmt: str = "dense"):
     """Build the jitted chunk: run up to ``max_iters`` SMO iterations or until
     beta_up + tol >= beta_low over the active set.
 
@@ -143,17 +144,34 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
     'wss2' = second-order pair selection — fewer iterations at the price of
     two kernel-row passes per iteration instead of one fused two-row pass
     (the selection of i_low depends on the i_up row).
+
+    ``fmt`` selects the sample storage the chunk consumes: 'dense' takes a
+    ``dataplane.DenseData`` buffer, 'ell' a ``dataplane.ELLData`` one (the
+    paper's sparse-format storage, Sec. 2.2). Working-set rows travel dense
+    either way — O(d) per iteration — while the M-row kernel sweeps stay in
+    the buffer's native format.
     """
-    rows2 = kernel_fns.get_rows2(kernel)
     row1 = kernel_fns.get_row(kernel)
     kself = kernel_fns.self_kernel(kernel)
+    if fmt == "ell":
+        ell_rows2 = kernel_fns.get_ell_rows2(kernel)
+        ell_row1 = kernel_fns.get_ell_row(kernel)
+    else:
+        rows2 = kernel_fns.get_rows2(kernel)
     if use_pallas:
         from repro.kernels import ops as kops  # deferred: optional dependency
 
-    @functools.partial(jax.jit, static_argnames=("max_iters",), donate_argnums=(3,))
-    def run_chunk(X, y, sq_norms, state: SMOState, tol: jax.Array,
+    def krow(data, z):
+        """Full kernel row K(z, buffer) in the buffer's storage format."""
+        if fmt == "ell":
+            return ell_row1(data.vals, data.cols, data.sq_norms, z, inv_2s2)
+        return row1(data.X, data.sq_norms, z, inv_2s2)
+
+    @functools.partial(jax.jit, static_argnames=("max_iters",), donate_argnums=(2,))
+    def run_chunk(data, y, state: SMOState, tol: jax.Array,
                   max_iters: int) -> SMOState:
         start = state.step
+        sq_norms = data.sq_norms
 
         def cond(s: SMOState):
             return (~s.converged) & (~s.stalled) & (s.step - start < max_iters)
@@ -167,20 +185,20 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
 
         def body(s: SMOState) -> SMOState:
             iu = s.i_up
-            x_up = X[iu]
+            x_up = data.dense_row(iu)
             y_up = y[iu]
             a_up = s.alpha[iu]
             k_uu = kself(x_up, inv_2s2)
 
             if selection == "wss2":
-                row_up = row1(X, sq_norms, x_up, inv_2s2)       # (M,)
+                row_up = krow(data, x_up)                       # (M,)
                 il, _ = wss2_select_low(s.gamma, s.alpha, y, s.active, C,
                                         s.beta_up, row_up, kdiag, k_uu)
                 g_low = s.gamma[il]
             else:
                 il = s.i_low
                 g_low = s.beta_low
-            x_low = X[il]
+            x_low = data.dense_row(il)
             y_low = y[il]
             a_low = s.alpha[il]
 
@@ -201,14 +219,22 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
             alpha = s.alpha.at[iu].set(a_up_new).at[il].set(a_low_new)
             # Eq. 6 — fused dual-row FMA; gamma kept for every buffer row.
             coef2 = jnp.stack([y_up * d_up, y_low * d_low])
-            if use_pallas:
+            if use_pallas and fmt == "ell":
+                gamma = kops.ell_fused_gamma_update(
+                    kernel, data.vals, data.cols, sq_norms, s.gamma, z2,
+                    coef2, inv_2s2)
+            elif use_pallas:
                 gamma = kops.fused_gamma_update(
-                    kernel, X, sq_norms, s.gamma, z2, coef2, inv_2s2)
+                    kernel, data.X, sq_norms, s.gamma, z2, coef2, inv_2s2)
             elif selection == "wss2":
-                row_low = row1(X, sq_norms, x_low, inv_2s2)
+                row_low = krow(data, x_low)
                 gamma = s.gamma + coef2[0] * row_up + coef2[1] * row_low
+            elif fmt == "ell":
+                rows = ell_rows2(data.vals, data.cols, sq_norms, z2,
+                                 inv_2s2)                       # (M, 2)
+                gamma = s.gamma + rows @ coef2
             else:
-                rows = rows2(X, sq_norms, z2, inv_2s2)          # (M, 2)
+                rows = rows2(data.X, sq_norms, z2, inv_2s2)     # (M, 2)
                 gamma = s.gamma + rows @ coef2
 
             # Alg. 4 / Sec. 3.3.1: apply Eq. 10 when the counter fires.

@@ -27,6 +27,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import dataplane
 from repro.core import heuristics as H
 from repro.core import kernel_fns, reconstruct, smo
 
@@ -41,6 +42,12 @@ class SVMConfig:
     selection: str = "wss1"      # 'wss2': second-order pair selection (the
                                  # paper's stated future work; fewer
                                  # iterations, 2 kernel-row passes/iter)
+    format: str = "dense"        # sample storage: 'dense' | 'ell' (block-ELL
+                                 # sparse, paper Sec. 2.2; wins memory when
+                                 # density < d / 2K)
+    ell_K: "int | None" = None   # ELL nonzero budget per row; default = max
+                                 # row nnz rounded up to ``ell_lane``
+    ell_lane: int = 128          # TPU lane multiple for the ELL K padding
     max_iters: int = 4_000_000
     chunk_iters: int = 256       # jitted while_loop segment length; smaller
                                  # chunks let physical compaction engage
@@ -82,19 +89,41 @@ class FitStats:
 @dataclasses.dataclass
 class SVMModel:
     config: SVMConfig
-    sv_x: np.ndarray             # (n_sv, d)
+    sv_x: "np.ndarray | None"    # (n_sv, d); None when SVs are stored ELL
     sv_coef: np.ndarray          # (n_sv,)  alpha_i * y_i
     beta: float
     alpha: np.ndarray            # (N,) full multipliers (diagnostics)
     stats: FitStats
+    sv_vals: "np.ndarray | None" = None   # (n_sv, K) ELL support vectors
+    sv_cols: "np.ndarray | None" = None   # (n_sv, K)
+    n_features: "int | None" = None       # d (set for ELL models)
+
+    def _sv_kernel_fn(self):
+        """jitted z_block -> K(z_block, SVs) in the SV storage format."""
+        cfg = self.config
+        if self.sv_vals is not None:
+            vals = jnp.asarray(self.sv_vals)
+            cols = jnp.asarray(self.sv_cols)
+            sq = jnp.sum(vals * vals, axis=-1)
+            return jax.jit(lambda z: kernel_fns.ell_cross_kernel(
+                cfg.kernel, z, vals, cols, sq, cfg.inv_2s2))
+        svx = jnp.asarray(self.sv_x)
+        return jax.jit(lambda z: kernel_fns.full_kernel_matrix(
+            cfg.kernel, z, svx, cfg.inv_2s2))
+
+    def _sv_dense(self) -> np.ndarray:
+        """Support vectors as a dense (n_sv, d) block (query side of K)."""
+        if self.sv_vals is None:
+            return self.sv_x
+        store = dataplane.ELLStore(self.sv_vals, self.sv_cols,
+                                   self.n_features)
+        return store.dense_rows(np.arange(self.sv_vals.shape[0]))
 
     def decision_function(self, Z: np.ndarray, block: int = 8192) -> np.ndarray:
-        cfg = self.config
         out = np.empty((Z.shape[0],), np.float32)
-        svx = jnp.asarray(self.sv_x)
         coef = jnp.asarray(self.sv_coef)
-        f = jax.jit(lambda z: kernel_fns.full_kernel_matrix(
-            cfg.kernel, z, svx, cfg.inv_2s2) @ coef - self.beta)
+        kf = self._sv_kernel_fn()
+        f = jax.jit(lambda z: kf(z) @ coef - self.beta)
         for s in range(0, Z.shape[0], block):
             zb = Z[s: s + block]
             pad = block - zb.shape[0]
@@ -109,10 +138,7 @@ class SVMModel:
 
     def dual_objective(self) -> float:
         """L_D (Eq. 1) over the support set — used by tests/benchmarks."""
-        cfg = self.config
-        K = np.asarray(kernel_fns.full_kernel_matrix(
-            cfg.kernel, jnp.asarray(self.sv_x), jnp.asarray(self.sv_x),
-            cfg.inv_2s2))
+        K = np.asarray(self._sv_kernel_fn()(jnp.asarray(self._sv_dense())))
         a = np.abs(self.sv_coef)           # alpha (coef = alpha*y)
         return float(a.sum() - 0.5 * self.sv_coef @ K @ self.sv_coef)
 
@@ -135,17 +161,19 @@ class SMOSolver:
     # -- backend hooks (overridden by repro.core.parallel) --------------------
     def _runner(self, cfg: SVMConfig, interval: int):
         key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas,
-               cfg.selection)
+               cfg.selection, cfg.format)
         if key not in _RUNNER_CACHE:
             _RUNNER_CACHE[key] = smo.make_chunk_runner(
                 cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas,
-                selection=cfg.selection)
+                selection=cfg.selection, fmt=cfg.format)
         return _RUNNER_CACHE[key]
 
-    def _reconstruct(self, X, y, alpha, stale):
-        """Alg. 6 for global row indices ``stale``; host-blocked baseline."""
-        return reconstruct.reconstruct_gamma(
-            self.cfg.kernel, X, y, alpha, stale, self.cfg.inv_2s2)
+    def _reconstruct(self, y, alpha, stale):
+        """Alg. 6 for global row indices ``stale``; host-blocked baseline.
+        Consumes the data-plane store, so ELL storage streams densified
+        blocks instead of materializing a dense X."""
+        return reconstruct.reconstruct_gamma_store(
+            self.cfg.kernel, self._store, y, alpha, stale, self.cfg.inv_2s2)
 
     # -- buffer plumbing -----------------------------------------------------
     def _nshards(self) -> int:
@@ -155,19 +183,20 @@ class SMOSolver:
         """Device placement hook; the parallel subclass shards over the mesh."""
         return jnp.asarray(arr)
 
-    def _make_buffer(self, X, y, alpha, gamma, idx):
-        """Gather rows ``idx`` into a padded buffer of p balanced shards.
+    def _make_buffer(self, y, alpha, gamma, idx):
+        """Gather rows ``idx`` from the host store into a padded buffer of p
+        balanced shards.
 
-        Returns (data arrays, fresh state, idx_buf) where idx_buf maps buffer
-        row -> global sample index (-1 on padding rows). Active rows are
-        distributed contiguously and evenly across shards — the paper's
-        "load balancing ... requires contiguous data movement of samples"
-        (Sec. 3.1.2).
+        Returns (data, y_buf, fresh state, idx_buf) where ``data`` is the
+        device-side DenseData/ELLData buffer and idx_buf maps buffer row ->
+        global sample index (-1 on padding rows). Active rows are distributed
+        contiguously and evenly across shards — the paper's "load balancing
+        ... requires contiguous data movement of samples" (Sec. 3.1.2).
         """
         p = self._nshards()
         m_per = _bucket(-(-idx.size // p), max(self.cfg.min_buffer // p, 8))
         m = m_per * p
-        Xb = np.zeros((m, X.shape[1]), np.float32)
+        buf = self._store.alloc(m)
         yb = np.ones((m,), np.float32)          # padding: y=+1, alpha=0 -> I1
         ab = np.zeros((m,), np.float32)
         gb = np.full((m,), np.inf, np.float32)  # padding gamma never selected
@@ -179,14 +208,14 @@ class SMOSolver:
             cnt = base + (1 if q < extra else 0)
             sl = slice(q * m_per, q * m_per + cnt)
             sub = idx[off: off + cnt]
-            Xb[sl] = X[sub]
+            self._store.fill(buf, sl, sub)
             yb[sl] = y[sub]
             ab[sl] = alpha[sub]
             gb[sl] = gamma[sub]
             valid[sl] = True
             idx_buf[sl] = sub
             off += cnt
-        sq = (Xb * Xb).sum(axis=1).astype(np.float32)
+        data = self._store.to_device(buf, self._put)
         state = smo.SMOState(
             alpha=self._put(ab), gamma=self._put(gb),
             active=self._put(valid),
@@ -195,7 +224,7 @@ class SMOSolver:
             step=jnp.int32(0), next_shrink=jnp.int32(0),
             n_shrinks=jnp.int32(0), converged=jnp.bool_(False),
             stalled=jnp.bool_(False))
-        return (self._put(Xb), self._put(yb), self._put(sq)), state, idx_buf
+        return data, self._put(yb), state, idx_buf
 
     # -- fault tolerance -------------------------------------------------
     def _save_ckpt(self, alpha, gamma, act_full, meta: dict):
@@ -229,6 +258,9 @@ class SMOSolver:
         y = np.ascontiguousarray(y, np.float32)
         n, d = X.shape
         assert set(np.unique(y)) <= {-1.0, 1.0}, "labels must be +-1"
+        self._store = dataplane.make_store(X, cfg.format, cfg.ell_K,
+                                           cfg.ell_lane)
+        del X                                  # train from the store only
 
         alpha = np.zeros((n,), np.float32)
         gamma = (-y).astype(np.float32)
@@ -261,8 +293,8 @@ class SMOSolver:
             idx = np.flatnonzero(act_full0)
         else:
             idx = np.arange(n)
-        (Xb, yb, sqb), state, idx = self._make_buffer(X, y, alpha, gamma, idx)
-        stats.buffer_sizes.append(int(Xb.shape[0]))
+        data, yb, state, idx = self._make_buffer(y, alpha, gamma, idx)
+        stats.buffer_sizes.append(data.m)
         state = state._replace(step=jnp.int32(step0),
                                n_shrinks=jnp.int32(nshr0))
         if interval > 0:
@@ -275,16 +307,17 @@ class SMOSolver:
             while True:
                 tc = time.perf_counter()
                 step_before = int(state.step)
-                state = runner(Xb, yb, sqb, state, tol,
+                state = runner(data, yb, state, tol,
                                min(cfg.chunk_iters,
                                    max(1, cfg.max_iters - int(state.step))))
                 state.converged.block_until_ready()
                 t_train += time.perf_counter() - tc
                 n_active = int(jnp.sum(state.active))
                 stats.min_active = min(stats.min_active, n_active)
-                # hot-loop model FLOPs: per iter ~ M*(4d + 10) (2-row GEMM+exp+FMA)
+                # hot-loop model FLOPs: per iter ~ M * per-row cost of the
+                # fused two-row gamma update (format-dependent)
                 stats.flops_est += (int(state.step) - step_before) * \
-                    float(Xb.shape[0]) * (4.0 * d + 10.0)
+                    float(data.m) * data.flops_per_row()
                 if cfg.checkpoint_dir:
                     ckpt_count += 1
                     if ckpt_count % cfg.checkpoint_every == 0:
@@ -301,22 +334,23 @@ class SMOSolver:
                 if bool(state.converged) or bool(state.stalled) or \
                         int(state.step) >= cfg.max_iters:
                     break
-                # physical compaction between chunks (DESIGN.md SS4)
-                if shrink_on and n_active < cfg.compact_ratio * Xb.shape[0] \
+                # physical compaction between chunks (DESIGN.md SS4) — moves
+                # rows in the store's native format (ELL: 2K+1 floats/row)
+                if shrink_on and n_active < cfg.compact_ratio * data.m \
                         and _bucket(-(-n_active // self._nshards()),
                                     max(cfg.min_buffer // self._nshards(), 8)) \
-                        * self._nshards() < Xb.shape[0]:
+                        * self._nshards() < data.m:
                     alpha, gamma = self._writeback(state, idx, alpha, gamma)
                     keep_mask = (idx >= 0) & np.asarray(state.active)
                     keep = idx[keep_mask]
-                    (Xb, yb, sqb), state2, idx = self._make_buffer(
-                        X, y, alpha, gamma, keep)
+                    data, yb, state2, idx = self._make_buffer(
+                        y, alpha, gamma, keep)
                     state = state2._replace(
                         step=state.step,
                         next_shrink=state.step + max(1, min(interval, keep.size)),
                         n_shrinks=state.n_shrinks)
                     stats.compactions += 1
-                    stats.buffer_sizes.append(int(Xb.shape[0]))
+                    stats.buffer_sizes.append(data.m)
             stalled = stalled or bool(state.stalled)
             stats.shrink_events += int(state.n_shrinks)
             alpha, gamma = self._writeback(state, idx, alpha, gamma)
@@ -331,7 +365,7 @@ class SMOSolver:
             live = (idx >= 0) & np.asarray(state.active)
             act[idx[live]] = True
             stale = np.flatnonzero(~act)
-            gamma[stale] = self._reconstruct(X, y, alpha, stale)
+            gamma[stale] = self._reconstruct(y, alpha, stale)
             t_recon += time.perf_counter() - tr
             recon_count += 1
 
@@ -342,9 +376,9 @@ class SMOSolver:
                 break
             # un-shrink: rebuild full buffer; Single disables shrinking
             step_save, nshr = int(state.step), int(state.n_shrinks)
-            (Xb, yb, sqb), state, idx = self._make_buffer(
-                X, y, alpha, gamma, np.arange(n))
-            stats.buffer_sizes.append(int(Xb.shape[0]))
+            data, yb, state, idx = self._make_buffer(
+                y, alpha, gamma, np.arange(n))
+            stats.buffer_sizes.append(data.m)
             if h.policy == "single":
                 shrink_on = False
                 runner = self._runner(cfg, 0)
@@ -371,8 +405,14 @@ class SMOSolver:
         stats.converged = bool(b_up + 2 * cfg.eps >= b_low)
         stats.stalled = stalled
         stats.final_gap = float(b_low - b_up)
-        return SVMModel(cfg, X[sv].copy(), (alpha[sv] * y[sv]).astype(np.float32),
-                        beta, alpha, stats)
+        coef = (alpha[sv] * y[sv]).astype(np.float32)
+        if self._store.fmt == "ell":
+            return SVMModel(cfg, None, coef, beta, alpha, stats,
+                            sv_vals=self._store.vals[sv].copy(),
+                            sv_cols=self._store.cols[sv].copy(),
+                            n_features=self._store.n_features)
+        return SVMModel(cfg, self._store.X[sv].copy(), coef, beta, alpha,
+                        stats)
 
     @staticmethod
     def _writeback(state: smo.SMOState, idx: np.ndarray,

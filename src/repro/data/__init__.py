@@ -1,5 +1,5 @@
 """Data substrate: synthetic dataset generators (paper Table 2 stand-ins),
 sparse CSR/block-ELL formats, deterministic LM token pipeline."""
-from repro.data.synthetic import SPECS, DatasetSpec, make, density
+from repro.data.synthetic import SPECS, DatasetSpec, make, make_sparse, density
 from repro.data.sparse import CSRMatrix, ELLMatrix, to_csr, to_ell, csr_space_report
 from repro.data.tokens import TokenPipeline

@@ -86,12 +86,12 @@ def to_ell(X: np.ndarray, K: int | None = None, lane: int = 128) -> ELLMatrix:
         K = max(lane, -(-kmax // lane) * lane)
     if kmax > K:
         raise ValueError(f"row with {kmax} nnz exceeds K={K}")
-    vals = np.zeros((n, K), np.float32)
-    cols = np.zeros((n, K), np.int32)
-    for i in range(n):
-        c = np.nonzero(mask[i])[0]
-        vals[i, : c.size] = X[i, c]
-        cols[i, : c.size] = c
+    # stable argsort of ~mask packs each row's nonzero columns (in order)
+    # into the first slots; the padding tail is masked to (val=0, col=0)
+    order = np.argsort(~mask, axis=1, kind="stable")[:, :K]
+    taken = np.take_along_axis(mask, order, axis=1)
+    vals = np.take_along_axis(X, order, axis=1).astype(np.float32) * taken
+    cols = (order * taken).astype(np.int32)
     return ELLMatrix(vals, cols, (n, d))
 
 

@@ -84,19 +84,18 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kernel = functools.partial(_fa_kernel, scale=scale, causal=causal,
                                block_q=block_q, block_k=block_k)
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-        scratch = [pltpu.VMEM((block_q, 1), jnp.float32),
-                   pltpu.VMEM((block_q, 1), jnp.float32),
-                   pltpu.VMEM((block_q, Dh), jnp.float32)]
-        params = dict(
-            compiler_params=pltpu.CompilerParams(
-                dimension_semantics=("parallel", "parallel", "arbitrary")))
-    except Exception:  # pragma: no cover - non-TPU pallas builds
-        scratch = [pl.MemorySpace.ANY] * 3
-        params = {}
-    if interpret:
-        params = {}
+    from jax.experimental.pallas import tpu as pltpu
+    # VMEM scratch works both compiled and in interpret mode on every JAX we
+    # support; the compiler-params class was renamed across 0.4 -> 0.5
+    # (TPUCompilerParams -> CompilerParams).
+    scratch = [pltpu.VMEM((block_q, 1), jnp.float32),
+               pltpu.VMEM((block_q, 1), jnp.float32),
+               pltpu.VMEM((block_q, Dh), jnp.float32)]
+    cp_cls = getattr(pltpu, "CompilerParams",
+                     getattr(pltpu, "TPUCompilerParams", None))
+    params = {} if (interpret or cp_cls is None) else dict(
+        compiler_params=cp_cls(
+            dimension_semantics=("parallel", "parallel", "arbitrary")))
 
     return pl.pallas_call(
         kernel,

@@ -73,17 +73,53 @@ def fused_gamma_update(kernel: str, X: jax.Array, sq_norms: jax.Array,
                             block_m=bm, interpret=_interpret())
 
 
-def ell_kernel_row(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
-                   z: jax.Array, inv_2s2) -> jax.Array:
-    n, K = vals.shape
+def _pick_ell_block_m(n: int) -> int:
     bm = 512
     while bm > 64 and n % bm != 0:
         bm //= 2
-    if n % bm != 0:
+    return bm if n % bm == 0 else 0
+
+
+def ell_kernel_row(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                   z: jax.Array, inv_2s2) -> jax.Array:
+    bm = _pick_ell_block_m(vals.shape[0])
+    if bm == 0:
         return ref.ell_kernel_row(vals, cols, sq_norms, z, inv_2s2)
     return _se.ell_kernel_row(_pad_cols(vals), _pad_cols(cols), sq_norms, z,
                               jnp.asarray(inv_2s2, jnp.float32),
                               block_m=bm, interpret=_interpret())
+
+
+def ell_kernel_rows2(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                     z2: jax.Array, inv_2s2) -> jax.Array:
+    """(N, 2) RBF rows on ELL storage; Pallas when N divides a block."""
+    bm = _pick_ell_block_m(vals.shape[0])
+    if bm == 0:
+        return ref.ell_kernel_rows2(vals, cols, sq_norms, z2, inv_2s2)
+    return _se.ell_kernel_rows2(_pad_cols(vals), _pad_cols(cols), sq_norms,
+                                _pad_cols(z2),
+                                jnp.asarray(inv_2s2, jnp.float32),
+                                block_m=bm, interpret=_interpret())
+
+
+def ell_fused_gamma_update(kernel: str, vals: jax.Array, cols: jax.Array,
+                           sq_norms: jax.Array, gamma: jax.Array,
+                           z2: jax.Array, coef2: jax.Array,
+                           inv_2s2) -> jax.Array:
+    """Fused Eq. 6 on ELL storage; oracle fallback off-grid / non-RBF."""
+    bm = _pick_ell_block_m(vals.shape[0])
+    if kernel != "rbf" or bm == 0:
+        if kernel == "rbf":
+            return ref.ell_gamma_update(vals, cols, sq_norms, gamma, z2,
+                                        coef2, inv_2s2)
+        from repro.core import kernel_fns
+        rows = kernel_fns.get_ell_rows2(kernel)(vals, cols, sq_norms, z2,
+                                                inv_2s2)
+        return gamma + rows @ coef2
+    return _se.ell_gamma_update(_pad_cols(vals), _pad_cols(cols), sq_norms,
+                                gamma, _pad_cols(z2), coef2,
+                                jnp.asarray(inv_2s2, jnp.float32),
+                                block_m=bm, interpret=_interpret())
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))

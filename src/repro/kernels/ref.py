@@ -41,6 +41,24 @@ def ell_kernel_row(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
     return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
 
 
+def ell_kernel_rows2(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                     z2: jax.Array, inv_2s2: float) -> jax.Array:
+    """RBF rows for two queries against block-ELL samples. (N, 2)."""
+    zg = jnp.take(z2, cols, axis=1)              # (2, N, K)
+    dots = jnp.einsum("nk,jnk->nj", vals, zg)    # (N, 2)
+    zn = jnp.sum(z2 * z2, axis=-1)
+    d2 = sq_norms[:, None] - 2.0 * dots + zn[None, :]
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
+def ell_gamma_update(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                     gamma: jax.Array, z2: jax.Array, coef2: jax.Array,
+                     inv_2s2: float) -> jax.Array:
+    """Fused Eq. 6 on ELL storage (oracle for the Pallas kernel)."""
+    k = ell_kernel_rows2(vals, cols, sq_norms, z2, inv_2s2)
+    return gamma + k @ coef2
+
+
 def mha(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
         scale: float | None = None) -> jax.Array:
     """Reference attention. q: (B, Lq, H, Dh), k/v: (B, Lk, Hkv, Dh) with

@@ -57,3 +57,84 @@ def ell_kernel_row(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
         interpret=interpret,
     )(vals, cols, sq_norms.reshape(1, n), z.reshape(1, d), zz_inv)
     return out.reshape(n)
+
+
+def _ell_rows2_body(vals_ref, cols_ref, sq_ref, z2_ref, inv_ref):
+    """Shared compute: the (2, bm) RBF rows for one ELL tile."""
+    vals = vals_ref[...]                             # (bm, K)
+    cols = cols_ref[...]                             # (bm, K) int32
+    z2 = z2_ref[...]                                 # (2, d)
+    g0 = jnp.take(z2[0], cols, axis=0)               # (bm, K) vector gather
+    g1 = jnp.take(z2[1], cols, axis=0)
+    dots = jnp.stack([jnp.sum(vals * g0, axis=1),
+                      jnp.sum(vals * g1, axis=1)])   # (2, bm)
+    zn = jnp.sum(z2 * z2, axis=1)                    # (2,)
+    d2 = sq_ref[...] - 2.0 * dots + zn[:, None]      # (2, bm)
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_ref[0, 0])
+
+
+def _ell_rows2_kernel(vals_ref, cols_ref, sq_ref, z2_ref, inv_ref, out_ref):
+    out_ref[...] = _ell_rows2_body(vals_ref, cols_ref, sq_ref, z2_ref, inv_ref)
+
+
+def _ell_gamma_kernel(vals_ref, cols_ref, sq_ref, g_ref, z2_ref, coef_ref,
+                      inv_ref, out_ref):
+    k = _ell_rows2_body(vals_ref, cols_ref, sq_ref, z2_ref, inv_ref)
+    out_ref[...] = g_ref[...] + jnp.sum(k * coef_ref[...], axis=0,
+                                        keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def ell_kernel_rows2(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                     z2: jax.Array, inv_2s2: jax.Array, *, block_m: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """Fused two-row RBF over block-ELL samples: one (vals, cols) stream for
+    both working-set rows. Returns (N, 2) = K([z_up; z_low], X).T."""
+    n, K = vals.shape
+    d = z2.shape[1]
+    assert n % block_m == 0, (n, block_m)
+    out = pl.pallas_call(
+        _ell_rows2_kernel,
+        grid=(n // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_m), lambda i: (0, i)),
+            pl.BlockSpec((2, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, n), jnp.float32),
+        interpret=interpret,
+    )(vals, cols, sq_norms.reshape(1, n), z2, inv_2s2.reshape(1, 1))
+    return out.T
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def ell_gamma_update(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                     gamma: jax.Array, z2: jax.Array, coef2: jax.Array,
+                     inv_2s2: jax.Array, *, block_m: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """Fused Eq. 6 on ELL storage: gamma += c_up*K(z_up, X) + c_low*K(z_low, X)
+    in one pass over the (vals, cols) stream. Returns (N,)."""
+    n, K = vals.shape
+    d = z2.shape[1]
+    assert n % block_m == 0, (n, block_m)
+    out = pl.pallas_call(
+        _ell_gamma_kernel,
+        grid=(n // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_m), lambda i: (0, i)),
+            pl.BlockSpec((1, block_m), lambda i: (0, i)),
+            pl.BlockSpec((2, d), lambda i: (0, 0)),
+            pl.BlockSpec((2, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(vals, cols, sq_norms.reshape(1, n), gamma.reshape(1, n), z2,
+      coef2.reshape(2, 1), inv_2s2.reshape(1, 1))
+    return out.reshape(n)

@@ -121,7 +121,7 @@ def lower_cell(arch: str, shape_name: str, mesh, verbose: bool = True,
         step = train_lib.make_train_step(
             cfg, adamw.AdamWConfig(), mesh,
             accum_steps=accum if tier == "full" else 1)
-        with jax.set_mesh(mesh):
+        with mesh_lib.set_mesh(mesh):
             lowered = jax.jit(
                 step,
                 in_shardings=(p_sh, o_sh, b_sh),
@@ -135,7 +135,7 @@ def lower_cell(arch: str, shape_name: str, mesh, verbose: bool = True,
             cfg, mesh, batch_sds)
         step = train_lib.make_prefill_step(cfg)
         out_sh = _tok_out_sharding(mesh, shape.global_batch)
-        with jax.set_mesh(mesh):
+        with mesh_lib.set_mesh(mesh):
             lowered = jax.jit(
                 step, in_shardings=(p_sh, b_sh), out_shardings=out_sh,
             ).lower(p_shapes, batch_sds)
@@ -148,7 +148,7 @@ def lower_cell(arch: str, shape_name: str, mesh, verbose: bool = True,
             cfg, mesh, shape.global_batch, shape.seq_len)
         step = train_lib.make_serve_step(cfg)
         out_sh = _tok_out_sharding(mesh, shape.global_batch)
-        with jax.set_mesh(mesh):
+        with mesh_lib.set_mesh(mesh):
             lowered = jax.jit(
                 step, in_shardings=(p_sh, c_sh, b_sh),
                 out_shardings=(out_sh, c_sh), donate_argnums=(1,),

@@ -9,6 +9,52 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """Version-compatible ``jax.make_mesh``.
+
+    JAX >= 0.5 grew an ``axis_types`` kwarg (and ``jax.sharding.AxisType``);
+    0.4.x has neither. All meshes in this repo want Auto axes — exactly the
+    0.4.x default — so we pass ``axis_types`` only where it exists.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names),
+                devices=devices)
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def set_mesh(mesh):
+    """Version-compatible ambient-mesh context.
+
+    ``jax.set_mesh`` arrived after 0.4.x; there the ``Mesh`` object itself
+    is the context manager that installs the ambient mesh.
+    """
+    sm = getattr(jax, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    return mesh
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """Version-compatible ``shard_map`` with replication checking off.
+
+    JAX >= 0.7 exposes ``jax.shard_map(..., check_vma=...)``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
 
@@ -21,16 +67,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     import numpy as np
     need = int(np.prod(shape))
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[:need])
+    return make_mesh(shape, axes, devices=jax.devices()[:need])
 
 
 def make_host_mesh(max_devices: int | None = None):
     """Whatever this host offers, as a 1D 'data' mesh (tests/examples)."""
     n = len(jax.devices()) if max_devices is None else max_devices
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), ("data",))
 
 
 def batch_axes(mesh) -> tuple:

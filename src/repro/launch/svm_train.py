@@ -18,6 +18,8 @@ def main():
     ap.add_argument("--parallel", action="store_true",
                     help="shard_map over all visible devices")
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--format", default="dense", choices=("dense", "ell"),
+                    help="sample storage: dense or block-ELL sparse")
     args = ap.parse_args()
 
     from repro.core import SMOSolver, SVMConfig
@@ -28,7 +30,7 @@ def main():
     cfg = SVMConfig(C=spec.C, sigma2=spec.sigma2, eps=args.eps,
                     heuristic=args.heuristic, chunk_iters=args.chunk_iters,
                     checkpoint_dir=args.ckpt_dir, resume=args.resume,
-                    use_pallas=args.use_pallas)
+                    use_pallas=args.use_pallas, format=args.format)
     if args.parallel:
         from repro.core.parallel import ParallelSMOSolver
         solver = ParallelSMOSolver(cfg)

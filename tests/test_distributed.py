@@ -53,7 +53,7 @@ def test_parallel_smo_equals_sequential_8dev():
 def test_ring_reconstruction_matches_host_8dev():
     out = run_sub("""
         import numpy as np
-        from repro.core import SVMConfig
+        from repro.core import SVMConfig, dataplane
         from repro.core.parallel import ParallelSMOSolver
         from repro.core.reconstruct import reconstruct_gamma
         rng = np.random.default_rng(1)
@@ -63,7 +63,8 @@ def test_ring_reconstruction_matches_host_8dev():
         alpha = (rng.random(n) * (rng.random(n) < 0.3)).astype(np.float32)
         stale = np.flatnonzero(rng.random(n) < 0.5)
         s = ParallelSMOSolver(SVMConfig(sigma2=2.0))
-        ring = s._reconstruct(X, y, alpha, stale)
+        s._store = dataplane.DenseStore(X)
+        ring = s._reconstruct(y, alpha, stale)
         host = reconstruct_gamma('rbf', X, y, alpha, stale, 0.25)
         err = np.abs(ring - host).max()
         assert err < 1e-3, err
@@ -88,11 +89,12 @@ def test_sharded_train_step_and_elastic_restore_8dev(tmp_path):
         b = jax.tree.map(jnp.asarray, bnp)
 
         def run(mesh_shape, axes, steps, restore_dir=None):
-            mesh = jax.make_mesh(mesh_shape, axes,
-                axis_types=(jax.sharding.AxisType.Auto,)*len(axes),
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh(mesh_shape, axes,
                 devices=jax.devices()[:int(np.prod(mesh_shape))])
             psh, osh, bsh, (pshp, oshp) = train_lib.shardings_for(cfg, mesh, b)
-            with jax.set_mesh(mesh):
+            from repro.launch import mesh as meshlib
+            with meshlib.set_mesh(mesh):
                 if restore_dir:
                     params = ckpt.restore(restore_dir, 'params', pshp, psh)
                     opt = ckpt.restore(restore_dir, 'opt', oshp, osh)
@@ -131,14 +133,15 @@ def test_grad_compression_multipod_4dev():
         from repro.optim import adamw
 
         cfg = configs.smoke_config('llama3-8b')
-        mesh = jax.make_mesh((2, 2, 1), ('pod', 'data', 'model'),
-            axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2, 1), ('pod', 'data', 'model'))
         bnp = {'tokens': np.zeros((8, 32), np.int32),
                'targets': np.zeros((8, 32), np.int32)}
         b = jax.tree.map(jnp.asarray, bnp)
         model = build(cfg)
         psh, osh, bsh, (pshp, oshp) = train_lib.shardings_for(cfg, mesh, b)
-        with jax.set_mesh(mesh):
+        from repro.launch import mesh as meshlib
+        with meshlib.set_mesh(mesh):
             params = jax.jit(lambda k: model.init(cfg, k),
                              out_shardings=psh)(jax.random.PRNGKey(0))
             opt = jax.jit(adamw.init, out_shardings=osh)(params)

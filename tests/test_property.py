@@ -1,7 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")  # keep `pytest -x` green without the dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import smo

@@ -81,8 +81,8 @@ def test_async_save(tmp_path):
 # --------------------------------------------------------------- sharding
 def test_param_rules_divisibility_fallbacks():
     from repro.launch import sharding as shd
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     # shapes modeled on yi-34b: 56 heads don't divide 16; hd=128 does.
     spec = shd._spec_for("layers.wq", (60, 7168, 56, 128), _mesh16(),
                          shd._PARAM_RULES, ("data",))
@@ -107,8 +107,8 @@ def _mesh16():
 
 def test_batch_specs_nondivisible_replicates():
     from repro.launch import sharding as shd
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sds = {"tokens": jax.ShapeDtypeStruct((1, 8), jnp.int32)}
     specs = shd.batch_specs(sds, mesh)
     assert specs["tokens"] == P(("data",), None)
