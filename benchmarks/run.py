@@ -43,10 +43,10 @@ def main() -> None:
     for line in svm_figs.fig1b_space():
         print(line, flush=True)
 
-    # sparse data plane: ELL vs dense memory + per-iteration time (Fig. 1b)
+    # sparse data plane: dense vs fixed-K vs adaptive-K ELL (Fig. 1b)
     from benchmarks import sparse_bench
     kw = dict(n=512, d=1024) if args.quick else {}
-    for line in sparse_bench.bench_sparse(**kw):
+    for line in sparse_bench.csv_lines(sparse_bench.bench_sparse(**kw)):
         print(line, flush=True)
 
     if not (args.quick or args.no_scaling):

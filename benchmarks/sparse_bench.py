@@ -1,58 +1,109 @@
 """Sparse-format benchmark: ELL vs dense training storage (paper Fig. 1b).
 
-For each density in the sweep, builds a ``make_sparse`` dataset and reports
+For each density in the sweep, builds a ``make_sparse`` dataset and trains
+three configurations of the same problem:
 
-  * buffer memory of the dense vs block-ELL training buffers (the paper's
-    space-conservation argument, extended to our TPU block-ELL layout), and
-  * per-SMO-iteration wall time for both formats (same heuristic, same
-    convergence target), i.e. what the sparse data plane costs/saves in the
-    gamma-update hot loop.
+  * ``dense``        — dense sample buffers,
+  * ``ell-fixed``    — block-ELL with the PR-1 behavior: K pinned to the
+                       store-wide ingest budget (``ell_adaptive=False``),
+  * ``ell-adaptive`` — block-ELL with per-buffer K recompaction (the lane
+                       budget tracks the surviving rows at every physical
+                       compaction).
 
-CSV rows: ``sparse/<density>/<fmt>,us_per_iter,derived``.
+Reported per configuration: buffer memory of the initial training buffer,
+per-SMO-iteration wall time, iteration count, dual objective, and for ELL
+runs the K trajectory across buffer builds. CSV rows (stdout) keep the
+historical ``sparse/<density>/<fmt>,us_per_iter,derived`` shape; ``--out``
+additionally writes the full sweep as a JSON artifact (``BENCH_sparse.json``
+in CI) so the perf trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import json
 
-from repro.core import SMOSolver, SVMConfig, dataplane
+from repro.core import SMOSolver, SVMConfig
 from repro.data import make_sparse
 
 DENSITIES = (0.01, 0.05, 0.25)
 
+CONFIGS = (
+    ("dense", dict(format="dense")),
+    ("ell-fixed", dict(format="ell", ell_adaptive=False)),
+    ("ell-adaptive", dict(format="ell", ell_adaptive=True)),
+)
+
 
 def bench_sparse(n: int = 1024, d: int = 2048, densities=DENSITIES,
                  heuristic: str = "single1000", eps: float = 1e-3,
-                 seed: int = 0) -> list[str]:
-    lines = []
+                 seed: int = 0) -> list[dict]:
+    import jax.numpy as jnp
+    records = []
     for rho in densities:
         X, y = make_sparse(n, d, rho, seed=seed)
-        mem = {}
-        models = {}
-        for fmt in ("dense", "ell"):
+        by_name = {}
+        for name, overrides in CONFIGS:
             cfg = SVMConfig(C=4.0, sigma2=float(d) / 8.0, eps=eps,
                             heuristic=heuristic, chunk_iters=256,
-                            format=fmt)
+                            **overrides)
             solver = SMOSolver(cfg)
             m = solver.fit(X, y)
-            models[fmt] = m
             store = solver._store
-            buf = store.alloc(m.stats.buffer_sizes[0])
-            import jax.numpy as jnp
-            mem[fmt] = store.to_device(buf, jnp.asarray).memory_bytes()
-            us = (m.stats.train_time / max(m.stats.iterations, 1)) * 1e6
-            extra = "" if fmt == "dense" else \
-                f";K={store.K};mem_ratio={mem['ell'] / mem['dense']:.3f}"
-            lines.append(
-                f"sparse/{rho:g}/{fmt},{us:.1f},"
-                f"iters={m.stats.iterations};mem_bytes={mem[fmt]}"
-                f";obj={m.dual_objective():.4f}{extra}")
-        rel = abs(models["ell"].dual_objective() -
-                  models["dense"].dual_objective()) / \
-            max(abs(models["dense"].dual_objective()), 1e-9)
-        assert rel < 1e-2, f"ELL/dense objective diverged at rho={rho}: {rel}"
+            buf = store.alloc(m.stats.buffer_sizes[0],
+                              m.stats.buffer_K[0] if m.stats.buffer_K
+                              else None)
+            mem = store.to_device(buf, jnp.asarray).memory_bytes()
+            rec = {
+                "density": rho, "fmt": name, "n": n, "d": d,
+                "us_per_iter": (m.stats.train_time /
+                                max(m.stats.iterations, 1)) * 1e6,
+                "iterations": m.stats.iterations,
+                "mem_bytes": mem,
+                "obj": m.dual_objective(),
+                "compactions": m.stats.compactions,
+                "buffer_K": list(m.stats.buffer_K),
+            }
+            by_name[name] = rec
+            records.append(rec)
+        ref = by_name["dense"]["obj"]
+        for name in ("ell-fixed", "ell-adaptive"):
+            rel = abs(by_name[name]["obj"] - ref) / max(abs(ref), 1e-9)
+            assert rel < 1e-2, \
+                f"{name}/dense objective diverged at rho={rho}: {rel}"
+            by_name[name]["mem_ratio"] = \
+                by_name[name]["mem_bytes"] / by_name["dense"]["mem_bytes"]
+    return records
+
+
+def csv_lines(records: list[dict]) -> list[str]:
+    lines = []
+    for r in records:
+        extra = "" if r["fmt"] == "dense" else (
+            f";K={r['buffer_K'][0]};K_min={min(r['buffer_K'])}"
+            f";mem_ratio={r['mem_ratio']:.3f}")
+        lines.append(
+            f"sparse/{r['density']:g}/{r['fmt']},{r['us_per_iter']:.1f},"
+            f"iters={r['iterations']};mem_bytes={r['mem_bytes']}"
+            f";obj={r['obj']:.4f}{extra}")
     return lines
 
 
-if __name__ == "__main__":
-    for line in bench_sparse():
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="write the sweep as a JSON artifact")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem (CI-budget run)")
+    args = ap.parse_args(argv)
+    kw = dict(n=512, d=1024) if args.quick else {}
+    records = bench_sparse(**kw)
+    for line in csv_lines(records):
         print(line, flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"bench": "sparse", "records": records}, f, indent=1)
+        print(f"wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,13 +11,26 @@ driver one abstraction over both layouts:
     consume directly. ``n_features`` on ``ELLData`` is static metadata so
     rows can be densified under jit (working-set rows travel dense; they
     are O(d) per iteration against O(M*K) for the gamma pass).
-  * host side — ``DenseStore`` / ``ELLStore``: own the full training set in
-    numpy and gather arbitrary row subsets into padded device buffers. This
-    is what shrinking-driven physical compaction calls between chunks, so
-    compaction moves ELL rows (2K+1 floats) instead of dense rows (d+1).
+  * host side — ``DenseStore`` / ``ELLStore`` / ``CSRStore``: own the full
+    training set in numpy and gather arbitrary row subsets into padded
+    device buffers. This is what shrinking-driven physical compaction calls
+    between chunks, so compaction moves ELL rows (2K+1 floats) instead of
+    dense rows (d+1). ``CSRStore`` keeps the host copy in the paper's CSR
+    layout (Fig. 1c) and streams CSR->ELL on every buffer fill, so a
+    ``format='ell'`` fit never materializes a dense X on host.
+
+The ELL lane budget K is *adaptive*: stores report ``buffer_K(rows)`` — the
+max occupied-slot count over exactly the rows being gathered — and the
+solver re-derives K at every physical compaction, bucketed to a power-of-two
+number of ``lane``-wide groups (``data.sparse.bucket_lanes``) so the jit
+cache sees O(log) distinct K values rather than one per compaction. Sample
+elimination therefore shrinks *both* dimensions of the gamma-sweep hot loop:
+rows (M_active) and lanes (K_active).
 
 Memory rule of thumb: ELL wins whenever density < d / 2K — the paper's
-Fig. 1b argument in vector-friendly form.
+Fig. 1b argument in vector-friendly form. With adaptive K the rule tracks
+the *active set*: as easy samples (often the densest rows) are shrunk away,
+K drops and the crossover moves toward denser datasets mid-run.
 """
 from __future__ import annotations
 
@@ -26,6 +39,8 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.data import sparse as sp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,10 +124,14 @@ class DenseStore:
     def n_features(self) -> int:
         return self.X.shape[1]
 
-    def alloc(self, m: int):
+    def buffer_K(self, rows: np.ndarray) -> int:
+        """Dense buffers have no lane budget; kept for protocol uniformity."""
+        return 0
+
+    def alloc(self, m: int, K: "int | None" = None):
         return np.zeros((m, self.n_features), np.float32)
 
-    def fill(self, buf, sl: slice, rows: np.ndarray) -> None:
+    def fill(self, buf, sl, rows: np.ndarray) -> None:
         buf[sl] = self.X[rows]
 
     def to_device(self, buf, put) -> DenseData:
@@ -123,14 +142,72 @@ class DenseStore:
         return self.X[rows]
 
 
-class ELLStore:
-    """Host-side block-ELL training set (vals, cols padded to K nonzeros)."""
+class _EllFamilyStore:
+    """Shared buffer contract for stores that fill block-ELL device buffers.
+
+    Subclasses provide ``lane``, ``row_extent`` (per-row occupied slots),
+    ``n``, ``n_features``, ``K`` (the store-wide lane budget) and ``fill``;
+    everything that defines the (vals, cols) buffer shape and its device
+    form lives here so ELL and CSR host layouts cannot drift apart.
+
+    ``fill(buf, sl, rows)`` must accept ``sl`` as either a slice or a
+    row-index array (numpy subscript semantics): buffer builds pass
+    contiguous shard slices, the ring-payload builder passes scattered SV
+    positions.
+    """
     fmt = "ell"
 
-    def __init__(self, vals: np.ndarray, cols: np.ndarray, n_features: int):
+    def buffer_K(self, rows: np.ndarray) -> int:
+        """Lane-rounded max occupied extent over exactly ``rows``."""
+        k = int(self.row_extent[rows].max()) if rows.size else 0
+        return sp.round_lanes(k, self.lane)
+
+    def alloc(self, m: int, K: "int | None" = None):
+        K = self.K if K is None else int(K)
+        return (np.zeros((m, K), np.float32), np.zeros((m, K), np.int32))
+
+    def to_device(self, buf, put) -> ELLData:
+        vb, cb = buf
+        sq = (vb * vb).sum(axis=1).astype(np.float32)
+        return ELLData(put(vb), put(cb), put(sq), self.n_features)
+
+    def ell_rows(self, rows: np.ndarray, K: "int | None" = None):
+        """(vals, cols) for ``rows`` at lane budget K (default: their own
+        lane-rounded max extent) — SV extraction and ring payloads."""
+        if K is None:
+            K = self.buffer_K(rows)
+        buf = self.alloc(rows.size, K)
+        self.fill(buf, slice(0, rows.size), rows)
+        return buf
+
+    def dense_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Densify a row subset via a bounded ELL scratch block — Alg. 6
+        reconstruction streams these, so sparse storage never forces a
+        full dense materialization."""
+        rows = np.asarray(rows).reshape(-1)
+        vals, cols = self.ell_rows(rows)
+        out = np.zeros((rows.size, self.n_features), np.float32)
+        r = np.repeat(np.arange(rows.size), vals.shape[1])
+        np.add.at(out, (r, cols.reshape(-1)), vals.reshape(-1))
+        return out
+
+
+class ELLStore(_EllFamilyStore):
+    """Host-side block-ELL training set (vals, cols padded to K nonzeros).
+
+    Rows pack their nonzeros into a slot prefix (``to_ell`` layout), so a
+    subset whose max occupied extent is k can be gathered into a buffer of
+    any K >= k by plain ``[:, :K]`` truncation — that is what makes per-
+    buffer adaptive K a copy, not a repack.
+    """
+
+    def __init__(self, vals: np.ndarray, cols: np.ndarray, n_features: int,
+                 lane: int = 128):
         self.vals = np.ascontiguousarray(vals, np.float32)
         self.cols = np.ascontiguousarray(cols, np.int32)
         self._n_features = int(n_features)
+        self.lane = int(lane)
+        self.row_extent = sp.ell_row_extent(self.vals)
 
     @property
     def n(self) -> int:
@@ -144,37 +221,112 @@ class ELLStore:
     def K(self) -> int:
         return self.vals.shape[1]
 
-    def alloc(self, m: int):
-        return (np.zeros((m, self.K), np.float32),
-                np.zeros((m, self.K), np.int32))
-
-    def fill(self, buf, sl: slice, rows: np.ndarray) -> None:
+    def fill(self, buf, sl, rows: np.ndarray) -> None:
         vb, cb = buf
-        vb[sl] = self.vals[rows]
-        cb[sl] = self.cols[rows]
+        K = vb.shape[1]
+        if rows.size and int(self.row_extent[rows].max()) > K:
+            raise ValueError(
+                f"row extent {int(self.row_extent[rows].max())} exceeds "
+                f"buffer K={K}")
+        k = min(K, self.K)
+        vb[sl, :k] = self.vals[rows, :k]
+        cb[sl, :k] = self.cols[rows, :k]
+        vb[sl, k:] = 0.0
+        cb[sl, k:] = 0
 
-    def to_device(self, buf, put) -> ELLData:
+
+class CSRStore(_EllFamilyStore):
+    """Host-side CSR training set that fills block-ELL device buffers.
+
+    The paper's storage format (Sec. 2.2, Fig. 1c) kept verbatim on host:
+    (data, indices, indptr). Buffer fills stream CSR rows into the padded
+    (vals, cols) layout on the fly, so ``SVMConfig(format='ell')`` can
+    ingest datasets that never fit dense on host — the host cost is the
+    CSR arrays plus one (m, K) buffer, never N*d. Produces the same
+    ``ELLData`` device buffers as :class:`ELLStore` (``fmt`` says 'ell'
+    because that is the *device* layout the chunk runners consume).
+
+    ``K`` (explicit pin) mirrors dense ingest's ``ell_K``: when given, the
+    store-wide lane budget is pinned to it instead of being derived from
+    the data, so ``ell_adaptive=False`` refits keep stable trace shapes
+    across datasets. Adaptive per-buffer K still contracts below the pin.
+    """
+
+    def __init__(self, csr: "sp.CSRMatrix", lane: int = 128,
+                 K: "int | None" = None):
+        self.csr = sp.as_csr(csr)
+        self.lane = int(lane)
+        self.row_extent = self.csr.row_nnz()
+        self._K_pin = None if K is None else sp.round_lanes(K, self.lane)
+
+    @property
+    def n(self) -> int:
+        return self.csr.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.csr.shape[1]
+
+    @property
+    def K(self) -> int:
+        if self._K_pin is not None:
+            return self._K_pin
+        k = int(self.row_extent.max()) if self.n else 0
+        return sp.round_lanes(k, self.lane)
+
+    def memory_bytes(self) -> int:
+        return self.csr.memory_bytes()
+
+    def fill(self, buf, sl, rows: np.ndarray) -> None:
+        """Vectorized CSR->ELL gather of ``rows`` into the buffer slice."""
         vb, cb = buf
-        sq = (vb * vb).sum(axis=1).astype(np.float32)
-        return ELLData(put(vb), put(cb), put(sq), self._n_features)
+        if rows.size == 0:
+            return
+        K = vb.shape[1]
+        nnz = self.row_extent[rows]
+        if int(nnz.max()) > K:
+            raise ValueError(f"row with {int(nnz.max())} nnz exceeds "
+                             f"buffer K={K}")
+        if self.csr.nnz == 0:        # all-padding rows; nothing to gather
+            vb[sl] = 0.0
+            cb[sl] = 0
+            return
+        take = self.csr.indptr[rows][:, None] + np.arange(K)[None, :]
+        mask = np.arange(K)[None, :] < nnz[:, None]
+        take = np.where(mask, take, 0)
+        vb[sl] = self.csr.data[take] * mask
+        cb[sl] = self.csr.indices[take] * mask
 
-    def dense_rows(self, rows: np.ndarray) -> np.ndarray:
-        """Densify a row subset (reconstruction streams bounded blocks, so
-        ELL storage never forces a full dense materialization)."""
-        out = np.zeros((rows.size, self._n_features), np.float32)
-        r = np.repeat(np.arange(rows.size), self.K)
-        np.add.at(out, (r, self.cols[rows].reshape(-1)),
-                  self.vals[rows].reshape(-1))
-        return out
 
+def make_store(X, fmt: str, ell_K: "int | None" = None, ell_lane: int = 128):
+    """Build the host store for ``fmt``.
 
-def make_store(X: np.ndarray, fmt: str, ell_K: "int | None" = None,
-               ell_lane: int = 128):
-    """Build the host store for ``fmt`` from a dense sample matrix."""
+    ``X`` may be a dense (n, d) matrix or — for ``fmt='ell'`` — CSR input
+    (a ``data.sparse.CSRMatrix``, a scipy-like csr object, or a
+    ``(data, indices, indptr, shape)`` tuple), which builds a
+    :class:`CSRStore` without ever materializing a dense host matrix.
+    An explicit ``ell_K`` is validated against ``ell_lane``: values that
+    are not a whole number of lanes are rounded *up* (the Pallas tiling
+    path requires lane-multiple K; silently passing a ragged K through
+    used to reach the kernels unchecked).
+    """
     if fmt == "dense":
+        if sp.is_csr_like(X):
+            X = sp.as_csr(X).to_dense()
         return DenseStore(X)
     if fmt == "ell":
-        from repro.data import sparse
-        ell = sparse.to_ell(np.asarray(X), K=ell_K, lane=ell_lane)
-        return ELLStore(ell.vals, ell.cols, X.shape[1])
+        if ell_K is not None:
+            if ell_K <= 0:
+                raise ValueError(f"ell_K must be positive, got {ell_K}")
+            ell_K = sp.round_lanes(ell_K, ell_lane)
+        if sp.is_csr_like(X):
+            store = CSRStore(sp.as_csr(X), lane=ell_lane, K=ell_K)
+            if ell_K is not None and store.n and \
+                    int(store.row_extent.max()) > ell_K:
+                raise ValueError(
+                    f"row with {int(store.row_extent.max())} nnz exceeds "
+                    f"explicit ell_K={ell_K}")
+            return store
+        ell = sp.to_ell(np.asarray(X), K=ell_K, lane=ell_lane)
+        return ELLStore(ell.vals, ell.cols, X.shape[1], lane=ell_lane)
     raise ValueError(f"unknown data format {fmt!r} (want 'dense' or 'ell')")

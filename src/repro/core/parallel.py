@@ -53,6 +53,15 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
     are densified locally before the all_gather so the collective payload
     stays the paper's (p, 2d+6) bcast shape, and the shard-local gamma sweep
     runs on the sparse stream.
+
+    The ELL lane budget K is *not* closed over: it is a trace dimension
+    (``vals_l.shape[1]``), so adaptive-K recompaction re-traces this runner
+    once per K bucket (the driver buckets K to power-of-two lanes precisely
+    to bound that). Per-shard K is lane-rounded host-side at buffer-fill
+    time (``FitStats.shard_K``); the device array itself is padded to
+    max(shard_K) because shard_map and the collectives need one uniform
+    shape — the paper's per-rank MPI buffers are ragged, ours are ragged
+    only in which lanes carry nonzeros.
     """
     kself = kernel_fns.self_kernel(kernel)
     row1 = kernel_fns.get_row(kernel)
@@ -203,13 +212,18 @@ def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
     every shard accumulates kernel-block @ coef partials for its stale rows.
 
     ``fmt='dense'`` rotates (X, coef, sq) — d+2 floats per row. ``fmt='ell'``
-    rotates the *sparse* payload (vals, cols, coef, sq) — 2K+2 floats per
-    row — so inter-device traffic shrinks by the same density factor as
-    storage (the paper's Fig. 1b argument applied to communication); each
-    shard densifies the incoming block and its own row blocks into bounded
-    (m, d) scratch and runs the same dense kernel-block GEMM.
+    takes *two* sparse payloads: an own-side (vals, cols) block at the full
+    set's adaptive K (densified locally for the stale rows), and a ring
+    payload (rvals, rcols) that holds only support-vector rows (coef != 0;
+    everything else zeroed by the caller) at the *SV set's* lane-rounded K.
+    Only the ring payload rotates, so inter-device traffic is 2*K_sv + 2
+    floats per row — it shrinks with both the density factor (the paper's
+    Fig. 1b argument applied to communication) and the adaptive lane budget
+    of the current support set. Zeroed non-SV rows are exact: their coef is
+    0, so their kernel column contributes nothing regardless of values.
+    Both K's are trace dimensions; jit re-specializes per shape bucket.
     """
-    n_data = 2 if fmt == "ell" else 1      # arrays rotated besides coef/sq
+    n_data = 4 if fmt == "ell" else 1
 
     def block_dense(*parts):
         """Sample block as dense rows: identity for dense, scatter for ELL."""
@@ -221,17 +235,25 @@ def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
             .at[jnp.arange(m)[:, None], cols].add(vals)
 
     def local(*args):
-        data_l, (y_l, alpha_l, gamma_l, stale_l) = args[:n_data], args[n_data:]
+        if fmt == "ell":
+            own = args[:2]                        # (vals, cols) @ K_own
+            ring0 = args[2:4]                     # SV-only (rvals, rcols) @ K_sv
+        else:
+            own = args[:1]                        # X doubles as ring payload
+            ring0 = own
+        y_l, alpha_l, gamma_l, stale_l = args[n_data:]
         p = mesh.shape[axis]                      # static axis size
         coef_l = alpha_l * y_l                    # zero where alpha == 0
-        m_l = data_l[0].shape[0]
-        sq_l = jnp.sum(data_l[0] * data_l[0], axis=-1)
+        m_l = own[0].shape[0]
+        # ring-side sq from the ring payload: exact for coef != 0 rows,
+        # irrelevant (0-weighted) for the zeroed non-SV rows.
+        sq_ring = jnp.sum(ring0[0] * ring0[0], axis=-1)
         # pad the *local row* side so the row-block loop stays in bounds;
         # the ring payload (columns) keeps the uniform shard size m_l.
         pad = (-m_l) % row_block
         mp = m_l + pad
-        data_p = tuple(jnp.pad(a, ((0, pad), (0, 0))) for a in data_l)
-        sqp = jnp.pad(sq_l, (0, pad))
+        own_p = tuple(jnp.pad(a, ((0, pad), (0, 0))) for a in own)
+        sqp = jnp.pad(jnp.sum(own[0] * own[0], axis=-1), (0, pad))
 
         def ring_step(t, carry):
             datab, cb, sqb, acc = carry
@@ -240,7 +262,7 @@ def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
             def rb(i, acc):
                 s = i * row_block
                 Xi = block_dense(*(lax.dynamic_slice_in_dim(a, s, row_block)
-                                   for a in data_p))
+                                   for a in own_p))
                 sqi = lax.dynamic_slice_in_dim(sqp, s, row_block)
                 if kernel == "rbf":
                     d2 = sqi[:, None] - 2.0 * (Xi @ Xb.T) + sqb[None, :]
@@ -261,7 +283,7 @@ def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
 
         _, _, _, acc = lax.fori_loop(
             0, p, ring_step,
-            (data_l, coef_l, sq_l, jnp.zeros((mp,), jnp.float32)))
+            (ring0, coef_l, sq_ring, jnp.zeros((mp,), jnp.float32)))
         return jnp.where(stale_l, acc[:m_l] - y_l, gamma_l)
 
     sharded = P(axis)
@@ -309,7 +331,12 @@ class ParallelSMOSolver(solver.SMOSolver):
     def _reconstruct(self, y, alpha, stale):
         """Distributed Alg. 6: shard the full problem over the mesh and run
         the ppermute ring; returns reconstructed gamma for ``stale`` rows.
-        ELL stores rotate the sparse (vals, cols) payload through the ring."""
+
+        ELL-family stores (``ELLStore``/``CSRStore``) send two sparse
+        payloads: own-side rows at the full set's adaptive K, and the ring
+        payload restricted to support-vector rows at the *SV set's*
+        lane-rounded K — non-SV rows carry coef 0, so zeroing them is exact
+        and the rotated bytes track the live model, not the ingest budget."""
         store = self._store
         n = store.n
         fmt = store.fmt
@@ -328,12 +355,31 @@ class ParallelSMOSolver(solver.SMOSolver):
         stale_mask = np.zeros((m,), bool)
         stale_mask[stale] = True
         pad1 = lambda a: np.pad(a.astype(np.float32), (0, m - n))
+        all_rows = np.arange(n)
         if fmt == "ell":
-            vp = np.zeros((m, store.K), np.float32)
-            vp[:n] = store.vals
-            cp = np.zeros((m, store.K), np.int32)
-            cp[:n] = store.cols
-            dargs = (self._put(vp), self._put(cp))
+            # both K's are trace dimensions of the jitted ring — bucket
+            # them (power-of-two lanes, like _make_buffer) so a drifting
+            # SV-set extent re-specializes O(log K) times, not per call;
+            # ell_adaptive=False pins them to the store budget, extending
+            # that knob's stable-trace-shape guarantee to Alg. 6
+            from repro.data import sparse as spfmt
+            adapt = self.cfg.ell_adaptive
+            K_own = (spfmt.bucket_lanes(store.buffer_K(all_rows),
+                                        store.lane, cap=store.K)
+                     if adapt else store.K)
+            buf = store.alloc(m, K_own)
+            store.fill(buf, slice(0, n), all_rows)
+            vp, cp = buf
+            sv = np.flatnonzero(alpha > 0.0)
+            K_sv = (spfmt.bucket_lanes(store.buffer_K(sv), store.lane,
+                                       cap=store.K)
+                    if adapt else store.K)
+            rvp = np.zeros((m, K_sv), np.float32)
+            rcp = np.zeros((m, K_sv), np.int32)
+            if sv.size:
+                store.fill((rvp, rcp), sv, sv)
+            dargs = (self._put(vp), self._put(cp),
+                     self._put(rvp), self._put(rcp))
         else:
             Xp = np.zeros((m, store.n_features), np.float32)
             Xp[:n] = store.X

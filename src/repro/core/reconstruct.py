@@ -75,13 +75,14 @@ def reconstruct_gamma_store(kernel: str, store, y: np.ndarray,
                             alpha: np.ndarray, rows: np.ndarray,
                             inv_2s2: float, row_block: int = 8192,
                             sv_block: int = 8192) -> np.ndarray:
-    """Alg. 6 over a data-plane store (dense or block-ELL).
+    """Alg. 6 over a data-plane store (dense, block-ELL, or CSR).
 
-    Dense stores delegate to :func:`reconstruct_gamma`. ELL stores densify
-    *blocks* on the fly — (row_block, d) stale rows x (sv_block, d) support
-    vectors — so storage stays sparse and peak dense scratch is bounded by
-    the block sizes, never N*d (the paper's Fig. 1b memory argument holds
-    through reconstruction).
+    Dense stores delegate to :func:`reconstruct_gamma`. ELL-family stores
+    (``ELLStore``/``CSRStore``) densify *blocks* on the fly — (row_block, d)
+    stale rows x (sv_block, d) support vectors — so storage stays sparse and
+    peak dense scratch is bounded by the block sizes, never N*d (the paper's
+    Fig. 1b memory argument holds through reconstruction, including for
+    CSR-ingested datasets that never had a dense host form).
     """
     if store.fmt == "dense":
         return reconstruct_gamma(kernel, store.X, y, alpha, rows, inv_2s2,

@@ -150,6 +150,14 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
     paper's sparse-format storage, Sec. 2.2). Working-set rows travel dense
     either way — O(d) per iteration — while the M-row kernel sweeps stay in
     the buffer's native format.
+
+    Nothing here closes over buffer geometry: M, and for ELL buffers the
+    lane budget K, are trace dimensions of the jitted chunk, so one runner
+    (one ``_RUNNER_CACHE`` entry in the driver) serves every compaction —
+    adaptive-K recompaction just re-specializes the XLA executable per
+    (M_bucket, K_bucket) pair, both power-of-two bucketed by the driver so
+    the cache stays O(log M * log K) per runner, not one entry per
+    compaction.
     """
     row1 = kernel_fns.get_row(kernel)
     kself = kernel_fns.self_kernel(kernel)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.core import dataplane
 from repro.core import heuristics as H
 from repro.core import kernel_fns, reconstruct, smo
+from repro.data import sparse as spfmt
 
 
 @dataclasses.dataclass
@@ -46,8 +47,13 @@ class SVMConfig:
                                  # sparse, paper Sec. 2.2; wins memory when
                                  # density < d / 2K)
     ell_K: "int | None" = None   # ELL nonzero budget per row; default = max
-                                 # row nnz rounded up to ``ell_lane``
+                                 # row nnz rounded up to ``ell_lane``; explicit
+                                 # values are rounded up to a lane multiple
     ell_lane: int = 128          # TPU lane multiple for the ELL K padding
+    ell_adaptive: bool = True    # recompute K from the *surviving* rows at
+                                 # every buffer build/compaction (bucketed to
+                                 # power-of-two lanes); False pins K to the
+                                 # store-wide ingest budget
     max_iters: int = 4_000_000
     chunk_iters: int = 256       # jitted while_loop segment length; smaller
                                  # chunks let physical compaction engage
@@ -83,6 +89,12 @@ class FitStats:
     stalled: bool = False
     final_gap: float = 0.0
     buffer_sizes: list = dataclasses.field(default_factory=list)
+    buffer_K: list = dataclasses.field(default_factory=list)
+    # per-buffer ELL lane budget (adaptive K trajectory); empty for dense
+    shard_K: list = dataclasses.field(default_factory=list)
+    # per-buffer tuple of lane-rounded K per shard (host-side raggedness;
+    # the device array is padded to max(shard_K) — XLA collectives need
+    # uniform shapes, unlike the paper's per-rank MPI buffers)
     flops_est: float = 0.0       # model FLOPs of the gamma-update hot loop
 
 
@@ -192,16 +204,32 @@ class SMOSolver:
         global sample index (-1 on padding rows). Active rows are distributed
         contiguously and evenly across shards — the paper's "load balancing
         ... requires contiguous data movement of samples" (Sec. 3.1.2).
+
+        ELL-family stores get an *adaptive* lane budget: K is recomputed
+        from exactly the surviving rows (``store.buffer_K``) and bucketed to
+        a power-of-two number of lanes (bounds jit retraces — K is a trace
+        dimension of every chunk runner). Each shard's own lane-rounded K is
+        also recorded (``self._last_shard_K`` -> ``FitStats.shard_K``); the
+        physical device array is padded to the bucketed max because XLA
+        collectives require uniform shapes across shards, unlike the
+        paper's per-rank MPI buffers which are truly ragged.
         """
         p = self._nshards()
         m_per = _bucket(-(-idx.size // p), max(self.cfg.min_buffer // p, 8))
         m = m_per * p
-        buf = self._store.alloc(m)
+        ell = self._store.fmt == "ell"
+        K_buf = None
+        if ell:
+            K_buf = (spfmt.bucket_lanes(self._store.buffer_K(idx),
+                                        self.cfg.ell_lane, cap=self._store.K)
+                     if self.cfg.ell_adaptive else self._store.K)
+        buf = self._store.alloc(m, K_buf)
         yb = np.ones((m,), np.float32)          # padding: y=+1, alpha=0 -> I1
         ab = np.zeros((m,), np.float32)
         gb = np.full((m,), np.inf, np.float32)  # padding gamma never selected
         valid = np.zeros((m,), bool)
         idx_buf = np.full((m,), -1, np.int64)
+        shard_K = []
         base, extra = divmod(idx.size, p)
         off = 0
         for q in range(p):
@@ -214,7 +242,10 @@ class SMOSolver:
             gb[sl] = gamma[sub]
             valid[sl] = True
             idx_buf[sl] = sub
+            if ell:
+                shard_K.append(self._store.buffer_K(sub))
             off += cnt
+        self._last_shard_K = tuple(shard_K)
         data = self._store.to_device(buf, self._put)
         state = smo.SMOState(
             alpha=self._put(ab), gamma=self._put(gb),
@@ -251,12 +282,19 @@ class SMOSolver:
         return ({k: np.array(v) for k, v in g.items()}, man["extra"])
 
     # -- main ----------------------------------------------------------------
-    def fit(self, X: np.ndarray, y: np.ndarray) -> SVMModel:
+    def fit(self, X, y: np.ndarray) -> SVMModel:
+        """Train on ``(X, y)``. ``X`` is a dense (n, d) matrix, or — with
+        ``format='ell'`` — CSR input (``data.sparse.CSRMatrix``, scipy-like
+        csr object, or a ``(data, indices, indptr, shape)`` tuple), which
+        streams CSR->ELL buffers and never allocates dense X on host."""
         cfg, h = self.cfg, self.h
         t0 = time.perf_counter()
-        X = np.ascontiguousarray(X, np.float32)
+        if spfmt.is_csr_like(X):
+            X = spfmt.as_csr(X)      # normalizes scipy-like/tuple forms
+        else:
+            X = np.ascontiguousarray(X, np.float32)
         y = np.ascontiguousarray(y, np.float32)
-        n, d = X.shape
+        n, d = (int(s) for s in X.shape)
         assert set(np.unique(y)) <= {-1.0, 1.0}, "labels must be +-1"
         self._store = dataplane.make_store(X, cfg.format, cfg.ell_K,
                                            cfg.ell_lane)
@@ -267,7 +305,6 @@ class SMOSolver:
         stats = FitStats(min_active=n)
 
         interval = h.interval(n)
-        runner = self._runner(cfg, interval)
         tol20 = jnp.float32(cfg.recon_eps_factor * cfg.eps)
         tol2 = jnp.float32(2.0 * cfg.eps)
 
@@ -289,16 +326,23 @@ class SMOSolver:
                 shrink_on = bool(meta.get("shrink_on", shrink_on))
                 stats.reconstructions = recon_count
 
+        # Build the runner only after a possible restore: a Single-policy
+        # checkpoint taken post-reconstruction carries shrink_on=False, and
+        # a runner pre-built with interval > 0 would silently re-enable
+        # shrinking on resume (stale gammas, broken Eq. 9 bookkeeping).
+        run_interval = interval if shrink_on else 0
+        runner = self._runner(cfg, run_interval)
+
         if act_full0 is not None and shrink_on:
             idx = np.flatnonzero(act_full0)
         else:
             idx = np.arange(n)
         data, yb, state, idx = self._make_buffer(y, alpha, gamma, idx)
-        stats.buffer_sizes.append(data.m)
+        self._note_buffer(stats, data)
         state = state._replace(step=jnp.int32(step0),
                                n_shrinks=jnp.int32(nshr0))
-        if interval > 0:
-            state = state._replace(next_shrink=jnp.int32(step0 + interval))
+        if run_interval > 0:
+            state = state._replace(next_shrink=jnp.int32(step0 + run_interval))
         ckpt_count = 0
 
         while True:
@@ -350,9 +394,13 @@ class SMOSolver:
                         next_shrink=state.step + max(1, min(interval, keep.size)),
                         n_shrinks=state.n_shrinks)
                     stats.compactions += 1
-                    stats.buffer_sizes.append(data.m)
+                    self._note_buffer(stats, data)
             stalled = stalled or bool(state.stalled)
-            stats.shrink_events += int(state.n_shrinks)
+            # n_shrinks is cumulative for the whole run (carried through
+            # compactions/reconstructions, restored from checkpoints), so
+            # assign — a += here grew quadratically with reconstructions
+            # under the Multi policy.
+            stats.shrink_events = int(state.n_shrinks)
             alpha, gamma = self._writeback(state, idx, alpha, gamma)
 
             if not shrink_on or recon_count >= cfg.max_reconstructions \
@@ -378,7 +426,7 @@ class SMOSolver:
             step_save, nshr = int(state.step), int(state.n_shrinks)
             data, yb, state, idx = self._make_buffer(
                 y, alpha, gamma, np.arange(n))
-            stats.buffer_sizes.append(data.m)
+            self._note_buffer(stats, data)
             if h.policy == "single":
                 shrink_on = False
                 runner = self._runner(cfg, 0)
@@ -407,12 +455,22 @@ class SMOSolver:
         stats.final_gap = float(b_low - b_up)
         coef = (alpha[sv] * y[sv]).astype(np.float32)
         if self._store.fmt == "ell":
+            # SV extraction at the SVs' own adaptive K (lane-rounded max
+            # extent over the support set) — predict-time memory tracks the
+            # model, not the ingest budget.
+            sv_vals, sv_cols = self._store.ell_rows(sv)
             return SVMModel(cfg, None, coef, beta, alpha, stats,
-                            sv_vals=self._store.vals[sv].copy(),
-                            sv_cols=self._store.cols[sv].copy(),
+                            sv_vals=sv_vals, sv_cols=sv_cols,
                             n_features=self._store.n_features)
         return SVMModel(cfg, self._store.X[sv].copy(), coef, beta, alpha,
                         stats)
+
+    def _note_buffer(self, stats: FitStats, data) -> None:
+        """Record buffer geometry: size always; K/shard-K on ELL buffers."""
+        stats.buffer_sizes.append(data.m)
+        if isinstance(data, dataplane.ELLData):
+            stats.buffer_K.append(data.K)
+            stats.shard_K.append(self._last_shard_K)
 
     @staticmethod
     def _writeback(state: smo.SMOState, idx: np.ndarray,

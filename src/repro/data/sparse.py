@@ -25,16 +25,18 @@ class CSRMatrix:
     def nnz(self) -> int:
         return int(self.data.size)
 
+    def row_nnz(self) -> np.ndarray:
+        """Per-row nonzero counts (N,) — the quantity adaptive K tracks."""
+        return np.diff(self.indptr).astype(np.int64)
+
     def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         lo, hi = self.indptr[i], self.indptr[i + 1]
         return self.data[lo:hi], self.indices[lo:hi]
 
     def to_dense(self) -> np.ndarray:
         out = np.zeros(self.shape, np.float32)
-        n = self.shape[0]
-        for i in range(n):
-            v, c = self.row(i)
-            out[i, c] = v
+        rows = np.repeat(np.arange(self.shape[0]), self.row_nnz())
+        out[rows, self.indices] = self.data
         return out
 
     def memory_bytes(self) -> int:
@@ -65,6 +67,70 @@ class ELLMatrix:
         return (self.vals ** 2).sum(axis=1).astype(np.float32)
 
 
+def as_csr(obj) -> CSRMatrix:
+    """Coerce CSR-like input to :class:`CSRMatrix` without densifying.
+
+    Accepts a ``CSRMatrix``, any scipy-style object exposing
+    ``data``/``indices``/``indptr``/``shape``, or a ``(data, indices,
+    indptr, shape)`` tuple. Arrays are cast (f32 values, i32 columns,
+    i64 row pointers) but never expanded to dense.
+    """
+    if isinstance(obj, CSRMatrix):
+        src = obj
+    elif all(hasattr(obj, a) for a in ("data", "indices", "indptr", "shape")):
+        # CSC/BSR expose the same three arrays with different semantics —
+        # reading them row-wise silently trains on the wrong matrix.
+        fmt = getattr(obj, "format", "csr")
+        if fmt != "csr":
+            raise TypeError(
+                f"expected CSR input, got scipy format {fmt!r}; convert "
+                "with .tocsr() first")
+        src = obj
+    elif isinstance(obj, (tuple, list)) and len(obj) == 4:
+        data, indices, indptr, shape = obj
+        src = CSRMatrix(np.asarray(data), np.asarray(indices),
+                        np.asarray(indptr), tuple(shape))
+    else:
+        raise TypeError(
+            f"cannot interpret {type(obj).__name__} as CSR; want CSRMatrix, "
+            "a scipy-like csr object, or (data, indices, indptr, shape)")
+    data = np.ascontiguousarray(src.data, np.float32)
+    indices = np.ascontiguousarray(src.indices, np.int32)
+    indptr = np.ascontiguousarray(src.indptr, np.int64)
+    n, d = (int(s) for s in src.shape)
+    if indptr.shape != (n + 1,) or int(indptr[-1]) != data.size:
+        raise ValueError(f"inconsistent CSR: indptr {indptr.shape} vs "
+                         f"shape {(n, d)}, nnz {data.size}")
+    if data.size and not (0 <= int(indices.min())
+                          and int(indices.max()) < d):
+        raise ValueError(
+            f"CSR column ids outside [0, {d}): "
+            f"[{int(indices.min())}, {int(indices.max())}]")
+    return CSRMatrix(data, indices, indptr, (n, d))
+
+
+def is_csr_like(obj) -> bool:
+    """True when ``obj`` carries CSR arrays (used by store/solver ingest).
+
+    Matches everything :func:`as_csr` accepts: ``CSRMatrix``, scipy-like
+    attr objects, and the ``(data, indices, indptr, shape)`` tuple form —
+    the tuple is recognized by its 1-D leading arrays and 2-tuple shape so
+    a 4-row dense matrix passed as a list of lists is not misread as CSR.
+    """
+    if isinstance(obj, CSRMatrix) or \
+            all(hasattr(obj, a) for a in ("data", "indices", "indptr",
+                                          "shape")):
+        return True
+    if isinstance(obj, (tuple, list)) and len(obj) == 4:
+        data, indices, indptr, shape = obj
+        try:
+            return (np.ndim(data) == 1 and np.ndim(indices) == 1 and
+                    np.ndim(indptr) == 1 and len(shape) == 2)
+        except TypeError:
+            return False
+    return False
+
+
 def to_csr(X: np.ndarray) -> CSRMatrix:
     n, d = X.shape
     mask = X != 0
@@ -93,6 +159,38 @@ def to_ell(X: np.ndarray, K: int | None = None, lane: int = 128) -> ELLMatrix:
     vals = np.take_along_axis(X, order, axis=1).astype(np.float32) * taken
     cols = (order * taken).astype(np.int32)
     return ELLMatrix(vals, cols, (n, d))
+
+
+def ell_row_extent(vals: np.ndarray) -> np.ndarray:
+    """Per-row occupied-slot count of an ELL block: last nonzero slot + 1
+    (0 for all-padding rows). ``to_ell`` packs nonzeros into a prefix, so
+    this is the smallest K each row survives truncation to — what adaptive
+    K recompaction measures on the surviving rows."""
+    nz = vals != 0
+    K = vals.shape[1]
+    return np.where(nz.any(axis=1), K - np.argmax(nz[:, ::-1], axis=1),
+                    0).astype(np.int64)
+
+
+def round_lanes(k: int, lane: int) -> int:
+    """Round a nonzero budget up to a whole number of TPU lanes (min 1)."""
+    return max(lane, -(-int(k) // lane) * lane)
+
+
+def bucket_lanes(k: int, lane: int, cap: "int | None" = None) -> int:
+    """Lane-round ``k``, then round up to a power-of-two number of lanes.
+
+    Adaptive K makes the ELL lane budget a fresh trace dimension at every
+    physical compaction; bucketing to {1, 2, 4, ...} lanes bounds the jit
+    cache to O(log(K_max / lane)) distinct entries per runner instead of
+    one per compaction. ``cap`` (the store-wide K) keeps the first buffer
+    from over-padding past what ingest ever needs.
+    """
+    lanes = -(-round_lanes(k, lane) // lane)
+    k = lane * (1 << (lanes - 1).bit_length())
+    if cap is not None:
+        k = min(k, round_lanes(cap, lane))
+    return k
 
 
 def csr_space_report(X: np.ndarray) -> dict:

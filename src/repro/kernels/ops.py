@@ -73,16 +73,23 @@ def fused_gamma_update(kernel: str, X: jax.Array, sq_norms: jax.Array,
                             block_m=bm, interpret=_interpret())
 
 
-def _pick_ell_block_m(n: int) -> int:
+def _pick_ell_block_m(n: int, K: int = 128) -> int:
+    """Largest block (<=512, >=64) dividing n whose (vals, cols) tiles fit
+    the VMEM budget at lane budget K. Adaptive-K recompaction makes K a
+    *live* trace dimension — it changes across compactions — so the block
+    choice must scale with it or large-K ingest buffers blow VMEM. Each
+    (bm, K) bucket gets its own Pallas specialization; the driver buckets K
+    to power-of-two lanes so this stays O(log K_max) entries, not one per
+    compaction."""
     bm = 512
-    while bm > 64 and n % bm != 0:
+    while bm > 64 and (n % bm != 0 or bm * max(K, 128) * 8 > _VMEM_BUDGET):
         bm //= 2
-    return bm if n % bm == 0 else 0
+    return bm if n % bm == 0 and bm * max(K, 128) * 8 <= _VMEM_BUDGET else 0
 
 
 def ell_kernel_row(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
                    z: jax.Array, inv_2s2) -> jax.Array:
-    bm = _pick_ell_block_m(vals.shape[0])
+    bm = _pick_ell_block_m(*vals.shape)
     if bm == 0:
         return ref.ell_kernel_row(vals, cols, sq_norms, z, inv_2s2)
     return _se.ell_kernel_row(_pad_cols(vals), _pad_cols(cols), sq_norms, z,
@@ -93,7 +100,7 @@ def ell_kernel_row(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
 def ell_kernel_rows2(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
                      z2: jax.Array, inv_2s2) -> jax.Array:
     """(N, 2) RBF rows on ELL storage; Pallas when N divides a block."""
-    bm = _pick_ell_block_m(vals.shape[0])
+    bm = _pick_ell_block_m(*vals.shape)
     if bm == 0:
         return ref.ell_kernel_rows2(vals, cols, sq_norms, z2, inv_2s2)
     return _se.ell_kernel_rows2(_pad_cols(vals), _pad_cols(cols), sq_norms,
@@ -107,7 +114,7 @@ def ell_fused_gamma_update(kernel: str, vals: jax.Array, cols: jax.Array,
                            z2: jax.Array, coef2: jax.Array,
                            inv_2s2) -> jax.Array:
     """Fused Eq. 6 on ELL storage; oracle fallback off-grid / non-RBF."""
-    bm = _pick_ell_block_m(vals.shape[0])
+    bm = _pick_ell_block_m(*vals.shape)
     if kernel != "rbf" or bm == 0:
         if kernel == "rbf":
             return ref.ell_gamma_update(vals, cols, sq_norms, gamma, z2,

@@ -11,6 +11,14 @@ Space: 2 * K * 4 bytes/sample vs d * 4 dense — a win whenever density < d/2K,
 preserving the paper's CSR memory argument (Fig. 1b) in vector-friendly form.
 Mosaic requirement: 32-bit VMEM vector gather (available on v4+; validated
 here in interpret mode).
+
+K is a live trace dimension: adaptive-K recompaction (core/dataplane) hands
+these kernels a fresh, smaller lane budget as the active set contracts, so
+each jitted wrapper specializes per (block_m, K) bucket. On real TPUs K must
+be a multiple of 128 (ops.py lane-pads before calling; Mosaic tiling assumes
+it — interpret mode tolerates any K, which the kernel unit tests exercise),
+and the driver buckets K to power-of-two lanes so the cache stays
+O(log K_max).
 """
 from __future__ import annotations
 

@@ -1,0 +1,94 @@
+"""Checkpoint save -> resume round-trips and shrink accounting.
+
+Covers the two resume-time accounting fixes that rode in with the adaptive-K
+data plane: (1) a Single-policy checkpoint taken after its one
+reconstruction carries ``shrink_on=False`` and must NOT re-enable shrinking
+on resume (the chunk runner used to be built before the restore, with the
+heuristic's interval baked in); (2) ``shrink_events`` is cumulative in the
+solver state and must not be re-accumulated once per outer pass (it grew
+quadratically with reconstructions under the Multi policy).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+from repro.core import SMOSolver, SVMConfig, train
+from repro.data import make_sparse
+
+KW = dict(C=4.0, sigma2=4.0, chunk_iters=64, eps=1e-3)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_sparse(600, 400, 0.04, seed=0)
+
+
+def _full(X, y, heur, fmt):
+    return train(X, y, heuristic=heur, format=fmt, **KW)
+
+
+@pytest.mark.parametrize("heur,fmt", [("single5pc", "dense"),
+                                      ("multi5pc", "dense"),
+                                      ("multi5pc", "ell")])
+def test_resume_matches_uninterrupted(tmp_path, data, heur, fmt):
+    X, y = data
+    full = _full(X, y, heur, fmt)
+    assert full.stats.converged
+    cut = int(full.stats.iterations * 0.6)
+    d = str(tmp_path)
+    m1 = SMOSolver(SVMConfig(heuristic=heur, format=fmt, checkpoint_dir=d,
+                             max_iters=cut, **KW)).fit(X, y)
+    assert m1.stats.iterations <= cut < full.stats.iterations
+    m2 = SMOSolver(SVMConfig(heuristic=heur, format=fmt, checkpoint_dir=d,
+                             resume=True, **KW)).fit(X, y)
+    assert m2.stats.converged
+    assert m2.stats.iterations == full.stats.iterations
+    np.testing.assert_allclose(m2.alpha, full.alpha, atol=1e-6)
+    rel = abs(m2.dual_objective() - full.dual_objective()) \
+        / abs(full.dual_objective())
+    assert rel < 1e-3, rel
+
+
+def test_single_policy_resume_keeps_shrinking_off(tmp_path, data):
+    """Interrupt AFTER the Single policy's one reconstruction: the restored
+    ``shrink_on=False`` must rebuild the runner with interval=0."""
+    X, y = data
+    full = _full(X, y, "single5pc", "dense")
+    assert full.stats.reconstructions == 1
+    m1 = None
+    d = str(tmp_path)
+    # walk the cut back from the end until it lands in the re-optimize tail
+    # (reconstruction already done, convergence not yet reached)
+    for back in (20, 60, 120, 250):
+        cut = full.stats.iterations - back
+        m1 = SMOSolver(SVMConfig(heuristic="single5pc", checkpoint_dir=d,
+                                 max_iters=cut, **KW)).fit(X, y)
+        if m1.stats.reconstructions >= 1 and not m1.stats.converged:
+            break
+    assert m1.stats.reconstructions >= 1, "cut landed before reconstruction"
+    m2 = SMOSolver(SVMConfig(heuristic="single5pc", checkpoint_dir=d,
+                             resume=True, **KW)).fit(X, y)
+    assert m2.stats.converged
+    # shrinking stayed off: no new shrink events past the restored count
+    assert m2.stats.shrink_events == full.stats.shrink_events
+    assert m2.stats.iterations == full.stats.iterations
+    np.testing.assert_allclose(m2.alpha, full.alpha, atol=1e-6)
+
+
+def test_multi_shrink_events_counted_once(tmp_path, data):
+    """Multi policy with several reconstructions: reported shrink_events is
+    the cumulative solver count, not a per-pass re-accumulation (which grew
+    ~(R+1)/2-fold with R reconstructions)."""
+    X, y = data
+    d = str(tmp_path)
+    m = SMOSolver(SVMConfig(heuristic="multi5pc", checkpoint_dir=d,
+                            **KW)).fit(X, y)
+    assert m.stats.reconstructions >= 2          # several outer passes ran
+    assert m.stats.shrink_events > 0
+    # the final checkpoint is written after the last chunk of the last
+    # pass, so its meta holds the true cumulative count
+    step = ck.latest_step(d)
+    man = ck.load_manifest(os.path.join(d, f"step_{step}"))
+    assert m.stats.shrink_events == man["extra"]["shrink_events"]

@@ -5,6 +5,9 @@ by the dense/ELL data-plane abstraction: Pallas ELL kernels vs the jnp
 oracles, ELL reference kernels vs the dense reference on densified inputs,
 and full ``format='ell'`` training runs (single-host and multi-device)
 matching the dense path's solution while using less buffer memory.
+Adaptive-K coverage: CSR ingest (``CSRStore`` streaming CSR->ELL fills,
+never building dense X), per-buffer K recompaction at physical compaction,
+and fixed-K vs adaptive-K trajectory parity.
 """
 import json
 import numpy as np
@@ -13,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import SVMConfig, SMOSolver, dataplane, train
 from repro.core import kernel_fns
-from repro.data import make_sparse, to_ell
+from repro.data import make_sparse, to_csr, to_ell
 from repro.kernels import ops, ref
 from test_distributed import run_sub
 
@@ -70,6 +73,143 @@ def test_ell_cross_kernel_matches_full_matrix():
     got = kernel_fns.ell_cross_kernel("rbf", Z, vals, cols, sq, inv)
     want = kernel_fns.full_kernel_matrix("rbf", Z, jnp.asarray(X), inv)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------- adaptive-K data plane
+def test_csr_store_fills_match_ell_store():
+    X, _ = make_sparse(200, 300, 0.05, seed=7)
+    se = dataplane.make_store(X, "ell")
+    sc = dataplane.make_store(to_csr(X), "ell")
+    assert isinstance(sc, dataplane.CSRStore)
+    assert sc.K == se.buffer_K(np.arange(200)) == 128
+    rows = np.array([3, 17, 0, 199, 58])
+    for K in (128, 256):
+        be = se.alloc(rows.size, K)
+        bc = sc.alloc(rows.size, K)
+        se.fill(be, slice(0, rows.size), rows)
+        sc.fill(bc, slice(0, rows.size), rows)
+        # identical semantics (CSR fill packs identically ordered prefixes)
+        np.testing.assert_array_equal(be[0], bc[0])
+        np.testing.assert_array_equal(be[1], bc[1])
+    np.testing.assert_allclose(sc.dense_rows(rows), X[rows], atol=0)
+    # per-subset adaptive K: a low-nnz subset needs fewer lanes than ingest
+    v, c = sc.ell_rows(rows)
+    assert v.shape == (rows.size, sc.buffer_K(rows))
+
+
+def test_make_store_validates_explicit_K():
+    X, _ = make_sparse(64, 256, 0.05, seed=8)
+    # ragged explicit K is rounded up to a whole number of lanes, not
+    # passed through to the Pallas tiling path
+    s = dataplane.make_store(X, "ell", ell_K=130, ell_lane=128)
+    assert s.K == 256
+    s = dataplane.make_store(X, "ell", ell_K=140, ell_lane=64)
+    assert s.K == 192
+    with pytest.raises(ValueError):
+        dataplane.make_store(X, "ell", ell_K=0)
+    # CSR ingest honors the same pin (stable trace shapes across refits)
+    s = dataplane.make_store(to_csr(X), "ell", ell_K=130, ell_lane=128)
+    assert s.K == 256
+    assert s.alloc(8)[0].shape == (8, 256)
+    # CSR input: explicit K that cannot hold the densest row is an error
+    with pytest.raises(ValueError):
+        dataplane.make_store(to_csr(np.ones((4, 300), np.float32)), "ell",
+                             ell_K=128)
+
+
+def test_csr_tuple_ingest():
+    """The documented (data, indices, indptr, shape) triplet form trains."""
+    X, y = make_sparse(256, 200, 0.05, seed=9)
+    csr = to_csr(X)
+    tup = (csr.data, csr.indices, csr.indptr, csr.shape)
+    s = SMOSolver(SVMConfig(format="ell", C=4.0, sigma2=4.0,
+                            heuristic="single1000"))
+    mt = s.fit(tup, y)
+    assert isinstance(s._store, dataplane.CSRStore)
+    md = train(X, y, C=4.0, sigma2=4.0, heuristic="single1000")
+    assert mt.stats.iterations == md.stats.iterations
+    assert abs(mt.dual_objective() - md.dual_objective()) < 1e-2
+
+
+def test_csr_ingest_training_matches_dense():
+    """format='ell' fit from CSR input — no dense host X ever allocated."""
+    X, y = make_sparse(600, 400, 0.04, seed=0)
+    kw = dict(C=4.0, sigma2=4.0, heuristic="multi5pc", chunk_iters=64)
+    md = train(X, y, **kw)
+    s = SMOSolver(SVMConfig(format="ell", **kw))
+    mc = s.fit(to_csr(X), y)
+    assert isinstance(s._store, dataplane.CSRStore)
+    assert not hasattr(s._store, "X")         # nothing dense to lean on
+    assert mc.stats.converged
+    rel = abs(mc.dual_objective() - md.dual_objective()) \
+        / abs(md.dual_objective())
+    assert rel < 1e-3, rel
+    np.testing.assert_array_equal(np.flatnonzero(mc.alpha > 0),
+                                  np.flatnonzero(md.alpha > 0))
+    assert (mc.predict(X) == md.predict(X)).mean() > 0.999
+
+
+_SKEWED_CACHE = {}
+
+
+def _skewed_sparse(seed=2):
+    """Base sparse set + heavy *easy* rows: near-duplicates of the largest-
+    margin non-SVs with many tiny extra nonzeros. The heavy rows dominate
+    the ingest K but are shrunk away early, so adaptive recompaction can
+    drop the lane budget."""
+    if seed in _SKEWED_CACHE:
+        return _SKEWED_CACHE[seed]
+    X, y = make_sparse(1200, 512, 0.02, seed=seed, noise=0.05,
+                       label_noise=0.0, margin=0.5)
+    kw = dict(C=2.0, sigma2=80.0, heuristic="single5pc", chunk_iters=128,
+              min_buffer=128)
+    md = train(X, y, **kw)
+    score = np.abs(md.decision_function(X))
+    easy = np.flatnonzero(md.alpha == 0)
+    heavy = easy[np.argsort(-score[easy])][:64]
+    rng = np.random.default_rng(0)
+    Xh = X[heavy].copy()
+    for i in range(Xh.shape[0]):
+        zero = np.flatnonzero(Xh[i] == 0)
+        pick = rng.choice(zero, 360, replace=False)
+        Xh[i, pick] = 1e-4 * rng.normal(size=360).astype(np.float32)
+    _SKEWED_CACHE[seed] = (np.vstack([X, Xh]),
+                           np.concatenate([y, y[heavy]]), kw)
+    return _SKEWED_CACHE[seed]
+
+
+def test_adaptive_K_drops_at_compaction():
+    Xa, ya, kw = _skewed_sparse()
+    nnz = (Xa != 0).sum(axis=1)
+    assert nnz.max() > 2 * 128 >= 4 * nnz.min()    # genuinely skewed rows
+    m = train(Xa, ya, format="ell", **kw)
+    assert m.stats.converged
+    assert m.stats.compactions >= 1
+    ks = m.stats.buffer_K
+    assert len(ks) == len(m.stats.buffer_sizes)
+    assert min(ks) < ks[0], ks                     # K shrank mid-run
+    # strictly decreasing across at least one physical compaction
+    assert any(b < a for a, b in zip(ks, ks[1:])), ks
+    assert all(k % 128 == 0 for k in ks)
+    for per_shard in m.stats.shard_K:
+        assert max(per_shard) <= max(ks)
+    # and the adaptive path solves the same problem as dense
+    mdense = train(Xa, ya, **kw)
+    rel = abs(m.dual_objective() - mdense.dual_objective()) \
+        / abs(mdense.dual_objective())
+    assert rel < 1e-3, rel
+
+
+def test_fixed_K_matches_adaptive_K_trajectory():
+    """ell_adaptive only changes buffer geometry, never the optimization:
+    padding lanes contribute exactly 0 to every gather-FMA."""
+    Xa, ya, kw = _skewed_sparse()
+    ma = train(Xa, ya, format="ell", **kw)
+    mf = train(Xa, ya, format="ell", ell_adaptive=False, **kw)
+    assert ma.stats.iterations == mf.stats.iterations
+    np.testing.assert_allclose(ma.alpha, mf.alpha, atol=1e-6)
+    assert len(set(mf.stats.buffer_K)) == 1       # fixed-K really is fixed
+    assert min(ma.stats.buffer_K) < mf.stats.buffer_K[0]
 
 
 # --------------------------------------------------------------- end-to-end
@@ -130,28 +270,40 @@ def test_parallel_ell_matches_sequential_4dev():
         from repro.core import SVMConfig, train, dataplane
         from repro.core.parallel import ParallelSMOSolver
         from repro.core.reconstruct import reconstruct_gamma_store
-        from repro.data import make_sparse
+        from repro.data import make_sparse, to_csr
         X, y = make_sparse(640, 400, 0.04, seed=0)
         kw = dict(C=4.0, sigma2=4.0, heuristic='multi5pc', chunk_iters=64)
         seq = train(X, y, **kw)
-        par = ParallelSMOSolver(SVMConfig(format='ell', **kw)).fit(X, y)
-        # ELL ring reconstruction vs the host-store path
+        # parallel fit ingesting CSR directly (CSRStore data plane)
+        ps = ParallelSMOSolver(SVMConfig(format='ell', **kw))
+        par = ps.fit(to_csr(X), y)
+        csr_store = type(ps._store).__name__
+        # adaptive-K ring reconstruction vs the host-store path, for both
+        # ELL-family stores (ring payload is SV-masked at the SV set's K)
         rng = np.random.default_rng(1)
         alpha = (rng.random(640) * (rng.random(640) < 0.3)).astype(np.float32)
         stale = np.flatnonzero(rng.random(640) < 0.5)
-        s = ParallelSMOSolver(SVMConfig(sigma2=2.0, format='ell'))
-        s._store = dataplane.make_store(X, 'ell')
-        ring = s._reconstruct(y, alpha, stale)
-        host = reconstruct_gamma_store('rbf', s._store, y, alpha, stale, 0.25)
+        errs = []
+        for src in (X, to_csr(X)):
+            s = ParallelSMOSolver(SVMConfig(sigma2=2.0, format='ell'))
+            s._store = dataplane.make_store(src, 'ell')
+            ring = s._reconstruct(y, alpha, stale)
+            host = reconstruct_gamma_store('rbf', s._store, y, alpha, stale,
+                                           0.25)
+            errs.append(float(np.abs(ring - host).max()))
         print(json.dumps({
             'seq': [seq.stats.iterations, seq.dual_objective()],
             'par': [par.stats.iterations, par.dual_objective(),
                     par.stats.converged, par.stats.reconstructions],
-            'ring_err': float(np.abs(ring - host).max())}))
+            'csr_store': csr_store,
+            'buffer_K': par.stats.buffer_K,
+            'ring_err': max(errs)}))
     """, devices=4)
     res = json.loads(out.strip().splitlines()[-1])
     assert res["par"][2]                         # converged
     assert res["par"][3] >= 1                    # ELL reconstruction ran
+    assert res["csr_store"] == "CSRStore"        # no dense host X in play
+    assert res["buffer_K"] and all(k % 128 == 0 for k in res["buffer_K"])
     rel = abs(res["par"][1] - res["seq"][1]) / abs(res["seq"][1])
     assert rel < 1e-2, res
     assert res["ring_err"] < 1e-3, res
