@@ -45,9 +45,16 @@ from repro.data import sparse as sp
 
 @dataclasses.dataclass(frozen=True)
 class DenseData:
-    """Device buffer, dense layout: (X, sq_norms)."""
+    """Device buffer, dense layout: (X, sq_norms).
+
+    ``gids`` (optional) maps buffer position -> **global** sample id (-1 on
+    padding rows) — the row-identity plumbing the kernel-row cache keys on
+    (global ids survive physical compaction; buffer positions do not). The
+    driver threads it from ``idx_buf`` only when the cache is enabled.
+    """
     X: jax.Array          # (M, d) f32
     sq_norms: jax.Array   # (M,) f32 — precomputed ||x_i||^2
+    gids: "jax.Array | None" = None   # (M,) i32 global row ids
 
     @property
     def m(self) -> int:
@@ -63,9 +70,13 @@ class DenseData:
     def memory_bytes(self) -> int:
         return self.X.size * 4 + self.sq_norms.size * 4
 
+    def flops_row_pass(self) -> float:
+        """Model FLOPs of ONE kernel-row pass, per buffer row."""
+        return 2.0 * self.n_features + 5.0
+
     def flops_per_row(self) -> float:
         """Model FLOPs of one fused two-row gamma update, per buffer row."""
-        return 4.0 * self.n_features + 10.0
+        return 2.0 * self.flops_row_pass()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,12 +84,14 @@ class ELLData:
     """Device buffer, block-ELL layout: (vals, cols, sq_norms).
 
     Padding slots hold (val=0, col=0) and contribute exactly 0 to every
-    gather-FMA; padding *rows* are all-padding (sq_norm 0).
+    gather-FMA; padding *rows* are all-padding (sq_norm 0). ``gids`` is the
+    optional buffer-position -> global-sample-id map (see ``DenseData``).
     """
     vals: jax.Array       # (M, K) f32
     cols: jax.Array       # (M, K) i32
     sq_norms: jax.Array   # (M,) f32
     n_features: int       # static: original feature dimension d
+    gids: "jax.Array | None" = None   # (M,) i32 global row ids
 
     @property
     def m(self) -> int:
@@ -97,15 +110,19 @@ class ELLData:
     def memory_bytes(self) -> int:
         return self.vals.size * 4 + self.cols.size * 4 + self.sq_norms.size * 4
 
+    def flops_row_pass(self) -> float:
+        """Model FLOPs of ONE gather-FMA kernel-row pass, per buffer row."""
+        return 4.0 * self.K + 5.0
+
     def flops_per_row(self) -> float:
         # two gather-FMA passes over K slots + exp/FMA epilogue
-        return 8.0 * self.K + 10.0
+        return 2.0 * self.flops_row_pass()
 
 
 jax.tree_util.register_dataclass(
-    DenseData, data_fields=["X", "sq_norms"], meta_fields=[])
+    DenseData, data_fields=["X", "sq_norms", "gids"], meta_fields=[])
 jax.tree_util.register_dataclass(
-    ELLData, data_fields=["vals", "cols", "sq_norms"],
+    ELLData, data_fields=["vals", "cols", "sq_norms", "gids"],
     meta_fields=["n_features"])
 
 
@@ -134,9 +151,11 @@ class DenseStore:
     def fill(self, buf, sl, rows: np.ndarray) -> None:
         buf[sl] = self.X[rows]
 
-    def to_device(self, buf, put) -> DenseData:
+    def to_device(self, buf, put, gids: "np.ndarray | None" = None
+                  ) -> DenseData:
         sq = (buf * buf).sum(axis=1).astype(np.float32)
-        return DenseData(put(buf), put(sq))
+        g = None if gids is None else put(np.ascontiguousarray(gids, np.int32))
+        return DenseData(put(buf), put(sq), g)
 
     def dense_rows(self, rows: np.ndarray) -> np.ndarray:
         return self.X[rows]
@@ -166,10 +185,12 @@ class _EllFamilyStore:
         K = self.K if K is None else int(K)
         return (np.zeros((m, K), np.float32), np.zeros((m, K), np.int32))
 
-    def to_device(self, buf, put) -> ELLData:
+    def to_device(self, buf, put, gids: "np.ndarray | None" = None
+                  ) -> ELLData:
         vb, cb = buf
         sq = (vb * vb).sum(axis=1).astype(np.float32)
-        return ELLData(put(vb), put(cb), put(sq), self.n_features)
+        g = None if gids is None else put(np.ascontiguousarray(gids, np.int32))
+        return ELLData(put(vb), put(cb), put(sq), self.n_features, g)
 
     def ell_rows(self, rows: np.ndarray, K: "int | None" = None):
         """(vals, cols) for ``rows`` at lane budget K (default: their own

@@ -5,14 +5,20 @@ for all experiments; linear and polynomial kernels are "straightforward to use"
 (Sec. 4.1) and are provided for completeness.
 
 Kernel *rows* (K(z, X) for one z against the whole active set) are the hot
-path of SMO — no kernel cache is kept (paper Sec. 3.1.1): rows are recomputed
-every iteration. On TPU the fused Pallas kernels in ``repro.kernels`` replace
-the jnp implementations here; these are the reference/CPU path.
+path of SMO. The paper recomputes them every iteration (Sec. 3.1.1, no
+kernel cache); this repo routes all row production through the pluggable
+provider layer below (:func:`make_provider`), which hides the storage
+format (dense vs block-ELL) and backend (jnp vs Pallas) behind one protocol
+and lets the solver slot a device-resident LRU row cache
+(``repro.core.rowcache``) in front of it. On TPU the fused Pallas kernels
+in ``repro.kernels`` replace the jnp implementations here; these are the
+reference/CPU path.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -106,9 +112,19 @@ def ell_dots(vals: jax.Array, cols: jax.Array, z: jax.Array) -> jax.Array:
 
 
 def ell_dots2(vals: jax.Array, cols: jax.Array, z2: jax.Array) -> jax.Array:
-    """<x_i, z_j> for two dense queries. z2: (2, d). -> (M, 2)."""
+    """<x_i, z_j> for two dense queries. z2: (2, d). -> (M, 2).
+
+    Batch-major reduction (reduce K per query, then transpose) rather than
+    ``einsum('mk,jmk->mj')``: the einsum's query-minor output layout made
+    XLA reduce the two columns with *different* instruction schedules, so
+    K(z, .) computed in slot 0 was not bitwise equal to the same row
+    computed in slot 1 — which breaks the row cache's exactness contract
+    (a row cached from one pair position must serve the other position
+    bit-identically). The batch-major form is position-symmetric and
+    measured slightly faster on CPU.
+    """
     zg = jnp.take(z2, cols, axis=1)                   # (2, M, K)
-    return jnp.einsum("mk,jmk->mj", vals, zg)
+    return jnp.sum(vals[None, :, :] * zg, axis=-1).T  # (M, 2)
 
 
 def ell_rbf_row(vals, cols, sq_norms, z, inv_2s2):
@@ -190,6 +206,156 @@ def ell_cross_kernel(kernel: str, Z: jax.Array, vals: jax.Array,
     zn = jnp.sum(Z * Z, axis=-1)
     d2 = zn[:, None] - 2.0 * dots + sq_norms[None, :]
     return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2)
+
+
+# --------------------------------------------------------------------------
+# Row-provider layer: one protocol over every (storage format x backend)
+# combination of kernel-row production. Chunk runners, reconstruction, and
+# predict all consume providers instead of hand-rolling format branches,
+# and the solver's LRU row cache (repro.core.rowcache) sits behind the same
+# interface — a cache miss calls the exact provider kernel the cache-off
+# path runs, which is what makes cache-on/cache-off bit-identical.
+
+
+class RowProvider(Protocol):
+    """Kernel-row production over a device data buffer (``DenseData`` /
+    ``ELLData``). Methods are shard-local: none may issue a collective, so
+    they are safe inside ``lax.cond`` (the cache's miss branch)."""
+
+    def row(self, data, z: jax.Array) -> jax.Array:
+        """K(z, buffer) — (M,)."""
+
+    def rows2(self, data, z2: jax.Array) -> jax.Array:
+        """Fused two-row K([z_up; z_low], buffer) — (M, 2), one HBM pass."""
+
+    def matrix(self, data, Z: jax.Array) -> jax.Array:
+        """K(Z_j, buffer_i) — (nZ, M); predict / reconstruction blocks."""
+
+    def gamma_update(self, data, gamma, z2, coef2) -> jax.Array:
+        """Fused Eq. 6: gamma + coef2[0]*K(z_up,.) + coef2[1]*K(z_low,.)."""
+
+    def gamma_from_rows(self, gamma, rows, coef2) -> jax.Array:
+        """Eq. 6 from already-produced rows (the cache-hit path)."""
+
+    def diag(self, data) -> jax.Array:
+        """K(x_i, x_i) for every buffer row — (M,) (wss2 curvature)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class _ProviderBase:
+    """Frozen (hashable) so providers can be jit static arguments."""
+    kernel: str
+    inv_2s2: float
+
+    def diag(self, data) -> jax.Array:
+        sq = data.sq_norms
+        if self.kernel == "rbf":
+            return jnp.ones_like(sq)
+        if self.kernel == "linear":
+            return sq
+        return (self.inv_2s2 * sq + 1.0) ** 3
+
+    def gamma_from_rows(self, gamma, rows, coef2) -> jax.Array:
+        return gamma + rows @ coef2
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseRowProvider(_ProviderBase):
+    def row(self, data, z):
+        return _ROW[self.kernel](data.X, data.sq_norms, z, self.inv_2s2)
+
+    def rows2(self, data, z2):
+        return _ROWS2[self.kernel](data.X, data.sq_norms, z2, self.inv_2s2)
+
+    def matrix(self, data, Z):
+        return full_kernel_matrix(self.kernel, Z, data.X, self.inv_2s2)
+
+    def gamma_update(self, data, gamma, z2, coef2):
+        return gamma + self.rows2(data, z2) @ coef2
+
+
+@dataclasses.dataclass(frozen=True)
+class DensePallasRowProvider(DenseRowProvider):
+    """Dense storage, Pallas backend (falls back per ``kernels.ops``).
+
+    ``row`` stays the jnp GEMV — there is no single-row Pallas kernel, and
+    the row path (wss2 selection / cache miss of one row) is O(M*d) GEMV
+    that XLA already saturates.
+    """
+
+    def rows2(self, data, z2):
+        from repro.kernels import ops
+        return ops.kernel_rows2(self.kernel, data.X, data.sq_norms, z2,
+                                self.inv_2s2)
+
+    def gamma_update(self, data, gamma, z2, coef2):
+        from repro.kernels import ops
+        return ops.fused_gamma_update(self.kernel, data.X, data.sq_norms,
+                                      gamma, z2, coef2, self.inv_2s2)
+
+    def gamma_from_rows(self, gamma, rows, coef2):
+        from repro.kernels import ops
+        return ops.gamma_from_rows(gamma, rows, coef2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ELLRowProvider(_ProviderBase):
+    def row(self, data, z):
+        return _ELL_ROW[self.kernel](data.vals, data.cols, data.sq_norms, z,
+                                     self.inv_2s2)
+
+    def rows2(self, data, z2):
+        return _ELL_ROWS2[self.kernel](data.vals, data.cols, data.sq_norms,
+                                       z2, self.inv_2s2)
+
+    def matrix(self, data, Z):
+        return ell_cross_kernel(self.kernel, Z, data.vals, data.cols,
+                                data.sq_norms, self.inv_2s2)
+
+    def gamma_update(self, data, gamma, z2, coef2):
+        return gamma + self.rows2(data, z2) @ coef2
+
+
+@dataclasses.dataclass(frozen=True)
+class ELLPallasRowProvider(ELLRowProvider):
+    def row(self, data, z):
+        from repro.kernels import ops
+        if self.kernel != "rbf":            # ELL Pallas kernels are RBF-only
+            return super().row(data, z)
+        return ops.ell_kernel_row(data.vals, data.cols, data.sq_norms, z,
+                                  self.inv_2s2)
+
+    def rows2(self, data, z2):
+        from repro.kernels import ops
+        if self.kernel != "rbf":
+            return super().rows2(data, z2)
+        return ops.ell_kernel_rows2(data.vals, data.cols, data.sq_norms, z2,
+                                    self.inv_2s2)
+
+    def gamma_update(self, data, gamma, z2, coef2):
+        from repro.kernels import ops
+        return ops.ell_fused_gamma_update(self.kernel, data.vals, data.cols,
+                                          data.sq_norms, gamma, z2, coef2,
+                                          self.inv_2s2)
+
+    def gamma_from_rows(self, gamma, rows, coef2):
+        from repro.kernels import ops
+        return ops.gamma_from_rows(gamma, rows, coef2)
+
+
+def make_provider(kernel: str, fmt: str = "dense", use_pallas: bool = False,
+                  inv_2s2: float = 1.0) -> RowProvider:
+    """Row provider for a (kernel, storage format, backend) combination —
+    the single entry point the solver/parallel/reconstruct layers use."""
+    if kernel not in _ROW:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    if fmt == "dense":
+        cls = DensePallasRowProvider if use_pallas else DenseRowProvider
+    elif fmt == "ell":
+        cls = ELLPallasRowProvider if use_pallas else ELLRowProvider
+    else:
+        raise ValueError(f"unknown data format {fmt!r}")
+    return cls(kernel, float(inv_2s2))
 
 
 def full_kernel_matrix(kernel: str, X: jax.Array, Z: jax.Array, inv_2s2: float,

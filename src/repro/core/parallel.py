@@ -22,7 +22,6 @@ coef partial sums — p steps, compute/comm overlappable, no kernel cache.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import numpy as np
@@ -31,7 +30,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import kernel_fns, smo, solver
+from repro.core import dataplane, kernel_fns, rowcache, smo, solver
 from repro.launch.mesh import shard_map_compat
 
 AXIS = "shards"
@@ -46,13 +45,34 @@ def data_mesh(n_devices: Optional[int] = None, axis: str = AXIS) -> Mesh:
 def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
                                inv_2s2: float, shrink_interval: int,
                                axis: str = AXIS, use_pallas: bool = False,
-                               fmt: str = "dense", n_features: int = 0):
+                               fmt: str = "dense", n_features: int = 0,
+                               selection: str = "wss1",
+                               cache_slots: int = 0):
     """shard_map SMO chunk. State scalars are replicated; arrays sharded.
 
     ``fmt='ell'`` consumes block-ELL shards (vals, cols, sq); candidate rows
     are densified locally before the all_gather so the collective payload
     stays the paper's (p, 2d+6) bcast shape, and the shard-local gamma sweep
-    runs on the sparse stream.
+    runs on the sparse stream. All row production goes through the
+    row-provider layer (``kernel_fns.make_provider``) on a locally
+    reassembled ``DenseData``/``ELLData`` view, so the gamma path here and
+    in the single-host runner are the same provider calls.
+
+    ``selection='wss2'`` threads second-order pair selection through the
+    mesh: i_up and the termination betas come from the usual fused
+    candidate exchange, then the i_up row is produced shard-locally, wss2
+    scores are maximized per shard, and ONE extra all_gather of
+    (score, gamma, alpha, y[, gid], x_row) elects i_low globally — so wss2
+    costs 2 all_gathers + 1 psum per iteration vs wss1's 1 + 1 (the paper's
+    two-collective budget holds for its own wss1 algorithm).
+
+    ``cache_slots`` > 0 threads the LRU kernel-row cache through the loop.
+    The (slots, M) value table is sharded over the mesh on the buffer axis
+    — each shard caches exactly its own M_local row segments — while the
+    tag/stamp tables replicate: lookups key on *global* sample ids, which
+    ride the candidate payload as two bitcast lanes (p x (2d+8) instead of
+    p x (2d+6); still one collective), so every shard takes identical
+    hit/miss branches with zero extra collectives.
 
     The ELL lane budget K is *not* closed over: it is a trace dimension
     (``vals_l.shape[1]``), so adaptive-K recompaction re-traces this runner
@@ -65,85 +85,147 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
     """
     kself = kernel_fns.self_kernel(kernel)
     row1 = kernel_fns.get_row(kernel)
-    if fmt == "ell":
-        ell_rows2 = kernel_fns.get_ell_rows2(kernel)
-    else:
-        rows2 = kernel_fns.get_rows2(kernel)
-    if use_pallas:
-        from repro.kernels import ops as kops
+    provider = kernel_fns.make_provider(kernel, fmt, use_pallas, inv_2s2)
+    cached = cache_slots > 0
+    n_data = 3 if fmt == "ell" else 2
+    gl = 2 if cached else 0          # gid lanes in the candidate payload
 
     def local_chunk(*args):
         if fmt == "ell":
-            (vals_l, cols_l, sq_l, y_l, alpha_l, gamma_l, active_l,
-             step0, next_shrink0, n_shrinks0, tol, max_iters) = args
-            d = n_features
-
-            def dense_row_local(j):
-                return jnp.zeros((d,), jnp.float32) \
-                    .at[cols_l[j]].add(vals_l[j])
+            vals_l, cols_l, sq_l = args[:3]
         else:
-            (X_l, sq_l, y_l, alpha_l, gamma_l, active_l,
-             step0, next_shrink0, n_shrinks0, tol, max_iters) = args
-            d = X_l.shape[1]
+            X_l, sq_l = args[:2]
+        rest = args[n_data:]
+        gid_l = None
+        cache0 = None
+        if cached:
+            gid_l, rest = rest[0], rest[1:]
+        (y_l, alpha_l, gamma_l, active_l,
+         step0, next_shrink0, n_shrinks0) = rest[:7]
+        rest = rest[7:]
+        if cached:
+            cache0, rest = rest[0], rest[1:]
+        tol, max_iters = rest
 
-            def dense_row_local(j):
-                return X_l[j]
+        if fmt == "ell":
+            ldata = dataplane.ELLData(vals_l, cols_l, sq_l, n_features,
+                                      gid_l)
+            d = n_features
+        else:
+            ldata = dataplane.DenseData(X_l, sq_l, gid_l)
+            d = X_l.shape[1]
         p = mesh.shape[axis]          # static (lax.axis_size is JAX >= 0.6)
         me = lax.axis_index(axis)
+        if selection == "wss2":
+            kdiag_l = provider.diag(ldata)
+
+        # Row access with structural parity between the cached and uncached
+        # executables — shared with the single-host runner because the
+        # barrier/cond structure is load-bearing for the bitwise exactness
+        # contract (see rowcache.make_accessors).
+        get_row1, get_rows2 = rowcache.make_accessors(
+            provider, ldata, cached, tol < 0.0)
 
         def gather_select(gamma_l, alpha_l, active_l):
             """Local Eq. 8 + fused candidate exchange. Returns replicated
             (b_up, b_low, payload rows/scalars) and my local candidate idx."""
             b_up_l, j_up, b_low_l, j_low = smo.select_pair(
                 gamma_l, alpha_l, y_l, active_l, C)
-            pay = jnp.concatenate([
-                jnp.stack([b_up_l, b_low_l, alpha_l[j_up], y_l[j_up],
-                           alpha_l[j_low], y_l[j_low]]),
-                dense_row_local(j_up), dense_row_local(j_low)])  # (6 + 2d,)
-            pays = lax.all_gather(pay, axis)               # (p, 6 + 2d)
+            parts = [jnp.stack([b_up_l, b_low_l, alpha_l[j_up], y_l[j_up],
+                                alpha_l[j_low], y_l[j_low]])]
+            if cached:               # global row ids ride as bitcast lanes
+                parts.append(lax.bitcast_convert_type(
+                    jnp.stack([gid_l[j_up], gid_l[j_low]]), jnp.float32))
+            parts += [ldata.dense_row(j_up), ldata.dense_row(j_low)]
+            pay = jnp.concatenate(parts)                   # (6 + gl + 2d,)
+            pays = lax.all_gather(pay, axis)               # (p, 6 + gl + 2d)
             k_up = jnp.argmin(pays[:, 0])
             k_low = jnp.argmax(pays[:, 1])
+            off = 6 + gl
             sel = dict(
                 beta_up=pays[k_up, 0], beta_low=pays[k_low, 1],
                 a_up=pays[k_up, 2], y_up=pays[k_up, 3],
                 a_low=pays[k_low, 4], y_low=pays[k_low, 5],
-                x_up=pays[k_up, 6: 6 + d], x_low=pays[k_low, 6 + d:],
+                x_up=pays[k_up, off: off + d], x_low=pays[k_low, off + d:],
                 k_up=k_up, k_low=k_low, j_up=j_up, j_low=j_low)
+            if cached:
+                sel["gid_up"] = lax.bitcast_convert_type(
+                    pays[k_up, 6], jnp.int32)
+                sel["gid_low"] = lax.bitcast_convert_type(
+                    pays[k_low, 7], jnp.int32)
             return sel
 
         def body(carry):
-            (alpha_l, gamma_l, active_l, sel, step, next_shrink,
+            (alpha_l, gamma_l, active_l, cache, sel, step, next_shrink,
              n_shrinks, conv, stalled) = carry
-            x2 = jnp.stack([sel["x_up"], sel["x_low"]])
-            k_ul = row1(sel["x_low"][None, :], jnp.sum(sel["x_low"] ** 2)[None],
-                        sel["x_up"], inv_2s2)[0]           # replicated O(d)
+            x_up = sel["x_up"]
+            k_uu = kself(x_up, inv_2s2)
+
+            if selection == "wss2":
+                # second-order i_low: i_up row shard-locally, then one
+                # extra candidate exchange electing the best-scored shard
+                row_up_l, cache = get_row1(
+                    cache, sel["gid_up"] if cached else None, x_up)
+                scores_l = smo.wss2_scores(
+                    gamma_l, alpha_l, y_l, active_l, C, sel["beta_up"],
+                    row_up_l, kdiag_l, k_uu)
+                j2 = jnp.argmax(scores_l)
+                parts2 = [jnp.stack([scores_l[j2], gamma_l[j2],
+                                     alpha_l[j2], y_l[j2]])]
+                if cached:
+                    parts2.append(lax.bitcast_convert_type(
+                        gid_l[j2][None], jnp.float32))
+                parts2.append(ldata.dense_row(j2))
+                pays2 = lax.all_gather(jnp.concatenate(parts2), axis)
+                k_low = jnp.argmax(pays2[:, 0])
+                off2 = 4 + (1 if cached else 0)
+                g_low = pays2[k_low, 1]
+                a_low = pays2[k_low, 2]
+                y_low = pays2[k_low, 3]
+                x_low = pays2[k_low, off2:]
+                gid_low = (lax.bitcast_convert_type(pays2[k_low, 4],
+                                                    jnp.int32)
+                           if cached else None)
+                j_low = j2
+            else:
+                g_low = sel["beta_low"]
+                a_low, y_low, x_low = sel["a_low"], sel["y_low"], sel["x_low"]
+                k_low, j_low = sel["k_low"], sel["j_low"]
+                gid_low = sel.get("gid_low")
+
+            x2 = jnp.stack([x_up, x_low])
+            # replicated O(d); barrier-isolated for the exactness contract
+            # (see smo.make_chunk_runner)
+            xu_b, xl_b = lax.optimization_barrier((x_up, x_low))
+            k_ul = lax.optimization_barrier(
+                row1(xl_b[None, :], jnp.sum(xl_b * xl_b)[None],
+                     xu_b, inv_2s2)[0])
             a_up_new, a_low_new = smo.pair_update(
-                sel["a_up"], sel["a_low"], sel["y_up"], sel["y_low"],
-                sel["beta_up"], sel["beta_low"], k_ul,
-                kself(sel["x_up"], inv_2s2), kself(sel["x_low"], inv_2s2), C)
+                sel["a_up"], a_low, sel["y_up"], y_low,
+                sel["beta_up"], g_low, k_ul,
+                k_uu, kself(x_low, inv_2s2), C)
             d_up = a_up_new - sel["a_up"]
-            d_low = a_low_new - sel["a_low"]
+            d_low = a_low_new - a_low
             stalled = (jnp.abs(d_up) < smo._TAU) & (jnp.abs(d_low) < smo._TAU)
 
             # owner shards write the new alphas back into their block
             alpha_l = jnp.where(me == sel["k_up"],
                                 alpha_l.at[sel["j_up"]].set(a_up_new), alpha_l)
-            alpha_l = jnp.where(me == sel["k_low"],
-                                alpha_l.at[sel["j_low"]].set(a_low_new), alpha_l)
-            coef2 = jnp.stack([sel["y_up"] * d_up, sel["y_low"] * d_low])
-            if fmt == "ell" and use_pallas:
-                gamma_l = kops.ell_fused_gamma_update(
-                    kernel, vals_l, cols_l, sq_l, gamma_l, x2, coef2,
-                    inv_2s2)
-            elif fmt == "ell":
-                rows = ell_rows2(vals_l, cols_l, sq_l, x2, inv_2s2)
-                gamma_l = gamma_l + rows @ coef2
-            elif use_pallas:
-                gamma_l = kops.fused_gamma_update(
-                    kernel, X_l, sq_l, gamma_l, x2, coef2, inv_2s2)
+            alpha_l = jnp.where(me == k_low,
+                                alpha_l.at[j_low].set(a_low_new), alpha_l)
+            coef2 = jnp.stack([sel["y_up"] * d_up, y_low * d_low])
+            if selection == "wss2":
+                row_low_l, cache = get_row1(cache, gid_low, x_low)
+                gamma_l = gamma_l + coef2[0] * row_up_l + coef2[1] * row_low_l
+            elif use_pallas and not cached:
+                # fused one-HBM-pass Pallas kernel; no exactness contract
+                # with the (rows2 + FMA) cached path on this backend
+                gamma_l = provider.gamma_update(ldata, gamma_l, x2, coef2)
             else:
-                rows = rows2(X_l, sq_l, x2, inv_2s2)       # (m_l, 2)
-                gamma_l = gamma_l + rows @ coef2
+                gid2 = (jnp.stack([sel["gid_up"], sel["gid_low"]])
+                        if cached else None)
+                rows_l, cache = get_rows2(cache, gid2, x2)  # (m_l, 2)
+                gamma_l = provider.gamma_from_rows(gamma_l, rows_l, coef2)
 
             step1 = step + 1
             do_shrink = (shrink_interval > 0) & (step1 >= next_shrink)
@@ -161,46 +243,68 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
 
             sel = gather_select(gamma_l, alpha_l, active_l)
             conv = sel["beta_up"] + tol >= sel["beta_low"]
-            return (alpha_l, gamma_l, active_l, sel, step1, next_shrink,
-                    n_shrinks, conv, stalled)
+            return (alpha_l, gamma_l, active_l, cache, sel, step1,
+                    next_shrink, n_shrinks, conv, stalled)
 
         def cond(carry):
-            (_, _, _, _, step, _, _, conv, stalled) = carry
+            (_, _, _, _, _, step, _, _, conv, stalled) = carry
             return (~conv) & (~stalled) & (step - step0 < max_iters)
 
         sel0 = gather_select(gamma_l, alpha_l, active_l)
         conv0 = sel0["beta_up"] + tol >= sel0["beta_low"]
-        carry = (alpha_l, gamma_l, active_l, sel0, step0, next_shrink0,
-                 n_shrinks0, conv0, jnp.bool_(False))
-        (alpha_l, gamma_l, active_l, sel, step, next_shrink, n_shrinks,
-         conv, stalled) = lax.while_loop(cond, body, carry)
-        return (alpha_l, gamma_l, active_l, sel["beta_up"], sel["beta_low"],
-                step, next_shrink, n_shrinks, conv, stalled)
+        carry = (alpha_l, gamma_l, active_l, cache0, sel0, step0,
+                 next_shrink0, n_shrinks0, conv0, jnp.bool_(False))
+        (alpha_l, gamma_l, active_l, cache, sel, step, next_shrink,
+         n_shrinks, conv, stalled) = lax.while_loop(cond, body, carry)
+        out = (alpha_l, gamma_l, active_l, sel["beta_up"], sel["beta_low"],
+               step, next_shrink, n_shrinks, conv, stalled)
+        if cached:
+            out += (cache,)
+        return out
 
     sharded = P(axis)
     rep = P()
     data_specs = ((P(axis, None), P(axis, None), sharded) if fmt == "ell"
                   else (P(axis, None), sharded))
-    mapped = shard_map_compat(
-        local_chunk, mesh=mesh,
-        in_specs=data_specs + (sharded, sharded, sharded, sharded,
-                               rep, rep, rep, rep, rep),
-        out_specs=(sharded, sharded, sharded, rep, rep, rep, rep, rep, rep,
-                   rep))
+    # tag/stamp/counter tables replicate (all shards take identical cache
+    # decisions — lookups key on replicated global ids); only the value
+    # table is sharded, on the buffer axis, so each shard caches its own
+    # M_local row segments.
+    cache_spec = rowcache.RowCache(
+        tags=rep, vals=P(None, axis), stamp=rep, tick=rep, hits=rep,
+        misses=rep)
+    in_specs = data_specs
+    if cached:
+        in_specs += (sharded,)                 # gids
+    in_specs += (sharded,) * 4 + (rep,) * 3
+    if cached:
+        in_specs += (cache_spec,)
+    in_specs += (rep, rep)
+    out_specs = (sharded, sharded, sharded) + (rep,) * 7
+    if cached:
+        out_specs += (cache_spec,)
+    mapped = shard_map_compat(local_chunk, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
     jitted = jax.jit(mapped)
 
-    def run_chunk(data, y, state: smo.SMOState, tol, max_iters: int):
+    def run_chunk(data, y, state: smo.SMOState, cache, tol, max_iters: int):
         dargs = ((data.vals, data.cols, data.sq_norms) if fmt == "ell"
                  else (data.X, data.sq_norms))
+        if cached:
+            dargs += (data.gids,)
+        args = dargs + (y, state.alpha, state.gamma, state.active,
+                        state.step, state.next_shrink, state.n_shrinks)
+        if cached:
+            args += (cache,)
+        args += (tol, jnp.int32(max_iters))
+        out = jitted(*args)
         (alpha, gamma, active, b_up, b_low, step, next_shrink, n_shrinks,
-         conv, stalled) = jitted(*dargs, y, state.alpha, state.gamma,
-                                 state.active, state.step, state.next_shrink,
-                                 state.n_shrinks, tol,
-                                 jnp.int32(max_iters))
+         conv, stalled) = out[:10]
+        cache_out = out[10] if cached else None
         return state._replace(
             alpha=alpha, gamma=gamma, active=active, beta_up=b_up,
             beta_low=b_low, step=step, next_shrink=next_shrink,
-            n_shrinks=n_shrinks, converged=conv, stalled=stalled)
+            n_shrinks=n_shrinks, converged=conv, stalled=stalled), cache_out
 
     return run_chunk
 
@@ -314,18 +418,25 @@ class ParallelSMOSolver(solver.SMOSolver):
         sh = self._sharding2d if arr.ndim == 2 else self._sharding
         return jax.device_put(jnp.asarray(arr), sh)
 
+    def _put_cache_vals(self, arr: np.ndarray):
+        """(slots, M) cache value table sharded on the buffer axis — each
+        shard caches its own M_local row segments, zero extra collectives."""
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh, P(None, self.axis)))
+
     def _runner(self, cfg, interval):
         fmt = self._store.fmt
         # n_features is baked into the ELL closures (candidate-row densify),
         # so it must key the cache: a refit on a different-width dataset
         # would otherwise silently scatter out-of-bounds.
         key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas, fmt,
-               self._store.n_features)
+               self._store.n_features, cfg.selection, self._cache_slots())
         if key not in self._runners:
             self._runners[key] = make_parallel_chunk_runner(
                 self.mesh, cfg.kernel, cfg.C, cfg.inv_2s2, interval,
                 self.axis, cfg.use_pallas, fmt=fmt,
-                n_features=self._store.n_features)
+                n_features=self._store.n_features, selection=cfg.selection,
+                cache_slots=self._cache_slots())
         return self._runners[key]
 
     def _reconstruct(self, y, alpha, stale):

@@ -6,6 +6,13 @@ evaluations — "the bottleneck in achieving the overall speedup" (Sec. 3.4) —
 so the driver triggers it only at the 20-eps / 2-eps thresholds of Alg. 5,
 and Single/Multi policies bound how often it runs.
 
+Kernel blocks go through the row-provider layer (``kernel_fns.make_provider``)
+against an SV device buffer built in the host store's *native* format: dense
+stores ship a ``DenseData`` block, ELL-family stores an ``ELLData`` block at
+the SV subset's own adaptive lane budget — the support-vector side of Alg. 6
+never densifies. Only the (row_block, d) stale-row query side travels dense,
+mirroring the chunk runners' "working-set rows travel dense" rule.
+
 Shapes are bucketed (next power of two) so jit recompiles O(log N) times at
 most across a whole training run.
 """
@@ -18,57 +25,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kernel_fns
+from repro.data import sparse as spfmt
 
 
 def _bucket(n: int, lo: int = 128) -> int:
     return max(lo, 1 << (int(n - 1)).bit_length()) if n > 0 else lo
 
 
-@functools.partial(jax.jit, static_argnames=("kernel", "block"))
-def _recon_block(kernel: str, Xi, yi, Xsv, coef, inv_2s2, block: int = 0):
-    """gamma for rows Xi given padded SV set (coef = alpha*y, 0 on padding)."""
-    K = kernel_fns.full_kernel_matrix(kernel, Xi, Xsv, inv_2s2)
-    return K @ coef - yi
-
-
-def reconstruct_gamma(kernel: str, X: np.ndarray, y: np.ndarray,
-                      alpha: np.ndarray, rows: np.ndarray, inv_2s2: float,
-                      row_block: int = 8192) -> np.ndarray:
-    """Return reconstructed gamma values for ``rows`` (global indices).
-
-    Host-side orchestration: gathers the support-vector set (alpha > 0 —
-    includes bound SVs at alpha = C, the false-positive class the paper
-    worries about), pads to a bucket, streams row blocks through a jitted
-    matmul. Mirrors Alg. 6's loop structure with the q-th-CPU loop replaced
-    by row-block streaming.
-    """
-    if rows.size == 0:
-        return np.zeros((0,), np.float32)
-    sv_idx = np.flatnonzero(alpha > 0.0)
-    if sv_idx.size == 0:
-        return (-y[rows]).astype(np.float32)
-
-    nsv_pad = _bucket(sv_idx.size)
-    Xsv = np.zeros((nsv_pad, X.shape[1]), X.dtype)
-    Xsv[: sv_idx.size] = X[sv_idx]
-    coef = np.zeros((nsv_pad,), np.float32)
-    coef[: sv_idx.size] = (alpha[sv_idx] * y[sv_idx]).astype(np.float32)
-
-    Xsv_d = jnp.asarray(Xsv)
-    coef_d = jnp.asarray(coef)
-
-    out = np.empty((rows.size,), np.float32)
-    for s in range(0, rows.size, row_block):
-        blk = rows[s: s + row_block]
-        nb = _bucket(blk.size)
-        Xi = np.zeros((nb, X.shape[1]), X.dtype)
-        Xi[: blk.size] = X[blk]
-        yi = np.zeros((nb,), np.float32)
-        yi[: blk.size] = y[blk]
-        g = _recon_block(kernel, jnp.asarray(Xi), jnp.asarray(yi),
-                         Xsv_d, coef_d, jnp.float32(inv_2s2))
-        out[s: s + blk.size] = np.asarray(g)[: blk.size]
-    return out
+@functools.partial(jax.jit, static_argnames=("provider",))
+def _recon_block(provider, sv_data, Zi, coef):
+    """Partial gamma for query rows Zi given an SV buffer in its native
+    storage format (coef = alpha*y, 0 on padding rows)."""
+    return provider.matrix(sv_data, Zi) @ coef
 
 
 def reconstruct_gamma_store(kernel: str, store, y: np.ndarray,
@@ -77,40 +45,64 @@ def reconstruct_gamma_store(kernel: str, store, y: np.ndarray,
                             sv_block: int = 8192) -> np.ndarray:
     """Alg. 6 over a data-plane store (dense, block-ELL, or CSR).
 
-    Dense stores delegate to :func:`reconstruct_gamma`. ELL-family stores
-    (``ELLStore``/``CSRStore``) densify *blocks* on the fly — (row_block, d)
-    stale rows x (sv_block, d) support vectors — so storage stays sparse and
-    peak dense scratch is bounded by the block sizes, never N*d (the paper's
-    Fig. 1b memory argument holds through reconstruction, including for
-    CSR-ingested datasets that never had a dense host form).
+    Host-side orchestration: gathers the support-vector set (alpha > 0 —
+    includes bound SVs at alpha = C, the false-positive class the paper
+    worries about) into native-format device blocks, densifies
+    (row_block, d) stale-row query blocks on the fly, and streams both
+    through the provider's ``matrix``. Peak dense scratch is bounded by the
+    block sizes, never N*d (the paper's Fig. 1b memory argument holds
+    through reconstruction, including for CSR-ingested datasets that never
+    had a dense host form). Mirrors Alg. 6's loop structure with the
+    q-th-CPU loop replaced by block streaming.
     """
-    if store.fmt == "dense":
-        return reconstruct_gamma(kernel, store.X, y, alpha, rows, inv_2s2,
-                                 row_block)
     if rows.size == 0:
         return np.zeros((0,), np.float32)
     sv_idx = np.flatnonzero(alpha > 0.0)
     if sv_idx.size == 0:
         return (-y[rows]).astype(np.float32)
 
+    provider = kernel_fns.make_provider(kernel, store.fmt, inv_2s2=inv_2s2)
     d = store.n_features
-    out = np.empty((rows.size,), np.float32)
-    for s in range(0, rows.size, row_block):
-        blk = rows[s: s + row_block]
-        nb = _bucket(blk.size)
-        Xi = np.zeros((nb, d), np.float32)
-        Xi[: blk.size] = store.dense_rows(blk)
-        Xi_d = jnp.asarray(Xi)
-        acc = np.zeros((nb,), np.float32)
-        for t in range(0, sv_idx.size, sv_block):
-            sub = sv_idx[t: t + sv_block]
-            nsv = _bucket(sub.size)
-            Xsv = np.zeros((nsv, d), np.float32)
-            Xsv[: sub.size] = store.dense_rows(sub)
-            coef = np.zeros((nsv,), np.float32)
-            coef[: sub.size] = (alpha[sub] * y[sub]).astype(np.float32)
-            acc += np.asarray(_recon_block(
-                kernel, Xi_d, jnp.zeros((nb,), jnp.float32),
-                jnp.asarray(Xsv), jnp.asarray(coef), jnp.float32(inv_2s2)))
-        out[s: s + blk.size] = acc[: blk.size] - y[blk]
-    return out
+    ell = store.fmt == "ell"
+
+    # SV blocks are the OUTER loop so at most one native-format SV device
+    # block is live at a time — peak device memory stays bounded by
+    # (sv_block, row_block) even when the support set itself outgrows
+    # device memory (the rcv1/webspam-scale regime the CSR data plane
+    # targets). Each SV block is built exactly once.
+    acc = np.zeros((rows.size,), np.float32)
+    for t in range(0, sv_idx.size, sv_block):
+        sub = sv_idx[t: t + sv_block]
+        nsv = _bucket(sub.size)
+        K = None
+        if ell:
+            # the SV subset's own lane budget, power-of-two bucketed so a
+            # drifting support set re-specializes O(log K) times
+            K = spfmt.bucket_lanes(store.buffer_K(sub), store.lane,
+                                   cap=store.K)
+        buf = store.alloc(nsv, K)
+        store.fill(buf, slice(0, sub.size), sub)
+        coef = np.zeros((nsv,), np.float32)
+        coef[: sub.size] = (alpha[sub] * y[sub]).astype(np.float32)
+        sv_data = store.to_device(buf, jnp.asarray)
+        coef_d = jnp.asarray(coef)
+        for s in range(0, rows.size, row_block):
+            blk = rows[s: s + row_block]
+            nb = _bucket(blk.size)
+            Zi = np.zeros((nb, d), np.float32)
+            Zi[: blk.size] = store.dense_rows(blk)
+            g = np.asarray(_recon_block(provider, sv_data, jnp.asarray(Zi),
+                                        coef_d))
+            acc[s: s + blk.size] += g[: blk.size]
+    return acc - y[rows]
+
+
+def reconstruct_gamma(kernel: str, X: np.ndarray, y: np.ndarray,
+                      alpha: np.ndarray, rows: np.ndarray, inv_2s2: float,
+                      row_block: int = 8192) -> np.ndarray:
+    """Dense-matrix convenience wrapper around
+    :func:`reconstruct_gamma_store` (kept for callers that hold a plain
+    (n, d) array rather than a data-plane store)."""
+    from repro.core import dataplane
+    return reconstruct_gamma_store(kernel, dataplane.DenseStore(X), y,
+                                   alpha, rows, inv_2s2, row_block)

@@ -1,0 +1,249 @@
+"""Device-resident LRU cache for kernel rows (the row-provider fast path).
+
+The paper recomputes every kernel row from scratch each iteration (Sec.
+3.1.1 — "no kernel cache"), which keeps the distributed story simple but
+leaves the dominant reuse pattern of SMO on the table: near convergence the
+working set collapses onto a small set of hot samples, and the same
+K(x_g, buffer) rows are requested over and over. This module adds the
+classic complement to shrinking — a fixed-slot, jit-compatible kernel-row
+cache — behind the row-provider layer (``kernel_fns.make_provider``), so
+every chunk runner gets it without knowing the storage format or backend.
+
+Layout
+------
+``RowCache`` is a pytree of statically-shaped arrays that lives in the
+jitted chunk's ``while_loop`` carry (no host round-trips):
+
+  * ``tags``  (S,)  i32 — **global** sample id cached in each slot, -1 empty;
+  * ``vals``  (S, M) f32 — the cached rows K(x_tag, buffer) over the current
+    buffer's M positions.  Under the parallel solver this table is sharded
+    over the mesh on the M axis, so each shard caches exactly its own
+    M_local row segment and every cache operation stays collective-free
+    (lookups key on replicated global ids, so all shards take identical
+    hit/miss branches and the tag table stays replicated by construction);
+  * ``stamp`` (S,)  i32 — last-use tick per slot (LRU eviction order);
+  * ``tick/hits/misses`` — i32 scalars.
+
+Slot count S is a trace dimension; the solver buckets it to a power of two
+(``SVMConfig.row_cache_slots``) so user-tuned capacities do not multiply
+the jit cache.
+
+Exactness
+---------
+Cached rows are exact values produced by the *same* provider kernels the
+cache-off path runs, and the hit policy for the fused two-row gamma pass is
+pairwise (serve from cache only when **both** rows are present, else
+recompute both rows fused exactly as the cache-off path would): cache-on
+and cache-off therefore produce bit-identical alpha/iteration trajectories.
+That property is the core correctness test (``tests/test_rowcache.py``).
+
+Invalidation-by-remap contract
+------------------------------
+A cached entry is a row over *buffer positions*, while its tag is a
+*global* id — global ids survive physical compaction.  At every buffer
+rebuild the solver calls :func:`remap_cache` with the old and new
+``idx_buf`` (buffer position -> global sample id, -1 on padding):
+
+  * **compaction** (new buffer rows are a subset of the old): every
+    surviving column existed in the old buffer, so cached rows are
+    *re-gathered* column-wise into the new geometry — the cache survives
+    the shrink and keeps its hit history.  New padding columns are zeroed;
+    that is safe because padding rows are never active, their gamma is
+    pinned at +inf, and the writeback masks them out.
+  * **reconstruction / un-shrink** (the buffer grows back): re-added
+    positions have no cached values, so no entry can be completed — the
+    cache is invalidated wholesale (tags reset, counters preserved).
+
+Checkpoints never store the cache: it is rebuilt empty on resume, which is
+trajectory-neutral because cached rows are exact.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class RowCache(NamedTuple):
+    """Fixed-slot LRU kernel-row cache (see module docstring)."""
+    tags: jax.Array     # (S,) i32 global sample ids, -1 = empty slot
+    vals: jax.Array     # (S, M) f32 cached rows over buffer positions
+    stamp: jax.Array    # (S,) i32 last-use tick
+    tick: jax.Array     # i32 — bumped once per cache access
+    hits: jax.Array     # i32 — rows served from the value table
+    misses: jax.Array   # i32 — rows (re)computed by the provider
+
+
+def init_cache(slots: int, m: int,
+               put_vals: Callable = jnp.asarray) -> RowCache:
+    """Empty cache for a buffer of M positions. ``put_vals`` places the
+    (S, M) value table — the parallel solver shards it over the mesh."""
+    return RowCache(
+        tags=jnp.full((slots,), -1, jnp.int32),
+        vals=put_vals(np.zeros((slots, m), np.float32)),
+        stamp=jnp.zeros((slots,), jnp.int32),
+        tick=jnp.int32(0),
+        hits=jnp.int32(0),
+        misses=jnp.int32(0),
+    )
+
+
+def bucket_slots(slots: int) -> int:
+    """Power-of-two slot bucketing (>= 2) — capacity is a shape dimension of
+    every cached chunk runner, so arbitrary user values must not each get
+    their own XLA executable."""
+    s = max(2, int(slots))
+    return 1 << (s - 1).bit_length()
+
+
+def _find(tags: jax.Array, gid: jax.Array):
+    present = tags == gid
+    return jnp.argmax(present), jnp.any(present)
+
+
+# Only the (M,)/(M, 2) row values ever cross a ``lax.cond`` boundary below:
+# XLA copies conditional operands/results, so letting the cond touch the
+# whole cache pytree (the (S, M) value table in particular) adds an O(S*M)
+# copy per iteration — measured at ~50% of the hot-loop time. Hence the
+# candidate slots are *gathered* unconditionally before the cond (two O(M)
+# reads), the cond chooses between the gathered rows and the provider
+# compute, and the tag/stamp/value writes happen unconditionally with
+# ``where``-selected slots; on a hit they rewrite the slot with its own
+# (bit-identical) row, which XLA performs as one O(M) dynamic-update-slice
+# on the loop-carried buffer.
+
+def _write(c: RowCache, gid, present, slot_e, row) -> tuple:
+    """Write ``row`` under ``gid``: its existing slot when present, else the
+    least-recently-used slot. Returns (cache, slot)."""
+    slot = jnp.where(present, slot_e, jnp.argmin(c.stamp))
+    return c._replace(
+        tags=c.tags.at[slot].set(gid),
+        vals=c.vals.at[slot].set(row),
+        stamp=c.stamp.at[slot].set(c.tick)), slot
+
+
+def get_row(cache: RowCache, gid: jax.Array, compute: Callable[[], jax.Array]):
+    """One row by global id: cached value on hit, ``compute()`` on miss.
+    ``compute`` must be shard-local (it runs inside ``lax.cond``, where a
+    collective would not be legal). Returns (row, cache)."""
+    cache = cache._replace(tick=cache.tick + 1)
+    slot, hit = _find(cache.tags, gid)
+    got = cache.vals[slot]                              # O(M), pre-cond
+    row = lax.cond(hit, lambda: got, compute)
+    cache, _ = _write(cache, gid, hit, slot, row)
+    return row, cache._replace(
+        hits=cache.hits + hit.astype(jnp.int32),
+        misses=cache.misses + (~hit).astype(jnp.int32))
+
+
+def get_pair(cache: RowCache, gid2: jax.Array,
+             compute2: Callable[[], jax.Array]):
+    """The fused two-row access of Eq. 6: returns ((M, 2) rows, cache).
+
+    Pairwise hit policy: the value table is consulted only when *both*
+    global ids are present; any miss recomputes both rows with the fused
+    two-row provider kernel (one HBM pass — exactly the cache-off path)
+    and inserts each row separately, so later pairs can hit on rows that
+    were produced by different iterations. This keeps cache-on bit-exact
+    against cache-off while still amortizing the dominant pair-repeat
+    pattern of late-stage SMO.
+    """
+    cache = cache._replace(tick=cache.tick + 1)
+    s0, h0 = _find(cache.tags, gid2[0])
+    s1, h1 = _find(cache.tags, gid2[1])
+    both = h0 & h1
+    got = jnp.stack([cache.vals[s0], cache.vals[s1]], axis=1)  # O(M), pre-cond
+    rows = lax.cond(both, lambda: got, compute2)               # (M, 2)
+    cache, slot0 = _write(cache, gid2[0], h0, s0, rows[:, 0])
+    # re-probe against the updated tags so gid2[1] == gid2[0] (or a fresh
+    # insert colliding with s1's stamp) resolves to the right slot
+    s1b, h1b = _find(cache.tags, gid2[1])
+    cache, _ = _write(cache, gid2[1], h1b, s1b, rows[:, 1])
+    two = jnp.int32(2)
+    return rows, cache._replace(
+        hits=cache.hits + jnp.where(both, two, 0),
+        misses=cache.misses + jnp.where(both, 0, two))
+
+
+def make_accessors(provider, data, cached: bool, never: jax.Array):
+    """The runners' row-access functions, cached and uncached — ONE
+    implementation because the exact barrier/cond structure is load-bearing
+    for the bitwise cache-on == cache-off contract:
+
+      * input/output ``optimization_barrier``s stop the row epilogue from
+        being duplicated into consumer fusions with context-dependent FMA
+        contraction (observed: 1-ulp row drift between runner variants);
+      * the uncached path wraps the compute in a degenerate runtime-false
+        ``lax.cond`` (``never`` must be a traced False, e.g. ``tol < 0``),
+        because the cached path computes rows inside its hit/miss cond and
+        XLA CPU codegens branch regions separately from the main region
+        (observed: 1-ulp exp drift between the same row computed in-branch
+        vs top-level).
+
+    ``data`` is the device buffer (``DenseData``/``ELLData``, or the
+    shard-local view under shard_map) the accessors close over. Returns
+    ``(get_row1(cache, gid, z), get_rows2(cache, gid2, z2))``, each giving
+    ``(rows, cache)``; pass ``gid``/``gid2`` = None when ``cached`` is
+    False.
+    """
+    def get_row1(c, gid, z):
+        compute = lambda: lax.optimization_barrier(
+            provider.row(data, lax.optimization_barrier(z)))
+        if cached:
+            return get_row(c, gid, compute)
+        zero = jnp.zeros_like(data.sq_norms)
+        return lax.cond(never, lambda: zero, compute), c
+
+    def get_rows2(c, gid2, z2):
+        compute = lambda: lax.optimization_barrier(
+            provider.rows2(data, lax.optimization_barrier(z2)))
+        if cached:
+            return get_pair(c, gid2, compute)
+        zero = jnp.zeros(data.sq_norms.shape + (2,), jnp.float32)
+        return lax.cond(never, lambda: zero, compute), c
+
+    return get_row1, get_rows2
+
+
+def remap_cache(cache: Optional[RowCache], old_idx: np.ndarray,
+                new_idx: np.ndarray,
+                put_vals: Callable = jnp.asarray) -> Optional[RowCache]:
+    """Host-side cache carry-over across a buffer rebuild (see module
+    docstring): re-gather value columns when the new buffer is a subset of
+    the old one (compaction), invalidate wholesale when it is not
+    (reconstruction / un-shrink re-adds rows with no cached values).
+
+    ``old_idx`` / ``new_idx`` are the driver's ``idx_buf`` arrays mapping
+    buffer position -> global sample id (-1 on padding rows).
+    """
+    if cache is None:
+        return None
+    slots = int(cache.tags.shape[0])
+    old_idx = np.asarray(old_idx, np.int64)
+    new_idx = np.asarray(new_idx, np.int64)
+    m_new = int(new_idx.size)
+    new_real = new_idx >= 0
+    old_real = old_idx >= 0
+    fresh = init_cache(slots, m_new, put_vals)
+    # tags are O(slots) — check them before touching the O(slots * M)
+    # value table, so an empty/just-invalidated cache never pays the
+    # device->host->device round-trip of the column gather below
+    if not new_real.any() or not old_real.any() \
+            or (np.asarray(cache.tags) == -1).all():
+        return fresh._replace(hits=cache.hits, misses=cache.misses,
+                              tick=cache.tick)
+    hi = int(max(old_idx.max(), new_idx.max())) + 1
+    pos = np.full((hi,), -1, np.int64)
+    pos[old_idx[old_real]] = np.flatnonzero(old_real)
+    src = pos[new_idx[new_real]]
+    if (src < 0).any():
+        # grown buffer: rows with no cached column anywhere -> invalidate
+        return fresh._replace(hits=cache.hits, misses=cache.misses,
+                              tick=cache.tick)
+    vals = np.asarray(cache.vals)
+    new_vals = np.zeros((slots, m_new), np.float32)
+    new_vals[:, new_real] = vals[:, src]
+    return cache._replace(vals=put_vals(new_vals))

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import kernel_fns
+from repro.core import kernel_fns, rowcache
 
 _INF = jnp.float32(jnp.inf)
 _TAU = 1e-12  # libsvm-style guard for non-PD pair curvature
@@ -110,11 +110,12 @@ def pair_update(alpha_up, alpha_low, y_up, y_low, g_up, g_low, k_ul, k_uu, k_ll,
     return a_up_new, a_low_new
 
 
-def wss2_select_low(gamma, alpha, y, active, C, g_up, row_up, kdiag, k_uu):
-    """Second-order working-set selection for i_low (the paper's stated
-    future work; Fan-Chen-Lin 2005 / libsvm WSS2): among violators
-    j in I_low with gamma_j > gamma_up, maximize b^2/a where
-    b = gamma_j - gamma_up and a = K_uu + K_jj - 2 K_uj."""
+def wss2_scores(gamma, alpha, y, active, C, g_up, row_up, kdiag, k_uu):
+    """Second-order selection scores for i_low (the paper's stated future
+    work; Fan-Chen-Lin 2005 / libsvm WSS2): among violators j in I_low with
+    gamma_j > gamma_up, score = b^2/a where b = gamma_j - gamma_up and
+    a = K_uu + K_jj - 2 K_uj; -inf elsewhere. Returned as a full (M,) array
+    so the parallel runner can argmax locally and compare shard winners."""
     pos = y > 0
     at_zero = alpha <= C * _BND
     at_c = alpha >= C * (1.0 - _BND)
@@ -122,17 +123,13 @@ def wss2_select_low(gamma, alpha, y, active, C, g_up, row_up, kdiag, k_uu):
     in_low = active & (interior | (pos & at_c) | (~pos & at_zero))
     b = gamma - g_up
     a = jnp.maximum(k_uu + kdiag - 2.0 * row_up, _TAU)
-    score = jnp.where(in_low & (b > 0), b * b / a, -_INF)
-    i_low = jnp.argmax(score)
-    # beta_low (termination) still uses the first-order max
-    g_low = jnp.where(in_low, gamma, -_INF)
-    return i_low, g_low[jnp.argmax(g_low)]
+    return jnp.where(in_low & (b > 0), b * b / a, -_INF)
 
 
 def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
                       shrink_interval: int, use_pallas: bool = False,
                       shrink_min_interval: int = 1, selection: str = "wss1",
-                      fmt: str = "dense"):
+                      fmt: str = "dense", cache_slots: int = 0):
     """Build the jitted chunk: run up to ``max_iters`` SMO iterations or until
     beta_up + tol >= beta_low over the active set.
 
@@ -142,14 +139,23 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
 
     ``selection``: 'wss1' = the paper's maximal-violating pair (Eq. 8);
     'wss2' = second-order pair selection — fewer iterations at the price of
-    two kernel-row passes per iteration instead of one fused two-row pass
+    two single-row passes per iteration instead of one fused two-row pass
     (the selection of i_low depends on the i_up row).
 
     ``fmt`` selects the sample storage the chunk consumes: 'dense' takes a
     ``dataplane.DenseData`` buffer, 'ell' a ``dataplane.ELLData`` one (the
     paper's sparse-format storage, Sec. 2.2). Working-set rows travel dense
     either way — O(d) per iteration — while the M-row kernel sweeps stay in
-    the buffer's native format.
+    the buffer's native format. All row production goes through the
+    row-provider layer (``kernel_fns.make_provider``), which hides the
+    fmt x backend combination behind one protocol.
+
+    ``cache_slots`` > 0 threads a device-resident LRU kernel-row cache
+    (``repro.core.rowcache``) through the loop: the chunk takes and returns
+    a ``RowCache`` pytree, serves Eq. 6 rows from it on hit, and recomputes
+    them with the exact cache-off provider kernels on miss — trajectories
+    are bit-identical either way. With ``cache_slots == 0`` the cache
+    argument is passed as None and the fused no-cache paths run unchanged.
 
     Nothing here closes over buffer geometry: M, and for ELL buffers the
     lane budget K, are trace dimensions of the jitted chunk, so one runner
@@ -157,41 +163,34 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
     adaptive-K recompaction just re-specializes the XLA executable per
     (M_bucket, K_bucket) pair, both power-of-two bucketed by the driver so
     the cache stays O(log M * log K) per runner, not one entry per
-    compaction.
+    compaction. Cache capacity is likewise bucketed (power-of-two slots).
     """
     row1 = kernel_fns.get_row(kernel)
     kself = kernel_fns.self_kernel(kernel)
-    if fmt == "ell":
-        ell_rows2 = kernel_fns.get_ell_rows2(kernel)
-        ell_row1 = kernel_fns.get_ell_row(kernel)
-    else:
-        rows2 = kernel_fns.get_rows2(kernel)
-    if use_pallas:
-        from repro.kernels import ops as kops  # deferred: optional dependency
+    provider = kernel_fns.make_provider(kernel, fmt, use_pallas, inv_2s2)
+    cached = cache_slots > 0
 
-    def krow(data, z):
-        """Full kernel row K(z, buffer) in the buffer's storage format."""
-        if fmt == "ell":
-            return ell_row1(data.vals, data.cols, data.sq_norms, z, inv_2s2)
-        return row1(data.X, data.sq_norms, z, inv_2s2)
-
-    @functools.partial(jax.jit, static_argnames=("max_iters",), donate_argnums=(2,))
-    def run_chunk(data, y, state: SMOState, tol: jax.Array,
-                  max_iters: int) -> SMOState:
+    @functools.partial(jax.jit, static_argnames=("max_iters",),
+                       donate_argnums=(2, 3))
+    def run_chunk(data, y, state: SMOState, cache, tol: jax.Array,
+                  max_iters: int):
         start = state.step
-        sq_norms = data.sq_norms
 
-        def cond(s: SMOState):
+        def cond(carry):
+            s, _ = carry
             return (~s.converged) & (~s.stalled) & (s.step - start < max_iters)
 
-        if kernel == "rbf":
-            kdiag = jnp.ones_like(sq_norms)
-        elif kernel == "linear":
-            kdiag = sq_norms
-        else:
-            kdiag = (inv_2s2 * sq_norms + 1.0) ** 3
+        if selection == "wss2":
+            kdiag = provider.diag(data)
 
-        def body(s: SMOState) -> SMOState:
+        # Row access with structural parity between the cached and uncached
+        # executables — the shared factory is load-bearing for the bitwise
+        # exactness contract (see rowcache.make_accessors).
+        get_row1, get_rows2 = rowcache.make_accessors(
+            provider, data, cached, tol < 0.0)
+
+        def body(carry):
+            s, c = carry
             iu = s.i_up
             x_up = data.dense_row(iu)
             y_up = y[iu]
@@ -199,9 +198,11 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
             k_uu = kself(x_up, inv_2s2)
 
             if selection == "wss2":
-                row_up = krow(data, x_up)                       # (M,)
-                il, _ = wss2_select_low(s.gamma, s.alpha, y, s.active, C,
-                                        s.beta_up, row_up, kdiag, k_uu)
+                row_up, c = get_row1(c, data.gids[iu] if cached else None,
+                                     x_up)                      # (M,)
+                scores = wss2_scores(s.gamma, s.alpha, y, s.active, C,
+                                     s.beta_up, row_up, kdiag, k_uu)
+                il = jnp.argmax(scores)
                 g_low = s.gamma[il]
             else:
                 il = s.i_low
@@ -212,9 +213,16 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
 
             z2 = jnp.stack([x_up, x_low])                       # (2, d)
             # K(x_up, x_low) directly from the two rows — O(d), avoids
-            # depending on the full kernel-row computation.
-            k_ul = row1(x_low[None, :], jnp.sum(x_low * x_low)[None],
-                        x_up, inv_2s2)[0]
+            # depending on the full kernel-row computation. The barriers pin
+            # this scalar island to an identical isolated subgraph in every
+            # runner variant: without them XLA contracts the dot/FMA chain
+            # differently depending on surrounding fusion (observed 1-ulp
+            # k_ul drift between the cached and uncached executables), which
+            # would break the cache-on == cache-off exactness contract.
+            xu_b, xl_b = lax.optimization_barrier((x_up, x_low))
+            k_ul = lax.optimization_barrier(
+                row1(xl_b[None, :], jnp.sum(xl_b * xl_b)[None],
+                     xu_b, inv_2s2)[0])
             k_ll = kself(x_low, inv_2s2)
 
             a_up_new, a_low_new = pair_update(
@@ -227,23 +235,21 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
             alpha = s.alpha.at[iu].set(a_up_new).at[il].set(a_low_new)
             # Eq. 6 — fused dual-row FMA; gamma kept for every buffer row.
             coef2 = jnp.stack([y_up * d_up, y_low * d_low])
-            if use_pallas and fmt == "ell":
-                gamma = kops.ell_fused_gamma_update(
-                    kernel, data.vals, data.cols, sq_norms, s.gamma, z2,
-                    coef2, inv_2s2)
-            elif use_pallas:
-                gamma = kops.fused_gamma_update(
-                    kernel, data.X, sq_norms, s.gamma, z2, coef2, inv_2s2)
-            elif selection == "wss2":
-                row_low = krow(data, x_low)
+            if selection == "wss2":
+                # the i_up row is already in hand from selection; one more
+                # single-row pass finishes Eq. 6 (both rows cacheable)
+                row_low, c = get_row1(c, data.gids[il] if cached else None,
+                                      x_low)
                 gamma = s.gamma + coef2[0] * row_up + coef2[1] * row_low
-            elif fmt == "ell":
-                rows = ell_rows2(data.vals, data.cols, sq_norms, z2,
-                                 inv_2s2)                       # (M, 2)
-                gamma = s.gamma + rows @ coef2
+            elif use_pallas and not cached:
+                # fused one-HBM-pass Pallas kernel; no exactness contract
+                # with the (rows2 + FMA) cached path on this backend
+                gamma = provider.gamma_update(data, s.gamma, z2, coef2)
             else:
-                rows = rows2(data.X, sq_norms, z2, inv_2s2)     # (M, 2)
-                gamma = s.gamma + rows @ coef2
+                gid2 = (jnp.stack([data.gids[iu], data.gids[il]])
+                        if cached else None)
+                rows, c = get_rows2(c, gid2, z2)                # (M, 2)
+                gamma = provider.gamma_from_rows(s.gamma, rows, coef2)
 
             # Alg. 4 / Sec. 3.3.1: apply Eq. 10 when the counter fires.
             step1 = s.step + 1
@@ -262,8 +268,9 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
 
             b_up, i_up, b_low, i_low = select_pair(gamma, alpha, y, active, C)
             converged = b_up + tol >= b_low
-            return SMOState(alpha, gamma, active, b_up, b_low, i_up, i_low,
-                            step1, next_shrink, n_shrinks, converged, stalled)
+            return (SMOState(alpha, gamma, active, b_up, b_low, i_up, i_low,
+                             step1, next_shrink, n_shrinks, converged,
+                             stalled), c)
 
         s = state
         # (Re)establish selection/convergence for the current buffer before
@@ -273,19 +280,23 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
         s = s._replace(beta_up=b_up, i_up=i_up, beta_low=b_low, i_low=i_low,
                        converged=b_up + tol >= b_low,
                        stalled=jnp.bool_(False))
-        return lax.while_loop(cond, body, s)
+        return lax.while_loop(cond, body, (s, cache))
 
     return run_chunk
 
 
-def init_state(y: jax.Array, valid: jax.Array) -> SMOState:
-    """Alg. 1 lines 1-3: alpha = 0, gamma = -y; selection filled by runner."""
-    n = y.shape[0]
-    z = jnp.zeros((n,), jnp.float32)
+def init_state(alpha: jax.Array, gamma: jax.Array,
+               active: jax.Array) -> SMOState:
+    """Fresh chunk state around the given buffer arrays — the single source
+    of truth for the non-array scalar fields. Alg. 1 lines 1-3 correspond
+    to alpha = 0, gamma = -y on the initial buffer; the driver passes
+    whatever the current (possibly compacted/restored) buffer holds.
+    Selection scalars are (re)established by the runner before its first
+    iteration."""
     return SMOState(
-        alpha=z,
-        gamma=(-y).astype(jnp.float32),
-        active=valid.astype(bool),
+        alpha=alpha,
+        gamma=gamma,
+        active=active,
         beta_up=jnp.float32(-1.0),
         beta_low=jnp.float32(1.0),
         i_up=jnp.int32(0),

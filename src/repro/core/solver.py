@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import dataplane
 from repro.core import heuristics as H
-from repro.core import kernel_fns, reconstruct, smo
+from repro.core import kernel_fns, reconstruct, rowcache, smo
 from repro.data import sparse as spfmt
 
 
@@ -54,6 +54,11 @@ class SVMConfig:
                                  # every buffer build/compaction (bucketed to
                                  # power-of-two lanes); False pins K to the
                                  # store-wide ingest budget
+    row_cache: bool = False      # device-resident LRU kernel-row cache in
+                                 # front of the row provider; exact (cache
+                                 # on/off trajectories are bit-identical)
+    row_cache_slots: int = 64    # cache capacity (rows); bucketed to a power
+                                 # of two so it is not a jit retrace dimension
     max_iters: int = 4_000_000
     chunk_iters: int = 256       # jitted while_loop segment length; smaller
                                  # chunks let physical compaction engage
@@ -95,7 +100,14 @@ class FitStats:
     # per-buffer tuple of lane-rounded K per shard (host-side raggedness;
     # the device array is padded to max(shard_K) — XLA collectives need
     # uniform shapes, unlike the paper's per-rank MPI buffers)
-    flops_est: float = 0.0       # model FLOPs of the gamma-update hot loop
+    flops_est: float = 0.0       # model FLOPs of the gamma-update hot loop;
+                                 # selection-aware (wss2 bills two single-row
+                                 # passes + the selection sweep) and cache-
+                                 # aware (hits skip the kernel-row pass and
+                                 # are billed only the O(M) FMA epilogue)
+    cache_hits: int = 0          # kernel rows served from the LRU row cache
+    cache_misses: int = 0        # kernel rows (re)computed by the provider
+    cache_hit_rate: float = 0.0  # hits / (hits + misses); 0 when cache off
 
 
 @dataclasses.dataclass
@@ -111,17 +123,22 @@ class SVMModel:
     n_features: "int | None" = None       # d (set for ELL models)
 
     def _sv_kernel_fn(self):
-        """jitted z_block -> K(z_block, SVs) in the SV storage format."""
+        """jitted z_block -> K(z_block, SVs): the row provider's ``matrix``
+        over an SV device buffer in its native storage format."""
         cfg = self.config
         if self.sv_vals is not None:
             vals = jnp.asarray(self.sv_vals)
-            cols = jnp.asarray(self.sv_cols)
-            sq = jnp.sum(vals * vals, axis=-1)
-            return jax.jit(lambda z: kernel_fns.ell_cross_kernel(
-                cfg.kernel, z, vals, cols, sq, cfg.inv_2s2))
-        svx = jnp.asarray(self.sv_x)
-        return jax.jit(lambda z: kernel_fns.full_kernel_matrix(
-            cfg.kernel, z, svx, cfg.inv_2s2))
+            data = dataplane.ELLData(vals, jnp.asarray(self.sv_cols),
+                                     jnp.sum(vals * vals, axis=-1),
+                                     self.n_features)
+            fmt = "ell"
+        else:
+            svx = jnp.asarray(self.sv_x)
+            data = dataplane.DenseData(svx, jnp.sum(svx * svx, axis=-1))
+            fmt = "dense"
+        provider = kernel_fns.make_provider(cfg.kernel, fmt,
+                                            inv_2s2=cfg.inv_2s2)
+        return jax.jit(lambda z: provider.matrix(data, z))
 
     def _sv_dense(self) -> np.ndarray:
         """Support vectors as a dense (n_sv, d) block (query side of K)."""
@@ -171,13 +188,32 @@ class SMOSolver:
         self.h = H.get(config.heuristic)
 
     # -- backend hooks (overridden by repro.core.parallel) --------------------
+    def _cache_slots(self) -> int:
+        """Row-cache capacity: 0 when disabled, else power-of-two bucketed
+        so user-tuned values do not each get their own XLA executable."""
+        if not self.cfg.row_cache:
+            return 0
+        return rowcache.bucket_slots(self.cfg.row_cache_slots)
+
+    def _put_cache_vals(self, arr: np.ndarray):
+        """Placement for the (slots, M) cache value table; the parallel
+        subclass shards it over the mesh on the buffer axis."""
+        return jnp.asarray(arr)
+
+    def _new_cache(self, m: int):
+        slots = self._cache_slots()
+        if slots == 0:
+            return None
+        return rowcache.init_cache(slots, m, self._put_cache_vals)
+
     def _runner(self, cfg: SVMConfig, interval: int):
         key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas,
-               cfg.selection, cfg.format)
+               cfg.selection, cfg.format, self._cache_slots())
         if key not in _RUNNER_CACHE:
             _RUNNER_CACHE[key] = smo.make_chunk_runner(
                 cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas,
-                selection=cfg.selection, fmt=cfg.format)
+                selection=cfg.selection, fmt=cfg.format,
+                cache_slots=self._cache_slots())
         return _RUNNER_CACHE[key]
 
     def _reconstruct(self, y, alpha, stale):
@@ -246,15 +282,12 @@ class SMOSolver:
                 shard_K.append(self._store.buffer_K(sub))
             off += cnt
         self._last_shard_K = tuple(shard_K)
-        data = self._store.to_device(buf, self._put)
-        state = smo.SMOState(
-            alpha=self._put(ab), gamma=self._put(gb),
-            active=self._put(valid),
-            beta_up=jnp.float32(-1.0), beta_low=jnp.float32(1.0),
-            i_up=jnp.int32(0), i_low=jnp.int32(0),
-            step=jnp.int32(0), next_shrink=jnp.int32(0),
-            n_shrinks=jnp.int32(0), converged=jnp.bool_(False),
-            stalled=jnp.bool_(False))
+        # row identity travels with the buffer only when the row cache needs
+        # it — cache-off chunk graphs stay exactly as before
+        data = self._store.to_device(
+            buf, self._put, gids=idx_buf if self._cache_slots() else None)
+        state = smo.init_state(self._put(ab), self._put(gb),
+                               self._put(valid))
         return data, self._put(yb), state, idx_buf
 
     # -- fault tolerance -------------------------------------------------
@@ -344,6 +377,12 @@ class SMOSolver:
         if run_interval > 0:
             state = state._replace(next_shrink=jnp.int32(step0 + run_interval))
         ckpt_count = 0
+        # LRU kernel-row cache (None when off). Never checkpointed: cached
+        # rows are exact, so rebuilding it empty on resume is trajectory-
+        # neutral. miss_seen tracks the cumulative miss counter so each
+        # chunk's flops bill only the rows actually recomputed.
+        cache = self._new_cache(data.m)
+        miss_seen = 0
 
         while True:
             tol = tol20 if (shrink_on and recon_count == 0) else tol2
@@ -351,17 +390,29 @@ class SMOSolver:
             while True:
                 tc = time.perf_counter()
                 step_before = int(state.step)
-                state = runner(data, yb, state, tol,
-                               min(cfg.chunk_iters,
-                                   max(1, cfg.max_iters - int(state.step))))
+                state, cache = runner(data, yb, state, cache, tol,
+                                      min(cfg.chunk_iters,
+                                          max(1, cfg.max_iters
+                                              - int(state.step))))
                 state.converged.block_until_ready()
                 t_train += time.perf_counter() - tc
                 n_active = int(jnp.sum(state.active))
                 stats.min_active = min(stats.min_active, n_active)
-                # hot-loop model FLOPs: per iter ~ M * per-row cost of the
-                # fused two-row gamma update (format-dependent)
-                stats.flops_est += (int(state.step) - step_before) * \
-                    float(data.m) * data.flops_per_row()
+                # hot-loop model FLOPs, selection- and cache-aware: each
+                # iteration pays the O(M) epilogue (Eq. 6 FMA; wss2 adds the
+                # second-order selection sweep), plus one kernel-row pass
+                # per row actually computed — 2/iter without the cache, the
+                # provider-miss count with it.
+                iters_done = int(state.step) - step_before
+                if cache is not None:
+                    misses_now = int(cache.misses)
+                    rows_new = misses_now - miss_seen
+                    miss_seen = misses_now
+                else:
+                    rows_new = 2 * iters_done
+                epilogue = 12.0 if cfg.selection == "wss2" else 4.0
+                stats.flops_est += (rows_new * data.flops_row_pass()
+                                    + iters_done * epilogue) * float(data.m)
                 if cfg.checkpoint_dir:
                     ckpt_count += 1
                     if ckpt_count % cfg.checkpoint_every == 0:
@@ -387,8 +438,13 @@ class SMOSolver:
                     alpha, gamma = self._writeback(state, idx, alpha, gamma)
                     keep_mask = (idx >= 0) & np.asarray(state.active)
                     keep = idx[keep_mask]
+                    idx_old = idx
                     data, yb, state2, idx = self._make_buffer(
                         y, alpha, gamma, keep)
+                    # survivors keep their global ids -> cached rows are
+                    # re-gathered into the compacted geometry, not dropped
+                    cache = rowcache.remap_cache(cache, idx_old, idx,
+                                                 self._put_cache_vals)
                     state = state2._replace(
                         step=state.step,
                         next_shrink=state.step + max(1, min(interval, keep.size)),
@@ -422,10 +478,15 @@ class SMOSolver:
             if b_up + 2.0 * cfg.eps >= b_low:
                 state = state._replace(converged=jnp.bool_(True))
                 break
-            # un-shrink: rebuild full buffer; Single disables shrinking
+            # un-shrink: rebuild full buffer; Single disables shrinking.
+            # The grown buffer re-adds rows no cached entry has values for,
+            # so remap_cache invalidates here (counters survive).
             step_save, nshr = int(state.step), int(state.n_shrinks)
+            idx_old = idx
             data, yb, state, idx = self._make_buffer(
                 y, alpha, gamma, np.arange(n))
+            cache = rowcache.remap_cache(cache, idx_old, idx,
+                                         self._put_cache_vals)
             self._note_buffer(stats, data)
             if h.policy == "single":
                 shrink_on = False
@@ -453,6 +514,11 @@ class SMOSolver:
         stats.converged = bool(b_up + 2 * cfg.eps >= b_low)
         stats.stalled = stalled
         stats.final_gap = float(b_low - b_up)
+        if cache is not None:
+            stats.cache_hits = int(cache.hits)
+            stats.cache_misses = int(cache.misses)
+            looked = stats.cache_hits + stats.cache_misses
+            stats.cache_hit_rate = stats.cache_hits / looked if looked else 0.0
         coef = (alpha[sv] * y[sv]).astype(np.float32)
         if self._store.fmt == "ell":
             # SV extraction at the SVs' own adaptive K (lane-rounded max

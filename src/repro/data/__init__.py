@@ -1,6 +1,7 @@
 """Data substrate: synthetic dataset generators (paper Table 2 stand-ins),
 sparse CSR/block-ELL formats, deterministic LM token pipeline."""
-from repro.data.synthetic import SPECS, DatasetSpec, make, make_sparse, density
+from repro.data.synthetic import (SPECS, DatasetSpec, make, make_sparse,
+                                  make_repeat_heavy, density)
 from repro.data.sparse import (CSRMatrix, ELLMatrix, as_csr, is_csr_like,
                                to_csr, to_ell, ell_row_extent, round_lanes,
                                bucket_lanes, csr_space_report)

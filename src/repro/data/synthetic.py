@@ -163,3 +163,24 @@ def make_sparse(n: int, d: int, density: float, seed: int = 0,
     if np.all(y == y[0]):
         y[: y.size // 2] = -y[0]
     return X[:n], y[:n]
+
+
+def make_repeat_heavy(n: int = 2048, d: int = 768, density: float = 0.25,
+                      sep: float = 0.8, seed: int = 1):
+    """Repeat-heavy SMO workload: two overlapping sparse Gaussian blobs.
+
+    Driven to a low tolerance, the maximal-violating-pair loop spends a
+    long convergence tail bouncing inside a hot working set — the access
+    pattern the kernel-row LRU cache (``SVMConfig(row_cache=True)``)
+    amortizes. The canonical workload of the cache benchmark
+    (``benchmarks/sparse_bench.py --cache-out``) and the example; keep the
+    three consumers on this one generator so they measure the same thing.
+    Returns (X, y), X dense at the given Bernoulli density.
+    """
+    rng = np.random.default_rng(seed)
+    X = np.vstack([rng.normal(+sep, 1, (n // 2, d)),
+                   rng.normal(-sep, 1, (n - n // 2, d))]).astype(np.float32)
+    X *= rng.random((n, d)) < density
+    y = np.concatenate([np.ones(n // 2),
+                        -np.ones(n - n // 2)]).astype(np.float32)
+    return X, y

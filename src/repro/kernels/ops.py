@@ -73,6 +73,22 @@ def fused_gamma_update(kernel: str, X: jax.Array, sq_norms: jax.Array,
                             block_m=bm, interpret=_interpret())
 
 
+def gamma_from_rows(gamma: jax.Array, rows: jax.Array,
+                    coef2: jax.Array) -> jax.Array:
+    """Eq. 6 epilogue from already-produced kernel rows: gamma + rows@coef2.
+
+    This is the Pallas-path consumer of the row-provider layer's output —
+    when the solver's LRU row cache serves a hit, the fused
+    ``(ell_)fused_gamma_update`` kernels (which recompute rows from the
+    sample storage) are bypassed and only this O(M) FMA runs. It is a plain
+    XLA fusion on purpose: the (M, 2) rows are already in HBM/registers and
+    a dedicated kernel would add launch overhead for a memory-bound FMA.
+    Kept bit-identical to the jnp providers' ``gamma + rows @ coef2`` so
+    cache hits and misses compose exactly.
+    """
+    return gamma + rows @ coef2
+
+
 def _pick_ell_block_m(n: int, K: int = 128) -> int:
     """Largest block (<=512, >=64) dividing n whose (vals, cols) tiles fit
     the VMEM budget at lane budget K. Adaptive-K recompaction makes K a

@@ -20,6 +20,12 @@ def main():
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--format", default="dense", choices=("dense", "ell"),
                     help="sample storage: dense or block-ELL sparse")
+    ap.add_argument("--selection", default="wss1", choices=("wss1", "wss2"),
+                    help="working-set selection: first- or second-order")
+    ap.add_argument("--row-cache", action="store_true",
+                    help="device-resident LRU kernel-row cache (exact: "
+                         "identical trajectory, fewer kernel-row passes)")
+    ap.add_argument("--row-cache-slots", type=int, default=64)
     args = ap.parse_args()
 
     from repro.core import SMOSolver, SVMConfig
@@ -30,7 +36,9 @@ def main():
     cfg = SVMConfig(C=spec.C, sigma2=spec.sigma2, eps=args.eps,
                     heuristic=args.heuristic, chunk_iters=args.chunk_iters,
                     checkpoint_dir=args.ckpt_dir, resume=args.resume,
-                    use_pallas=args.use_pallas, format=args.format)
+                    use_pallas=args.use_pallas, format=args.format,
+                    selection=args.selection, row_cache=args.row_cache,
+                    row_cache_slots=args.row_cache_slots)
     if args.parallel:
         from repro.core.parallel import ParallelSMOSolver
         solver = ParallelSMOSolver(cfg)
@@ -38,9 +46,10 @@ def main():
         solver = SMOSolver(cfg)
     m = solver.fit(X, y)
     s = m.stats
+    cache = (f" cache_hit={s.cache_hit_rate:.2f}" if args.row_cache else "")
     print(f"{args.dataset}/{args.heuristic}: iters={s.iterations} "
           f"nsv={s.n_sv} conv={s.converged} recon={s.reconstructions} "
-          f"train={s.train_time:.2f}s recon_t={s.recon_time:.2f}s")
+          f"train={s.train_time:.2f}s recon_t={s.recon_time:.2f}s{cache}")
     if len(yt):
         print(f"test acc: {(m.predict(Xt) == yt).mean():.4f}")
 

@@ -1,0 +1,216 @@
+"""Kernel-row LRU cache + row-provider layer: unit semantics, the
+cache-on == cache-off bitwise exactness contract (single-host and
+multi-device, dense and ELL, wss1 and wss2), the invalidation-by-remap
+lifecycle, cache-aware FLOP accounting, and the Table 3 heuristic grid
+running against the cached hot loop."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import SMOSolver, SVMConfig, TABLE3, rowcache, train
+from repro.data import make_sparse
+from test_distributed import run_sub
+
+
+def _blobs(n=400, d=6, sep=0.9, seed=0):
+    rng = np.random.default_rng(seed)
+    X = np.vstack([rng.normal(+sep, 1, (n // 2, d)),
+                   rng.normal(-sep, 1, (n // 2, d))]).astype(np.float32)
+    y = np.concatenate([np.ones(n // 2), -np.ones(n // 2)]).astype(np.float32)
+    return X, y
+
+
+# ------------------------------------------------------------------ unit ops
+def test_get_pair_hit_miss_and_lru():
+    c = rowcache.init_cache(4, 8)
+    mk = lambda a, b: jnp.asarray([a, b], jnp.int32)
+    rows_ab = jnp.stack([jnp.full((8,), 1.0), jnp.full((8,), 2.0)], axis=1)
+    rows, c = rowcache.get_pair(c, mk(10, 11), lambda: rows_ab)
+    assert (int(c.hits), int(c.misses)) == (0, 2)
+    np.testing.assert_array_equal(rows, rows_ab)
+    # same pair again: served from the table, no compute
+    boom = lambda: jnp.full((8, 2), np.nan)
+    rows, c = rowcache.get_pair(c, mk(10, 11), boom)
+    assert (int(c.hits), int(c.misses)) == (2, 2)
+    np.testing.assert_array_equal(rows, rows_ab)
+    # rows inserted by different pairs can pair-hit together
+    rows2 = jnp.stack([jnp.full((8,), 3.0), jnp.full((8,), 4.0)], axis=1)
+    _, c = rowcache.get_pair(c, mk(12, 13), lambda: rows2)
+    got, c = rowcache.get_pair(c, mk(11, 12), boom)
+    assert int(c.hits) == 4
+    np.testing.assert_array_equal(got[:, 0], rows_ab[:, 1])
+    np.testing.assert_array_equal(got[:, 1], rows2[:, 0])
+    # table is full: a fresh pair evicts the two least-recently-used slots
+    # (10 and 13; 11/12 were just touched)
+    rows3 = jnp.stack([jnp.full((8,), 5.0), jnp.full((8,), 6.0)], axis=1)
+    _, c = rowcache.get_pair(c, mk(20, 21), lambda: rows3)
+    assert set(np.asarray(c.tags).tolist()) == {11, 12, 20, 21}
+
+
+def test_get_row_single_and_duplicate_gid():
+    c = rowcache.init_cache(2, 4)
+    r1 = jnp.full((4,), 7.0)
+    row, c = rowcache.get_row(c, jnp.int32(5), lambda: r1)
+    assert (int(c.hits), int(c.misses)) == (0, 1)
+    row, c = rowcache.get_row(c, jnp.int32(5), lambda: jnp.full((4,), np.nan))
+    assert (int(c.hits), int(c.misses)) == (1, 1)
+    np.testing.assert_array_equal(row, r1)
+    # duplicate gids in one pair collapse onto one slot, not two
+    c = rowcache.init_cache(4, 4)
+    dup = jnp.stack([r1, r1], axis=1)
+    _, c = rowcache.get_pair(c, jnp.asarray([9, 9], jnp.int32), lambda: dup)
+    assert int(np.sum(np.asarray(c.tags) == 9)) == 1
+
+
+def test_remap_shrink_regathers_grow_invalidates():
+    c = rowcache.init_cache(3, 6)
+    vals = np.arange(18, dtype=np.float32).reshape(3, 6)
+    c = c._replace(tags=jnp.asarray([4, 9, -1], jnp.int32),
+                   vals=jnp.asarray(vals), hits=jnp.int32(5),
+                   misses=jnp.int32(7))
+    old_idx = np.array([2, 4, 7, 9, -1, -1])
+    new_idx = np.array([4, 9, -1, -1])       # compaction: subset survives
+    r = rowcache.remap_cache(c, old_idx, new_idx)
+    np.testing.assert_array_equal(r.tags, [4, 9, -1])   # entries survive
+    np.testing.assert_array_equal(np.asarray(r.vals)[:, :2], vals[:, [1, 3]])
+    np.testing.assert_array_equal(np.asarray(r.vals)[:, 2:], 0.0)
+    assert (int(r.hits), int(r.misses)) == (5, 7)       # counters carry over
+    # un-shrink: re-added rows have no cached columns -> wholesale drop
+    g = rowcache.remap_cache(c, old_idx, np.array([2, 4, 5, 7, 9, -1]))
+    assert (np.asarray(g.tags) == -1).all()
+    assert (int(g.hits), int(g.misses)) == (5, 7)
+    assert rowcache.remap_cache(None, old_idx, new_idx) is None
+
+
+# ------------------------------------------------- exactness (the core test)
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+def test_cache_exactness_through_compaction_and_reconstruction(fmt):
+    """Cache-on must be bit-identical to cache-off: same iteration count,
+    bitwise-equal alpha — across physical compactions (cache remap) and
+    reconstruction un-shrinks (cache invalidation)."""
+    X, y = make_sparse(900, 300, 0.05, seed=3, noise=0.05, label_noise=0.0,
+                       margin=0.5)
+    kw = dict(C=2.0, sigma2=40.0, heuristic="multi5pc", chunk_iters=64,
+              min_buffer=64, format=fmt)
+    m0 = train(X, y, **kw)
+    m1 = train(X, y, row_cache=True, **kw)
+    assert m0.stats.compactions >= 1          # remap path exercised
+    assert m0.stats.reconstructions >= 1      # invalidate path exercised
+    assert m1.stats.iterations == m0.stats.iterations
+    np.testing.assert_array_equal(m1.alpha, m0.alpha)
+    assert m1.stats.cache_hits + m1.stats.cache_misses > 0
+    assert m0.stats.cache_hits == 0           # off really is off
+
+
+def test_cache_exactness_wss2():
+    X, y = _blobs(n=500, d=6, sep=0.8, seed=9)
+    kw = dict(C=4.0, sigma2=4.0, heuristic="multi10pc", selection="wss2")
+    m0 = train(X, y, **kw)
+    m1 = train(X, y, row_cache=True, **kw)
+    assert m1.stats.iterations == m0.stats.iterations
+    np.testing.assert_array_equal(m1.alpha, m0.alpha)
+    assert m1.stats.cache_hit_rate > 0
+
+
+def test_cache_hits_and_flops_discount():
+    X, y = _blobs()
+    kw = dict(C=4.0, sigma2=4.0, heuristic="multi5pc", chunk_iters=64)
+    m0 = train(X, y, **kw)
+    m1 = train(X, y, row_cache=True, **kw)
+    # every iteration looks up exactly one row pair
+    assert m1.stats.cache_hits + m1.stats.cache_misses \
+        == 2 * m1.stats.iterations
+    assert m1.stats.cache_hit_rate > 0.3      # repeat-heavy tail
+    assert 0 < m1.stats.flops_est < m0.stats.flops_est   # hits are discounted
+    assert m1.stats.cache_hit_rate == pytest.approx(
+        m1.stats.cache_hits / (m1.stats.cache_hits + m1.stats.cache_misses))
+
+
+def test_flops_est_selection_aware():
+    """wss2 bills the extra second-order selection sweep (satellite of the
+    provider refactor): more FLOPs/iter than wss1 on the same buffer."""
+    X, y = _blobs(n=300, d=5, seed=4)
+    kw = dict(C=4.0, sigma2=4.0, heuristic="original")
+    m1 = train(X, y, selection="wss1", **kw)
+    m2 = train(X, y, selection="wss2", **kw)
+    assert m1.stats.flops_est / m1.stats.iterations \
+        < m2.stats.flops_est / m2.stats.iterations
+
+
+def test_slot_bucketing():
+    assert rowcache.bucket_slots(1) == 2
+    assert rowcache.bucket_slots(64) == 64
+    assert rowcache.bucket_slots(65) == 128
+    s = SMOSolver(SVMConfig(row_cache=True, row_cache_slots=100))
+    assert s._cache_slots() == 128
+    assert SMOSolver(SVMConfig(row_cache=False))._cache_slots() == 0
+
+
+# ------------------------------------------------------------- multi-device
+def test_parallel_cache_exactness_and_wss2_4dev():
+    out = run_sub("""
+        import numpy as np, json
+        from repro.core import SVMConfig, train
+        from repro.core.parallel import ParallelSMOSolver
+        from repro.data import make_sparse
+        X, y = make_sparse(640, 400, 0.04, seed=0)
+        kw = dict(C=4.0, sigma2=4.0, heuristic='multi5pc', chunk_iters=64)
+        res = {}
+        for fmt in ('dense', 'ell'):
+            m0 = ParallelSMOSolver(SVMConfig(format=fmt, **kw)).fit(X, y)
+            m1 = ParallelSMOSolver(SVMConfig(format=fmt, row_cache=True,
+                                             **kw)).fit(X, y)
+            res[fmt] = dict(
+                iters=[m0.stats.iterations, m1.stats.iterations],
+                alpha_eq=bool(np.array_equal(m0.alpha, m1.alpha)),
+                looked=m1.stats.cache_hits + m1.stats.cache_misses,
+                conv=bool(m1.stats.converged))
+        # wss2 threading through the parallel runner (regression: it used
+        # to be silently ignored) + cache exactness on top of it
+        seq = train(X, y, selection='wss2', **kw)
+        p0 = ParallelSMOSolver(SVMConfig(selection='wss2', **kw)).fit(X, y)
+        p1 = ParallelSMOSolver(SVMConfig(selection='wss2', row_cache=True,
+                                         **kw)).fit(X, y)
+        res['wss2'] = dict(
+            iters=[seq.stats.iterations, p0.stats.iterations,
+                   p1.stats.iterations],
+            obj=[seq.dual_objective(), p0.dual_objective()],
+            conv=bool(p0.stats.converged),
+            alpha_eq=bool(np.array_equal(p0.alpha, p1.alpha)))
+        print(json.dumps(res))
+    """, devices=4)
+    import json
+    res = json.loads(out.strip().splitlines()[-1])
+    for fmt in ("dense", "ell"):
+        r = res[fmt]
+        assert r["conv"], r
+        assert r["iters"][0] == r["iters"][1], r    # identical trajectory
+        assert r["alpha_eq"], r                     # bitwise
+        assert r["looked"] == 2 * r["iters"][1], r  # one pair lookup/iter
+    w = res["wss2"]
+    assert w["conv"], w
+    # parallel wss2 == sequential wss2 (not wss1-with-no-warning)
+    assert w["iters"][0] == w["iters"][1], w
+    assert abs(w["obj"][1] - w["obj"][0]) / abs(w["obj"][0]) < 1e-6, w
+    assert w["alpha_eq"], w                         # cache exact under wss2
+
+
+# ------------------------------------------------ Table 3 grid, cached loop
+@pytest.fixture(scope="module")
+def grid_baseline():
+    X, y = _blobs(n=200, d=4, sep=1.0, seed=7)
+    base = train(X, y, C=4.0, sigma2=2.0, eps=1e-3, heuristic="original")
+    return X, y, base.dual_objective()
+
+
+@pytest.mark.parametrize("heuristic", sorted(TABLE3))
+def test_table3_grid_converges_with_cache(grid_baseline, heuristic):
+    """Every Table 3 entry (Single/Multi x random/numsamples, all
+    aggressiveness classes) must converge to the Original baseline's dual
+    objective with the cached hot loop — shrinking and caching are both
+    optimizations, never approximations."""
+    X, y, ref = grid_baseline
+    m = train(X, y, C=4.0, sigma2=2.0, eps=1e-3, heuristic=heuristic,
+              chunk_iters=64, row_cache=True, row_cache_slots=32)
+    assert m.stats.converged
+    assert abs(m.dual_objective() - ref) / abs(ref) < 2e-3, heuristic
