@@ -1,4 +1,4 @@
-"""Sparse-format + kernel-row-cache benchmarks.
+"""Sparse-format + kernel-row-cache + compaction benchmarks.
 
 Sparse sweep: ELL vs dense training storage (paper Fig. 1b).
 
@@ -11,6 +11,12 @@ three configurations of the same problem:
   * ``ell-adaptive`` — block-ELL with per-buffer K recompaction (the lane
                        budget tracks the surviving rows at every physical
                        compaction).
+
+On top of the percent-scale density sweep, ``SPECS`` adds rcv1/webspam-
+class synthetic workloads — text-feature matrices with density well under
+1% — at CI-scale n. These are the regime the CSR ingest + adaptive-K data
+plane targets (the dense run exists only as the memory/latency baseline),
+and their records ride in the same ``BENCH_sparse.json`` artifact.
 
 Reported per configuration: buffer memory of the initial training buffer,
 per-SMO-iteration wall time, iteration count, dual objective, and for ELL
@@ -25,6 +31,15 @@ inside a hot working set, the access pattern the device-resident LRU
 kernel-row cache exists for — with the cache off and on, for both storage
 formats. Reports hit rate, us/iter, and the cache-aware FLOP estimate, and
 asserts the exactness contract (identical iteration counts) en passant.
+
+Compaction sweep (``--compact-out`` -> ``BENCH_compact.json``): trains a
+shrink-heavy workload under both physical-compaction backends —
+``'host'`` (store rebuild through numpy + host cache remap) and
+``'device'`` (one jitted gather; zero host row/cache traffic) — across
+buffer sizes, with the row cache on so the (slots, M) value-table remap is
+part of what is measured. Reports per-compaction latency and the
+device/host speedup, and asserts the backends' bitwise trajectory parity
+(identical iteration counts) en passant.
 """
 from __future__ import annotations
 
@@ -36,6 +51,17 @@ from repro.data import make_repeat_heavy, make_sparse
 
 DENSITIES = (0.01, 0.05, 0.25)
 
+# rcv1/webspam-scale synthetic specs: <1% density text-like workloads
+# (rcv1 measures ~0.16% over d=47k; webspam unigrams ~2% over d=254 but the
+# trigram form is ~3e-5 over d=16M — both collapse to "K lanes << d").
+# Scaled to CI-budget n/d, densities kept under 1%.
+SPECS = (
+    {"name": "rcv1-like", "n": 1536, "d": 6144, "density": 0.004,
+     "quick": {"n": 640, "d": 3072}},
+    {"name": "webspam-like", "n": 2048, "d": 4096, "density": 0.008,
+     "quick": {"n": 768, "d": 2048}},
+)
+
 CONFIGS = (
     ("dense", dict(format="dense")),
     ("ell-fixed", dict(format="ell", ell_adaptive=False)),
@@ -43,44 +69,61 @@ CONFIGS = (
 )
 
 
+def _bench_dataset(X, y, n: int, d: int, heuristic: str, eps: float,
+                   meta: dict) -> list[dict]:
+    """Train the three storage CONFIGS on one dataset; returns records with
+    ``meta`` merged in, ELL objectives asserted against the dense run."""
+    import jax.numpy as jnp
+    records = []
+    by_name = {}
+    for name, overrides in CONFIGS:
+        cfg = SVMConfig(C=4.0, sigma2=float(d) / 8.0, eps=eps,
+                        heuristic=heuristic, chunk_iters=256,
+                        **overrides)
+        solver = SMOSolver(cfg)
+        m = solver.fit(X, y)
+        store = solver._store
+        buf = store.alloc(m.stats.buffer_sizes[0],
+                          m.stats.buffer_K[0] if m.stats.buffer_K
+                          else None)
+        mem = store.to_device(buf, jnp.asarray).memory_bytes()
+        rec = {
+            **meta, "fmt": name, "n": n, "d": d,
+            "us_per_iter": (m.stats.train_time /
+                            max(m.stats.iterations, 1)) * 1e6,
+            "iterations": m.stats.iterations,
+            "mem_bytes": mem,
+            "obj": m.dual_objective(),
+            "compactions": m.stats.compactions,
+            "buffer_K": list(m.stats.buffer_K),
+        }
+        by_name[name] = rec
+        records.append(rec)
+    ref = by_name["dense"]["obj"]
+    for name in ("ell-fixed", "ell-adaptive"):
+        rel = abs(by_name[name]["obj"] - ref) / max(abs(ref), 1e-9)
+        assert rel < 1e-2, \
+            f"{name}/dense objective diverged at {meta}: {rel}"
+        by_name[name]["mem_ratio"] = \
+            by_name[name]["mem_bytes"] / by_name["dense"]["mem_bytes"]
+    return records
+
+
 def bench_sparse(n: int = 1024, d: int = 2048, densities=DENSITIES,
                  heuristic: str = "single1000", eps: float = 1e-3,
-                 seed: int = 0) -> list[dict]:
-    import jax.numpy as jnp
+                 seed: int = 0, quick: bool = False) -> list[dict]:
     records = []
     for rho in densities:
         X, y = make_sparse(n, d, rho, seed=seed)
-        by_name = {}
-        for name, overrides in CONFIGS:
-            cfg = SVMConfig(C=4.0, sigma2=float(d) / 8.0, eps=eps,
-                            heuristic=heuristic, chunk_iters=256,
-                            **overrides)
-            solver = SMOSolver(cfg)
-            m = solver.fit(X, y)
-            store = solver._store
-            buf = store.alloc(m.stats.buffer_sizes[0],
-                              m.stats.buffer_K[0] if m.stats.buffer_K
-                              else None)
-            mem = store.to_device(buf, jnp.asarray).memory_bytes()
-            rec = {
-                "density": rho, "fmt": name, "n": n, "d": d,
-                "us_per_iter": (m.stats.train_time /
-                                max(m.stats.iterations, 1)) * 1e6,
-                "iterations": m.stats.iterations,
-                "mem_bytes": mem,
-                "obj": m.dual_objective(),
-                "compactions": m.stats.compactions,
-                "buffer_K": list(m.stats.buffer_K),
-            }
-            by_name[name] = rec
-            records.append(rec)
-        ref = by_name["dense"]["obj"]
-        for name in ("ell-fixed", "ell-adaptive"):
-            rel = abs(by_name[name]["obj"] - ref) / max(abs(ref), 1e-9)
-            assert rel < 1e-2, \
-                f"{name}/dense objective diverged at rho={rho}: {rel}"
-            by_name[name]["mem_ratio"] = \
-                by_name[name]["mem_bytes"] / by_name["dense"]["mem_bytes"]
+        records += _bench_dataset(X, y, n, d, heuristic, eps,
+                                  {"density": rho})
+    for spec in SPECS:
+        dims = {**spec, **spec["quick"]} if quick else spec
+        ns, ds = dims["n"], dims["d"]
+        X, y = make_sparse(ns, ds, spec["density"], seed=seed)
+        records += _bench_dataset(
+            X, y, ns, ds, heuristic, eps,
+            {"density": spec["density"], "spec": spec["name"]})
     return records
 
 
@@ -126,6 +169,63 @@ def bench_cache(n: int = 3072, d: int = 768, density: float = 0.25,
     return records
 
 
+def bench_compact(sizes=(2048, 8192), d: int = 384, density: float = 0.05,
+                  eps: float = 1e-3, seed: int = 3) -> list[dict]:
+    """Host vs device physical-compaction latency across buffer sizes.
+
+    A wide-margin ``make_sparse`` problem under the Multi policy shrinks
+    aggressively, so each fit goes through several physical compactions;
+    the row cache is on so the (slots, M) value-table remap — the
+    host-side bottleneck ROADMAP calls out — is part of the measured path.
+    Each configuration is fit twice and the second run reported, so the
+    device numbers are warm-jit (the compaction step executable is cached
+    across fits at equal shapes).
+    """
+    records = []
+    for n in sizes:
+        X, y = make_sparse(n, d, density, seed=seed, noise=0.05,
+                           label_noise=0.0, margin=0.5)
+        for fmt in ("dense", "ell"):
+            by = {}
+            for backend in ("host", "device"):
+                cfg = SVMConfig(C=2.0, sigma2=float(d) / 8.0, eps=eps,
+                                heuristic="multi5pc", chunk_iters=64,
+                                min_buffer=64, format=fmt,
+                                row_cache=True, row_cache_slots=256,
+                                compact_backend=backend)
+                m = None
+                for _ in range(2):            # second run = warm jit
+                    m = SMOSolver(cfg).fit(X, y)
+                rec = {
+                    "n": n, "d": d, "fmt": fmt, "backend": backend,
+                    "compactions": m.stats.compactions,
+                    "iterations": m.stats.iterations,
+                    "buffer_sizes": list(m.stats.buffer_sizes),
+                    "us_per_compact": (m.stats.compact_time * 1e6
+                                       / max(m.stats.compactions, 1)),
+                }
+                by[backend] = rec
+                records.append(rec)
+            # the backends are bit-identical by contract
+            assert by["host"]["iterations"] == by["device"]["iterations"], \
+                (n, fmt, by)
+            assert by["device"]["compactions"] > 0, (n, fmt, by)
+            by["device"]["speedup"] = (by["host"]["us_per_compact"]
+                                       / by["device"]["us_per_compact"])
+    return records
+
+
+def compact_csv_lines(records: list[dict]) -> list[str]:
+    lines = []
+    for r in records:
+        extra = (f";speedup={r['speedup']:.2f}" if "speedup" in r else "")
+        lines.append(
+            f"compact/{r['fmt']}/m{r['n']}/{r['backend']},"
+            f"{r['us_per_compact']:.1f},"
+            f"compactions={r['compactions']};iters={r['iterations']}{extra}")
+    return lines
+
+
 def cache_csv_lines(records: list[dict]) -> list[str]:
     lines = []
     for r in records:
@@ -145,8 +245,9 @@ def csv_lines(records: list[dict]) -> list[str]:
         extra = "" if r["fmt"] == "dense" else (
             f";K={r['buffer_K'][0]};K_min={min(r['buffer_K'])}"
             f";mem_ratio={r['mem_ratio']:.3f}")
+        tag = r.get("spec", f"{r['density']:g}")
         lines.append(
-            f"sparse/{r['density']:g}/{r['fmt']},{r['us_per_iter']:.1f},"
+            f"sparse/{tag}/{r['fmt']},{r['us_per_iter']:.1f},"
             f"iters={r['iterations']};mem_bytes={r['mem_bytes']}"
             f";obj={r['obj']:.4f}{extra}")
     return lines
@@ -159,12 +260,16 @@ def main(argv=None) -> None:
     ap.add_argument("--cache-out", default=None,
                     help="run the row-cache on/off sweep and write it as a "
                          "JSON artifact (BENCH_cache.json in CI)")
+    ap.add_argument("--compact-out", default=None,
+                    help="run the host-vs-device compaction latency sweep "
+                         "and write it as a JSON artifact "
+                         "(BENCH_compact.json in CI)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller problems (CI-budget run)")
     args = ap.parse_args(argv)
-    if args.out or not args.cache_out:
+    if args.out or not (args.cache_out or args.compact_out):
         kw = dict(n=512, d=1024) if args.quick else {}
-        records = bench_sparse(**kw)
+        records = bench_sparse(quick=args.quick, **kw)
         for line in csv_lines(records):
             print(line, flush=True)
         if args.out:
@@ -182,6 +287,15 @@ def main(argv=None) -> None:
             json.dump({"bench": "row_cache", "records": cache_records}, f,
                       indent=1)
         print(f"wrote {args.cache_out}", flush=True)
+    if args.compact_out:
+        kw = dict(sizes=(1024, 4096), d=256) if args.quick else {}
+        compact_records = bench_compact(**kw)
+        for line in compact_csv_lines(compact_records):
+            print(line, flush=True)
+        with open(args.compact_out, "w") as f:
+            json.dump({"bench": "compaction", "records": compact_records}, f,
+                      indent=1)
+        print(f"wrote {args.compact_out}", flush=True)
 
 
 if __name__ == "__main__":

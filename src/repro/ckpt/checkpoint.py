@@ -8,9 +8,14 @@ M pods, or a different mesh shape entirely) is therefore the same code path
 as plain restart. Async saves run on a daemon thread with an atomic
 rename-into-place so a crash mid-save never corrupts the latest checkpoint.
 
-SVM runs checkpoint (alpha, gamma, active, step) the same way — an SMO
-optimization restarts mid-training with bitwise-identical trajectory
-(the chunk runner is deterministic given state).
+SVM runs checkpoint (alpha, gamma, active, step) the same way — the epoch
+driver (``repro.core.driver``) syncs its device-resident alpha/gamma
+masters to host before each save, so the snapshot is complete even when
+rows were dropped by device-side physical compaction (their drop-time
+values live in the masters, not in the buffer), and an SMO optimization
+restarts mid-training with bitwise-identical trajectory (the chunk runner
+is deterministic given state; the row cache is deliberately not saved —
+it is exact, so rebuilding it empty is trajectory-neutral).
 """
 from __future__ import annotations
 

@@ -35,6 +35,7 @@ K drops and the crossover moves toward denser datasets mid-run.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 import jax
@@ -47,10 +48,12 @@ from repro.data import sparse as sp
 class DenseData:
     """Device buffer, dense layout: (X, sq_norms).
 
-    ``gids`` (optional) maps buffer position -> **global** sample id (-1 on
-    padding rows) — the row-identity plumbing the kernel-row cache keys on
-    (global ids survive physical compaction; buffer positions do not). The
-    driver threads it from ``idx_buf`` only when the cache is enabled.
+    ``gids`` maps buffer position -> **global** sample id (-1 on padding
+    rows) — the row-identity plumbing the kernel-row cache keys on and the
+    device-compaction master scatter requires (global ids survive physical
+    compaction; buffer positions do not). The epoch driver always threads
+    it from ``idx_buf``; it is optional only for driver-external buffers
+    (SV blocks in predict/reconstruction).
     """
     X: jax.Array          # (M, d) f32
     sq_norms: jax.Array   # (M,) f32 — precomputed ||x_i||^2
@@ -85,7 +88,8 @@ class ELLData:
 
     Padding slots hold (val=0, col=0) and contribute exactly 0 to every
     gather-FMA; padding *rows* are all-padding (sq_norm 0). ``gids`` is the
-    optional buffer-position -> global-sample-id map (see ``DenseData``).
+    buffer-position -> global-sample-id map, always present on driver
+    buffers (see ``DenseData``).
     """
     vals: jax.Array       # (M, K) f32
     cols: jax.Array       # (M, K) i32
@@ -277,7 +281,11 @@ class CSRStore(_EllFamilyStore):
                  K: "int | None" = None):
         self.csr = sp.as_csr(csr)
         self.lane = int(lane)
-        self.row_extent = self.csr.row_nnz()
+        # trailing-NONZERO extent, not stored-entry count: explicitly
+        # stored zeros must not inflate K, and the device-side compaction
+        # measures extents from the buffer values — the two must agree
+        # (bit-identical buffer_K/shard_K trajectories)
+        self.row_extent = sp.csr_row_extent(self.csr)
         self._K_pin = None if K is None else sp.round_lanes(K, self.lane)
 
     @property
@@ -317,6 +325,103 @@ class CSRStore(_EllFamilyStore):
         take = np.where(mask, take, 0)
         vb[sl] = self.csr.data[take] * mask
         cb[sl] = self.csr.indices[take] * mask
+
+
+# --------------------------------------------------------------------------
+# Device-side physical compaction (the shrink -> compact -> remap pipeline).
+#
+# The host stores above gather *initial* buffers (and un-shrink rebuilds,
+# which re-add rows the buffer no longer holds). Physical compaction between
+# chunks needs neither: every surviving row is already resident on device,
+# so the gather is a ``jnp.take`` over the current buffer — no host numpy,
+# no N*d (or M*2K) traffic through the PCIe/ICI host link. The driver reads
+# back only the active count that fixes the new buffer shape (a scalar it
+# already reads per chunk) and, for ELL, the (p,) per-shard surviving
+# extents that fix the lane bucket; everything else stays on device.
+#
+# Bit-exactness contract: a device compaction must reproduce the host
+# rebuild bit-for-bit (same row bits — buffers are copies of store rows;
+# same packed-prefix truncation for ELL; gathered sq_norms instead of
+# recomputed ones, which is bitwise safe because appending zero slots to a
+# pairwise sum of squares cannot change the float). ``tests/test_driver.py``
+# enforces this against the host path for every (format x solver) pair.
+
+
+def ell_extents(vals: jax.Array) -> jax.Array:
+    """Device analogue of :func:`data.sparse.ell_row_extent`: per-row
+    occupied-slot count (last nonzero slot + 1; 0 for all-padding rows)."""
+    nz = vals != 0.0
+    K = vals.shape[1]
+    return jnp.where(nz.any(axis=1),
+                     K - jnp.argmax(nz[:, ::-1], axis=1), 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "m_per"))
+def ell_shard_extents(vals: jax.Array, keep: jax.Array, n_active: jax.Array,
+                      *, p: int, m_per: int) -> jax.Array:
+    """Per-shard max occupied extent of the surviving rows under the
+    compaction re-layout — the ONE (p,) readback of an ELL device
+    compaction. Its max fixes the new lane bucket (host applies
+    ``data.sparse.bucket_lanes``, exactly like the host rebuild), and the
+    per-shard values become ``FitStats.shard_K``; the main compaction step
+    needs no extent scan of its own."""
+    src, valid = compact_plan(keep, n_active, p, m_per)
+    ext = jnp.where(valid, ell_extents(vals)[src], 0)
+    return ext.reshape(p, m_per).max(axis=1)
+
+
+def compact_plan(keep: jax.Array, n_active: jax.Array, p: int, m_per: int):
+    """Gather plan for the balanced contiguous re-layout (jit-compatible).
+
+    ``keep`` (M_old,) bool marks surviving buffer rows; ``n_active`` is the
+    same count as a traced scalar (the driver already reads it back to fix
+    the static output shape ``p * m_per``). Survivors are enumerated in
+    buffer-position order and dealt to ``p`` contiguous shards of
+    ``base + (q < extra)`` rows — the exact layout the host rebuild
+    produces, so the two paths are interchangeable mid-run.
+
+    Returns ``(src, valid)``: ``src`` (p*m_per,) old buffer positions to
+    gather (arbitrary on padding rows), ``valid`` (p*m_per,) False on the
+    per-shard padding tails.
+    """
+    M = keep.shape[0]
+    rank = jnp.cumsum(keep) - 1                      # survivor rank per pos
+    surv = jnp.zeros((M,), jnp.int32).at[
+        jnp.where(keep, rank, M)].set(jnp.arange(M, dtype=jnp.int32),
+                                      mode="drop")
+    n_active = n_active.astype(jnp.int32)
+    base = n_active // p
+    extra = n_active - base * p
+    j = jnp.arange(p * m_per, dtype=jnp.int32)
+    q = j // m_per
+    r = j % m_per
+    valid = r < base + (q < extra).astype(jnp.int32)
+    k = q * base + jnp.minimum(q, extra) + r
+    src = surv[jnp.where(valid, k, 0)]
+    return src, valid
+
+
+def gather_rows(data, src: jax.Array, valid: jax.Array,
+                K_new: "int | None" = None):
+    """Gather surviving rows into a fresh (smaller) device buffer.
+
+    ``src``/``valid`` come from :func:`compact_plan`. ELL buffers are
+    truncated to the static lane budget ``K_new`` (always <= the current K:
+    rows pack nonzeros into a slot prefix, so truncation is exact — the
+    same ``[:, :K]`` copy the host stores rely on). Padding rows are zeroed
+    (gids -1) to match the host ``alloc`` layout bit-for-bit.
+    """
+    gids = None
+    if data.gids is not None:
+        gids = jnp.where(valid, data.gids[src], -1)
+    sq = jnp.where(valid, data.sq_norms[src], 0.0)
+    if isinstance(data, DenseData):
+        X = jnp.where(valid[:, None], data.X[src], 0.0)
+        return DenseData(X, sq, gids)
+    K = data.K if K_new is None else int(K_new)
+    vals = jnp.where(valid[:, None], data.vals[src, :K], 0.0)
+    cols = jnp.where(valid[:, None], data.cols[src, :K], 0)
+    return ELLData(vals, cols, sq, data.n_features, gids)
 
 
 def make_store(X, fmt: str, ell_K: "int | None" = None, ell_lane: int = 128):

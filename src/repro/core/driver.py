@@ -1,0 +1,599 @@
+"""Epoch driver — the paper's Algorithm 5 control flow, exactly once.
+
+This module owns the shrink -> compact -> reconstruct -> un-shrink ->
+re-optimize state machine that both :class:`repro.core.solver.SMOSolver`
+and :class:`repro.core.parallel.ParallelSMOSolver` train through. The
+solvers supply a small hook surface (runner construction, device
+placement, Alg. 6 reconstruction); the Single/Multi policy logic,
+checkpoint/resume, physical compaction, and stats accounting live here
+and nowhere else.
+
+Phases (faithful to Alg. 5):
+
+  shrink stage    run jitted SMO chunks with in-loop shrinking until
+                  beta_up + 20*eps >= beta_low on the active set;
+                  physically compact the buffer between chunks when enough
+                  samples have been shrunk;
+  reconstruct     Alg. 6 for every non-active sample, then un-shrink
+                  (reset pi_q) and re-check optimality over ALL samples;
+  re-optimize     Single: shrinking disabled, run to 2*eps.
+                  Multi:  shrinking re-enabled (counter reset), run to
+                          2*eps on the active set, reconstruct again,
+                          repeat until Eq. 9 holds over all samples.
+
+The "Original" baseline (Alg. 3, no shrinking) is the same driver with the
+shrink interval = 0 and no reconstruction, run straight to 2*eps.
+
+Device-resident compaction
+--------------------------
+Physical compaction is a *device-side* operation by default
+(``SVMConfig(compact_backend='device')``): one jitted step gathers the
+surviving rows (and their gids, squared norms, and — truncating the lane
+budget — ELL slots) with ``jnp.take`` over the current buffer, re-gathers
+the row-cache value table by the same plan, and scatters the outgoing
+buffer's alpha/gamma into device-resident (n,) master arrays so dropped
+rows keep their drop-time values without a host round-trip. Input buffers
+are donated, so peak memory stays ~1 buffer. The host reads back only the
+active count (a scalar it already reads every chunk; fixes the new buffer
+shape) and, for ELL, the (p,) per-shard surviving extents (fix the lane
+bucket and ``FitStats.shard_K``); row data and cache values never cross
+the host link. The
+``'host'`` backend keeps the store-rebuild path (numpy gather + re-upload)
+— bit-identical by construction, kept as the parity oracle for tests and
+the compaction benchmark. Buffer *growth* (un-shrink) still rebuilds from
+the host store: it re-adds rows the device buffer no longer holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+import warnings
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import dataplane, rowcache, smo, util
+from repro.data import sparse as spfmt
+
+
+@dataclasses.dataclass
+class FitStats:
+    iterations: int = 0
+    n_sv: int = 0
+    n_bound_sv: int = 0
+    reconstructions: int = 0
+    shrink_events: int = 0
+    compactions: int = 0
+    min_active: int = 0
+    train_time: float = 0.0
+    recon_time: float = 0.0
+    compact_time: float = 0.0    # wall time in physical compaction (either
+                                 # backend) — what BENCH_compact.json plots
+    total_time: float = 0.0
+    converged: bool = False
+    stalled: bool = False
+    final_gap: float = 0.0
+    buffer_sizes: list = dataclasses.field(default_factory=list)
+    buffer_K: list = dataclasses.field(default_factory=list)
+    # per-buffer ELL lane budget (adaptive K trajectory); empty for dense
+    shard_K: list = dataclasses.field(default_factory=list)
+    # per-buffer tuple of lane-rounded K per shard (host-side raggedness;
+    # the device array is padded to max(shard_K) — XLA collectives need
+    # uniform shapes, unlike the paper's per-rank MPI buffers)
+    flops_est: float = 0.0       # model FLOPs of the gamma-update hot loop;
+                                 # selection-aware (wss2 bills two single-row
+                                 # passes + the selection sweep) and cache-
+                                 # aware (hits skip the kernel-row pass and
+                                 # are billed only the O(M) FMA epilogue)
+    cache_hits: int = 0          # kernel rows served from the LRU row cache
+    cache_misses: int = 0        # kernel rows (re)computed by the provider
+    cache_hit_rate: float = 0.0  # hits / (hits + misses); 0 when cache off
+
+
+class CompactShardings(NamedTuple):
+    """Output-sharding pins for the jitted compaction step (parallel mesh).
+    ``None`` (single host) leaves placement to XLA."""
+    rows: jax.sharding.Sharding        # (M, d) / (M, K) buffer arrays
+    vec: jax.sharding.Sharding         # (M,) buffer arrays
+    cache_vals: jax.sharding.Sharding  # (S, M) cache value table
+    rep: jax.sharding.Sharding         # replicated scalars / (n,) masters
+
+
+def betas(gamma: np.ndarray, alpha: np.ndarray, y: np.ndarray, C: float):
+    """Eq. 8 on host over all samples (used at reconstruction points and
+    by the solvers' finalize)."""
+    pos = y > 0
+    at0 = alpha <= C * smo._BND
+    atc = alpha >= C * (1.0 - smo._BND)
+    i0 = ~at0 & ~atc
+    in_up = i0 | (pos & at0) | (~pos & atc)
+    in_low = i0 | (pos & atc) | (~pos & at0)
+    b_up = gamma[in_up].min() if in_up.any() else np.inf
+    b_low = gamma[in_low].max() if in_low.any() else -np.inf
+    return float(b_up), float(b_low)
+
+
+def _scatter_full(alpha_d, gamma_d, alpha_buf, gamma_buf, gids):
+    """Scatter a buffer's alpha/gamma into the (n,) device masters (global
+    ids key the scatter; padding rows gid=-1 are dropped via an
+    out-of-bounds index). The ONE definition of the master-writeback rule —
+    shared by the checkpoint/epoch writeback and the compaction step."""
+    n = alpha_d.shape[0]
+    safe = jnp.where(gids >= 0, gids, n)
+    return (alpha_d.at[safe].set(alpha_buf, mode="drop"),
+            gamma_d.at[safe].set(gamma_buf, mode="drop"))
+
+
+@functools.partial(jax.jit, donate_argnames=("alpha_d", "gamma_d"))
+def _writeback_step(alpha_d, gamma_d, alpha_buf, gamma_buf, gids):
+    return _scatter_full(alpha_d, gamma_d, alpha_buf, gamma_buf, gids)
+
+
+def _constrain(out, sh: CompactShardings):
+    """Pin the compaction step's outputs to the solver's mesh layout so the
+    next chunk's shard_map sees its expected shardings (correct either way;
+    this avoids a reshard on entry)."""
+    wsc = lax.with_sharding_constraint
+    data, yb, state, cache, alpha_d, gamma_d = out
+    if isinstance(data, dataplane.ELLData):
+        data = dataplane.ELLData(wsc(data.vals, sh.rows),
+                                 wsc(data.cols, sh.rows),
+                                 wsc(data.sq_norms, sh.vec),
+                                 data.n_features, wsc(data.gids, sh.vec))
+    else:
+        data = dataplane.DenseData(wsc(data.X, sh.rows),
+                                   wsc(data.sq_norms, sh.vec),
+                                   wsc(data.gids, sh.vec))
+    vec = lambda a: wsc(a, sh.vec)
+    rep = lambda a: wsc(a, sh.rep)
+    state = state._replace(
+        alpha=vec(state.alpha), gamma=vec(state.gamma),
+        active=vec(state.active), beta_up=rep(state.beta_up),
+        beta_low=rep(state.beta_low), i_up=rep(state.i_up),
+        i_low=rep(state.i_low), step=rep(state.step),
+        next_shrink=rep(state.next_shrink), n_shrinks=rep(state.n_shrinks),
+        converged=rep(state.converged), stalled=rep(state.stalled))
+    if cache is not None:
+        cache = cache._replace(
+            tags=rep(cache.tags), vals=wsc(cache.vals, sh.cache_vals),
+            stamp=rep(cache.stamp), seg=rep(cache.seg), tick=rep(cache.tick),
+            hits=rep(cache.hits), misses=rep(cache.misses))
+    return (data, wsc(yb, sh.vec), state, cache, rep(alpha_d), rep(gamma_d))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "m_per", "K_new", "shards"),
+    donate_argnames=("data", "yb", "state", "cache", "alpha_d", "gamma_d"))
+def _compact_step(data, yb, state, cache, alpha_d, gamma_d, n_active,
+                  interval, *, p, m_per, K_new, shards):
+    """One device-side physical compaction (see module docstring).
+
+    Everything the host rebuild used to do in numpy happens here in one
+    XLA program: master writeback for the outgoing buffer, the balanced
+    contiguous gather plan, the row/vector/cache gathers, and the fresh
+    chunk state. ``p``/``m_per``/``K_new`` are static (power-of-two
+    bucketed by the driver, so the executable cache stays O(log^2));
+    ``n_active``/``interval`` ride as traced scalars so varying active
+    counts do not retrace.
+    """
+    alpha_d, gamma_d = _scatter_full(alpha_d, gamma_d, state.alpha,
+                                     state.gamma, data.gids)
+
+    src, valid = dataplane.compact_plan(state.active, n_active, p, m_per)
+    data2 = dataplane.gather_rows(data, src, valid, K_new)
+    yb2 = jnp.where(valid, yb[src], 1.0)        # padding: y=+1, alpha=0 -> I1
+    alpha2 = jnp.where(valid, state.alpha[src], 0.0)
+    gamma2 = jnp.where(valid, state.gamma[src], jnp.float32(jnp.inf))
+    state2 = smo.init_state(alpha2, gamma2, valid)._replace(
+        step=state.step,
+        next_shrink=state.step + jnp.maximum(
+            jnp.int32(1), jnp.minimum(interval, n_active.astype(jnp.int32))),
+        n_shrinks=state.n_shrinks)
+    cache2 = rowcache.remap_cache_device(cache, src, valid)
+    out = (data2, yb2, state2, cache2, alpha_d, gamma_d)
+    if shards is not None:
+        out = _constrain(out, shards)
+    return out
+
+
+class EpochDriver:
+    """The Alg. 5 state machine around a solver's hook surface.
+
+    One instance drives one ``fit``. The solver provides device placement
+    (``_put``/``_put_full``/``_put_cache_vals``), runner construction
+    (``_runner``), shard count (``_nshards``), cache sizing (``_new_cache``
+    / ``_cache_slots``), Alg. 6 (``_reconstruct``) and — for the parallel
+    mesh — compaction output shardings (``_compact_shardings``); the driver
+    owns everything else. Mutable run state lives on the instance
+    (``data``/``yb``/``state``/``cache``/device masters) so the compaction
+    benchmark can reuse the exact fit-path methods.
+    """
+
+    def __init__(self, solver):
+        self.s = solver
+        self.cfg = solver.cfg
+        self.h = solver.h
+        self.idx: Optional[np.ndarray] = None   # host mirror of data.gids;
+                                                # None = stale (device compact
+                                                # since last materialization)
+
+    # -- buffer plumbing ---------------------------------------------------
+    def _make_buffer(self, y, alpha, gamma, idx):
+        """Gather rows ``idx`` from the host store into a padded buffer of
+        p balanced shards.
+
+        Returns (data, y_buf, fresh state, idx_buf) where ``data`` is the
+        device-side DenseData/ELLData buffer and idx_buf maps buffer row ->
+        global sample index (-1 on padding rows). Active rows are
+        distributed contiguously and evenly across shards — the paper's
+        "load balancing ... requires contiguous data movement of samples"
+        (Sec. 3.1.2). Row identity (``gids``) always travels with the
+        buffer: it keys the row cache *and* the master writeback scatter of
+        device-side compaction.
+
+        ELL-family stores get an *adaptive* lane budget: K is recomputed
+        from exactly the surviving rows (``store.buffer_K``) and bucketed
+        to a power-of-two number of lanes (bounds jit retraces — K is a
+        trace dimension of every chunk runner). Each shard's own
+        lane-rounded K is recorded (``self._last_shard_K`` ->
+        ``FitStats.shard_K``); the physical device array is padded to the
+        bucketed max because XLA collectives require uniform shapes across
+        shards, unlike the paper's per-rank MPI buffers which are truly
+        ragged.
+        """
+        cfg, sv = self.cfg, self.s
+        store = sv._store
+        p = sv._nshards()
+        m_per = util.bucket_pow2(-(-idx.size // p),
+                                 max(cfg.min_buffer // p, 8))
+        m = m_per * p
+        ell = store.fmt == "ell"
+        K_buf = None
+        if ell:
+            K_buf = (spfmt.bucket_lanes(store.buffer_K(idx), cfg.ell_lane,
+                                        cap=store.K)
+                     if cfg.ell_adaptive else store.K)
+        buf = store.alloc(m, K_buf)
+        yb = np.ones((m,), np.float32)          # padding: y=+1, alpha=0 -> I1
+        ab = np.zeros((m,), np.float32)
+        gb = np.full((m,), np.inf, np.float32)  # padding gamma never selected
+        valid = np.zeros((m,), bool)
+        idx_buf = np.full((m,), -1, np.int64)
+        shard_K = []
+        base, extra = divmod(idx.size, p)
+        off = 0
+        for q in range(p):
+            cnt = base + (1 if q < extra else 0)
+            sl = slice(q * m_per, q * m_per + cnt)
+            sub = idx[off: off + cnt]
+            store.fill(buf, sl, sub)
+            yb[sl] = y[sub]
+            ab[sl] = alpha[sub]
+            gb[sl] = gamma[sub]
+            valid[sl] = True
+            idx_buf[sl] = sub
+            if ell:
+                shard_K.append(store.buffer_K(sub))
+            off += cnt
+        self._last_shard_K = tuple(shard_K)
+        data = store.to_device(buf, sv._put, gids=idx_buf)
+        state = smo.init_state(sv._put(ab), sv._put(gb), sv._put(valid))
+        return data, sv._put(yb), state, idx_buf
+
+    def _host_idx(self) -> np.ndarray:
+        """Buffer position -> global sample id, materialized from the
+        device ``gids`` lazily — device compaction leaves the host mirror
+        stale rather than reading anything back."""
+        if self.idx is None:
+            self.idx = np.asarray(self.data.gids).astype(np.int64)
+        return self.idx
+
+    def _note_buffer(self):
+        """Record buffer geometry: size always; K/shard-K on ELL buffers."""
+        self.stats.buffer_sizes.append(self.data.m)
+        if isinstance(self.data, dataplane.ELLData):
+            self.stats.buffer_K.append(self.data.K)
+            self.stats.shard_K.append(self._last_shard_K)
+
+    # -- writeback ---------------------------------------------------------
+    def _writeback(self):
+        """Sync host alpha/gamma from the device masters after scattering
+        the current buffer in. Rows dropped at earlier compactions keep the
+        drop-time values the compaction step scattered — same bits the
+        host-backend rebuild would have written back then."""
+        self.alpha_d, self.gamma_d = _writeback_step(
+            self.alpha_d, self.gamma_d, self.state.alpha, self.state.gamma,
+            self.data.gids)
+        # np.array (not asarray): jax arrays surface as read-only views and
+        # reconstruction writes gamma[stale] in place
+        self.alpha = np.array(self.alpha_d)
+        self.gamma = np.array(self.gamma_d)
+
+    def _refresh_masters(self):
+        self.alpha_d = self.s._put_full(self.alpha)
+        self.gamma_d = self.s._put_full(self.gamma)
+
+    # -- physical compaction ----------------------------------------------
+    def _compact(self, n_active: int, p: int, m_per: int):
+        """One physical compaction — device backend by default, host
+        backend (store rebuild) as the parity oracle."""
+        cfg, sv = self.cfg, self.s
+        t0 = time.perf_counter()
+        ell = isinstance(self.data, dataplane.ELLData)
+        if cfg.compact_backend == "device":
+            K_new = None
+            if ell:
+                # the ONE extra readback of an ELL device compaction: (p,)
+                # per-shard surviving extents — their max fixes the lane
+                # bucket (host-side bucket_lanes, exactly like the host
+                # rebuild buckets store.buffer_K) and the per-shard values
+                # feed FitStats.shard_K
+                lane = sv._store.lane
+                shard_ext = np.asarray(dataplane.ell_shard_extents(
+                    self.data.vals, self.state.active, jnp.int32(n_active),
+                    p=p, m_per=m_per))
+                self._last_shard_K = tuple(
+                    spfmt.round_lanes(int(e), lane) for e in shard_ext)
+                K_new = (spfmt.bucket_lanes(int(shard_ext.max()), lane,
+                                            cap=sv._store.K)
+                         if cfg.ell_adaptive else self.data.K)
+            with warnings.catch_warnings():
+                # shrinking means the outputs are smaller than the donated
+                # inputs, so XLA cannot alias them — donation still frees
+                # the old buffer at entry, which is the point
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                (self.data, self.yb, self.state, self.cache, self.alpha_d,
+                 self.gamma_d) = _compact_step(
+                    self.data, self.yb, self.state, self.cache, self.alpha_d,
+                    self.gamma_d, jnp.int32(n_active),
+                    jnp.int32(self._interval), p=p, m_per=m_per, K_new=K_new,
+                    shards=sv._compact_shardings())
+            self.idx = None
+        else:
+            self._writeback()
+            idx = self._host_idx()
+            keep = idx[(idx >= 0) & np.asarray(self.state.active)]
+            idx_old, step, nshr = idx, self.state.step, self.state.n_shrinks
+            self.data, self.yb, state2, self.idx = self._make_buffer(
+                self.y, self.alpha, self.gamma, keep)
+            # survivors keep their global ids -> cached rows are re-gathered
+            # into the compacted geometry, not dropped
+            self.cache = rowcache.remap_cache(self.cache, idx_old, self.idx,
+                                              sv._put_cache_vals)
+            self.state = state2._replace(
+                step=step,
+                next_shrink=step + max(1, min(self._interval, keep.size)),
+                n_shrinks=nshr)
+        jax.block_until_ready(self.state.alpha)
+        self.stats.compactions += 1
+        self.stats.compact_time += time.perf_counter() - t0
+        self._note_buffer()
+
+    # -- fault tolerance ---------------------------------------------------
+    def _save_ckpt(self, act_full: np.ndarray, meta: dict):
+        from repro.ckpt import checkpoint as ck
+        d = os.path.join(self.cfg.checkpoint_dir, f"step_{meta['step']}")
+        ck.save(d, meta["step"],
+                {"svm": {"alpha": self.alpha, "gamma": self.gamma,
+                         "active": act_full.astype(np.int8)}},
+                extra=meta)
+
+    def _load_ckpt(self, n: int):
+        from repro.ckpt import checkpoint as ck
+        step = ck.latest_step(self.cfg.checkpoint_dir)
+        if step is None:
+            return None
+        d = os.path.join(self.cfg.checkpoint_dir, f"step_{step}")
+        like = {"alpha": np.zeros(n, np.float32),
+                "gamma": np.zeros(n, np.float32),
+                "active": np.zeros(n, np.int8)}
+        g = ck.restore(d, "svm", like)
+        man = ck.load_manifest(d)
+        return ({k: np.array(v) for k, v in g.items()}, man["extra"])
+
+    # -- main --------------------------------------------------------------
+    def fit(self, X, y: np.ndarray):
+        """Run Alg. 5 on ``(X, y)``; returns ``(alpha, gamma, y, stats)``
+        for the solver's finalize. ``X`` is a dense (n, d) matrix, or —
+        with ``format='ell'`` — CSR input, which streams CSR->ELL buffers
+        and never allocates dense X on host."""
+        cfg, h, sv = self.cfg, self.h, self.s
+        if cfg.compact_backend not in ("device", "host"):
+            raise ValueError(
+                f"unknown compact_backend {cfg.compact_backend!r} "
+                "(want 'device' or 'host')")
+        if cfg.row_cache_policy not in rowcache.POLICIES:
+            raise ValueError(
+                f"unknown row_cache_policy {cfg.row_cache_policy!r}; "
+                f"known: {rowcache.POLICIES}")
+        t0 = time.perf_counter()
+        if spfmt.is_csr_like(X):
+            X = spfmt.as_csr(X)      # normalizes scipy-like/tuple forms
+        else:
+            X = np.ascontiguousarray(X, np.float32)
+        y = np.ascontiguousarray(y, np.float32)
+        n, d = (int(s) for s in X.shape)
+        assert set(np.unique(y)) <= {-1.0, 1.0}, "labels must be +-1"
+        sv._store = dataplane.make_store(X, cfg.format, cfg.ell_K,
+                                         cfg.ell_lane)
+        del X                                  # train from the store only
+
+        self.y = y
+        self.alpha = np.zeros((n,), np.float32)
+        self.gamma = (-y).astype(np.float32)
+        self.stats = stats = FitStats(min_active=n)
+
+        interval = self._interval = h.interval(n)
+        tol20 = jnp.float32(cfg.recon_eps_factor * cfg.eps)
+        tol2 = jnp.float32(2.0 * cfg.eps)
+
+        shrink_on = h.policy != "none"
+        recon_count = 0
+        t_train = 0.0
+        t_recon = 0.0
+        stalled = False
+        step0, nshr0, act_full0 = 0, 0, None
+        if cfg.resume and cfg.checkpoint_dir:
+            got = self._load_ckpt(n)
+            if got is not None:
+                g, meta = got
+                self.alpha, self.gamma = g["alpha"], g["gamma"]
+                act_full0 = g["active"].astype(bool)
+                step0 = int(meta["step"])
+                nshr0 = int(meta.get("shrink_events", 0))
+                recon_count = int(meta.get("recon_count", 0))
+                shrink_on = bool(meta.get("shrink_on", shrink_on))
+                stats.reconstructions = recon_count
+
+        # Build the runner only after a possible restore: a Single-policy
+        # checkpoint taken post-reconstruction carries shrink_on=False, and
+        # a runner pre-built with interval > 0 would silently re-enable
+        # shrinking on resume (stale gammas, broken Eq. 9 bookkeeping).
+        run_interval = interval if shrink_on else 0
+        runner = sv._runner(cfg, run_interval)
+
+        if act_full0 is not None and shrink_on:
+            rows = np.flatnonzero(act_full0)
+        else:
+            rows = np.arange(n)
+        self.data, self.yb, self.state, self.idx = self._make_buffer(
+            y, self.alpha, self.gamma, rows)
+        self._refresh_masters()
+        self._note_buffer()
+        self.state = self.state._replace(step=jnp.int32(step0),
+                                         n_shrinks=jnp.int32(nshr0))
+        if run_interval > 0:
+            self.state = self.state._replace(
+                next_shrink=jnp.int32(step0 + run_interval))
+        ckpt_count = 0
+        # LRU/SLRU kernel-row cache (None when off). Never checkpointed:
+        # cached rows are exact, so rebuilding it empty on resume is
+        # trajectory-neutral. miss_seen tracks the cumulative miss counter
+        # so each chunk's flops bill only the rows actually recomputed.
+        self.cache = sv._new_cache(self.data.m)
+        miss_seen = 0
+
+        while True:
+            tol = tol20 if (shrink_on and recon_count == 0) else tol2
+            # ---- inner optimization at current tolerance ----------------
+            while True:
+                tc = time.perf_counter()
+                step_before = int(self.state.step)
+                self.state, self.cache = runner(
+                    self.data, self.yb, self.state, self.cache, tol,
+                    min(cfg.chunk_iters,
+                        max(1, cfg.max_iters - int(self.state.step))))
+                self.state.converged.block_until_ready()
+                t_train += time.perf_counter() - tc
+                n_active = int(jnp.sum(self.state.active))
+                stats.min_active = min(stats.min_active, n_active)
+                # hot-loop model FLOPs, selection- and cache-aware: each
+                # iteration pays the O(M) epilogue (Eq. 6 FMA; wss2 adds
+                # the second-order selection sweep), plus one kernel-row
+                # pass per row actually computed — 2/iter without the
+                # cache, the provider-miss count with it.
+                iters_done = int(self.state.step) - step_before
+                if self.cache is not None:
+                    misses_now = int(self.cache.misses)
+                    rows_new = misses_now - miss_seen
+                    miss_seen = misses_now
+                else:
+                    rows_new = 2 * iters_done
+                epilogue = 12.0 if cfg.selection == "wss2" else 4.0
+                stats.flops_est += (rows_new * self.data.flops_row_pass()
+                                    + iters_done * epilogue) \
+                    * float(self.data.m)
+                if cfg.checkpoint_dir:
+                    ckpt_count += 1
+                    if ckpt_count % cfg.checkpoint_every == 0:
+                        self._writeback()
+                        idx = self._host_idx()
+                        act_full = np.zeros((n,), bool)
+                        act_full[idx[(idx >= 0)
+                                     & np.asarray(self.state.active)]] = True
+                        self._save_ckpt(act_full, {
+                            "step": int(self.state.step),
+                            "shrink_events": int(self.state.n_shrinks),
+                            "recon_count": recon_count,
+                            "shrink_on": shrink_on})
+                if bool(self.state.converged) or bool(self.state.stalled) \
+                        or int(self.state.step) >= cfg.max_iters:
+                    break
+                # physical compaction between chunks (DESIGN.md SS4) —
+                # moves rows in the store's native format on device
+                if shrink_on and n_active < cfg.compact_ratio * self.data.m:
+                    p = sv._nshards()
+                    m_per = util.bucket_pow2(-(-n_active // p),
+                                             max(cfg.min_buffer // p, 8))
+                    if m_per * p < self.data.m:
+                        self._compact(n_active, p, m_per)
+            stalled = stalled or bool(self.state.stalled)
+            # n_shrinks is cumulative for the whole run (carried through
+            # compactions/reconstructions, restored from checkpoints), so
+            # assign — a += here grew quadratically with reconstructions
+            # under the Multi policy.
+            stats.shrink_events = int(self.state.n_shrinks)
+            self._writeback()
+
+            if not shrink_on or recon_count >= cfg.max_reconstructions \
+                    or int(self.state.step) >= cfg.max_iters:
+                break
+
+            # ---- gradient reconstruction + un-shrink (Alg. 5 l. 26-33) --
+            tr = time.perf_counter()
+            idx = self._host_idx()
+            act = np.zeros((n,), bool)
+            live = (idx >= 0) & np.asarray(self.state.active)
+            act[idx[live]] = True
+            stale = np.flatnonzero(~act)
+            self.gamma[stale] = sv._reconstruct(y, self.alpha, stale)
+            t_recon += time.perf_counter() - tr
+            recon_count += 1
+
+            # optimality over ALL samples (Eq. 9)
+            b_up, b_low = betas(self.gamma, self.alpha, y, cfg.C)
+            if b_up + 2.0 * cfg.eps >= b_low:
+                self.state = self.state._replace(converged=jnp.bool_(True))
+                break
+            # un-shrink: rebuild full buffer; Single disables shrinking.
+            # The grown buffer re-adds rows no cached entry has values for,
+            # so remap_cache invalidates here (counters survive).
+            step_save = int(self.state.step)
+            nshr = int(self.state.n_shrinks)
+            idx_old = idx
+            self.data, self.yb, self.state, self.idx = self._make_buffer(
+                y, self.alpha, self.gamma, np.arange(n))
+            self._refresh_masters()
+            self.cache = rowcache.remap_cache(self.cache, idx_old, self.idx,
+                                              sv._put_cache_vals)
+            self._note_buffer()
+            if h.policy == "single":
+                shrink_on = False
+                runner = sv._runner(cfg, 0)
+            else:
+                runner = sv._runner(cfg, interval)
+                self.state = self.state._replace(
+                    next_shrink=jnp.int32(step_save + interval))
+            self.state = self.state._replace(step=jnp.int32(step_save),
+                                             n_shrinks=jnp.int32(nshr))
+
+        # ---- account ----------------------------------------------------
+        stats.iterations = int(self.state.step)
+        stats.reconstructions = recon_count
+        stats.train_time = t_train
+        stats.recon_time = t_recon
+        stats.stalled = stalled
+        if self.cache is not None:
+            stats.cache_hits = int(self.cache.hits)
+            stats.cache_misses = int(self.cache.misses)
+            looked = stats.cache_hits + stats.cache_misses
+            stats.cache_hit_rate = (stats.cache_hits / looked
+                                    if looked else 0.0)
+        stats.total_time = time.perf_counter() - t0
+        return self.alpha, self.gamma, y, stats

@@ -1,5 +1,13 @@
 """Distributed SMO — the paper's Algorithms 3/4 on a JAX device mesh.
 
+The outer Alg. 5 control flow (shrink -> compact -> reconstruct ->
+un-shrink -> re-optimize) is NOT here: it lives in
+:mod:`repro.core.driver` and is shared with the single-host solver. This
+module provides the distributed *hooks* that driver consumes — shard_map
+chunk runners, the ppermute reconstruction ring, and mesh placement
+(including the output-sharding pins the jitted device-compaction step uses
+to re-gather sharded buffers and the sharded cache value table in place).
+
 Mapping from the paper's MPI/Global-Arrays design (DESIGN.md §2):
 
   * each mesh shard owns a contiguous, balanced block of samples
@@ -30,7 +38,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import dataplane, kernel_fns, rowcache, smo, solver
+from repro.core import dataplane, driver, kernel_fns, rowcache, smo, solver
+from repro.core import util
 from repro.launch.mesh import shard_map_compat
 
 AXIS = "shards"
@@ -47,7 +56,8 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
                                axis: str = AXIS, use_pallas: bool = False,
                                fmt: str = "dense", n_features: int = 0,
                                selection: str = "wss1",
-                               cache_slots: int = 0):
+                               cache_slots: int = 0,
+                               cache_policy: str = "lru"):
     """shard_map SMO chunk. State scalars are replicated; arrays sharded.
 
     ``fmt='ell'`` consumes block-ELL shards (vals, cols, sq); candidate rows
@@ -124,7 +134,7 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
         # barrier/cond structure is load-bearing for the bitwise exactness
         # contract (see rowcache.make_accessors).
         get_row1, get_rows2 = rowcache.make_accessors(
-            provider, ldata, cached, tol < 0.0)
+            provider, ldata, cached, tol < 0.0, cache_policy)
 
         def gather_select(gamma_l, alpha_l, active_l):
             """Local Eq. 8 + fused candidate exchange. Returns replicated
@@ -271,8 +281,8 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
     # table is sharded, on the buffer axis, so each shard caches its own
     # M_local row segments.
     cache_spec = rowcache.RowCache(
-        tags=rep, vals=P(None, axis), stamp=rep, tick=rep, hits=rep,
-        misses=rep)
+        tags=rep, vals=P(None, axis), stamp=rep, seg=rep, tick=rep,
+        hits=rep, misses=rep)
     in_specs = data_specs
     if cached:
         in_specs += (sharded,)                 # gids
@@ -399,8 +409,16 @@ def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
 
 
 class ParallelSMOSolver(solver.SMOSolver):
-    """Multi-device SMO with adaptive shrinking (Alg. 5 driver + Alg. 3/4
-    shard_map chunks + Alg. 6 ring reconstruction)."""
+    """Multi-device SMO with adaptive shrinking, trained through the
+    *same* :class:`repro.core.driver.EpochDriver` as the single-host
+    solver — this class only swaps the hook surface: Alg. 3/4 shard_map
+    chunk runners (``_runner``), mesh placement (``_put`` /
+    ``_put_cache_vals`` / ``_put_full``), compaction output-sharding pins
+    (``_compact_shardings`` — the device compaction step re-gathers buffer
+    rows *and* reshards the mesh-sharded cache value table in one jitted
+    program), and Alg. 6 ring reconstruction (``_reconstruct``). The
+    Single/Multi policy logic, checkpoint/resume, and compaction scheduling
+    exist once, in the driver."""
 
     def __init__(self, config: solver.SVMConfig, mesh: Optional[Mesh] = None,
                  axis: str = AXIS):
@@ -418,25 +436,42 @@ class ParallelSMOSolver(solver.SMOSolver):
         sh = self._sharding2d if arr.ndim == 2 else self._sharding
         return jax.device_put(jnp.asarray(arr), sh)
 
+    def _put_full(self, arr: np.ndarray):
+        """(n,) alpha/gamma device masters: replicated — they are touched
+        only by the compaction scatter and epoch-boundary writeback."""
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh, P()))
+
     def _put_cache_vals(self, arr: np.ndarray):
         """(slots, M) cache value table sharded on the buffer axis — each
         shard caches its own M_local row segments, zero extra collectives."""
         return jax.device_put(jnp.asarray(arr),
                               NamedSharding(self.mesh, P(None, self.axis)))
 
+    def _compact_shardings(self):
+        """Pin the device compaction step's outputs to the mesh layout the
+        chunk runner expects (rows/vectors on the buffer axis, cache value
+        table transposed-sharded, scalars and masters replicated)."""
+        mk = lambda spec: NamedSharding(self.mesh, spec)
+        return driver.CompactShardings(
+            rows=mk(P(self.axis, None)), vec=mk(P(self.axis)),
+            cache_vals=mk(P(None, self.axis)), rep=mk(P()))
+
     def _runner(self, cfg, interval):
         fmt = self._store.fmt
         # n_features is baked into the ELL closures (candidate-row densify),
         # so it must key the cache: a refit on a different-width dataset
         # would otherwise silently scatter out-of-bounds.
+        policy = cfg.row_cache_policy if self._cache_slots() else "lru"
         key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas, fmt,
-               self._store.n_features, cfg.selection, self._cache_slots())
+               self._store.n_features, cfg.selection, self._cache_slots(),
+               policy)
         if key not in self._runners:
             self._runners[key] = make_parallel_chunk_runner(
                 self.mesh, cfg.kernel, cfg.C, cfg.inv_2s2, interval,
                 self.axis, cfg.use_pallas, fmt=fmt,
                 n_features=self._store.n_features, selection=cfg.selection,
-                cache_slots=self._cache_slots())
+                cache_slots=self._cache_slots(), cache_policy=policy)
         return self._runners[key]
 
     def _reconstruct(self, y, alpha, stale):
@@ -451,7 +486,7 @@ class ParallelSMOSolver(solver.SMOSolver):
         store = self._store
         n = store.n
         fmt = store.fmt
-        rb = min(4096, _next_pow2(max(64, n)))
+        rb = min(4096, util.next_pow2(max(64, n)))
         # row_block and (for ELL) n_features are closed over by the ring —
         # key them so refits on different datasets rebuild the closure.
         key = ("recon", self.cfg.kernel, self.cfg.inv_2s2, fmt, rb,
@@ -499,7 +534,3 @@ class ParallelSMOSolver(solver.SMOSolver):
                   self._put(np.zeros((m,), np.float32)),
                   self._put(stale_mask))
         return np.asarray(g)[stale]
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << (int(n - 1)).bit_length()

@@ -24,12 +24,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import kernel_fns
+from repro.core import kernel_fns, util
 from repro.data import sparse as spfmt
 
 
 def _bucket(n: int, lo: int = 128) -> int:
-    return max(lo, 1 << (int(n - 1)).bit_length()) if n > 0 else lo
+    return util.bucket_pow2(n, lo)
 
 
 @functools.partial(jax.jit, static_argnames=("provider",))

@@ -21,12 +21,31 @@ jitted chunk's ``while_loop`` carry (no host round-trips):
     M_local row segment and every cache operation stays collective-free
     (lookups key on replicated global ids, so all shards take identical
     hit/miss branches and the tag table stays replicated by construction);
-  * ``stamp`` (S,)  i32 — last-use tick per slot (LRU eviction order);
+  * ``stamp`` (S,)  i32 — last-use tick per slot (recency eviction order);
+  * ``seg``   (S,)  i32 — SLRU segment per slot (0 probationary /
+    1 protected; identically 0 under the plain LRU policy);
   * ``tick/hits/misses`` — i32 scalars.
 
 Slot count S is a trace dimension; the solver buckets it to a power of two
 (``SVMConfig.row_cache_slots``) so user-tuned capacities do not multiply
 the jit cache.
+
+Eviction policies
+-----------------
+``policy='lru'`` (default) evicts the least-recently-used slot.  LRU has a
+known pathology on cyclic access patterns: when the working set exceeds the
+slot count, every access evicts the row that will be needed furthest in the
+future and the hit rate collapses to zero.  ``policy='slru'`` (segmented
+LRU, ``SVMConfig(row_cache_policy='slru')``) splits the slots into a
+probationary and a protected segment (protected capacity S//2): rows enter
+probationary on miss, are *promoted* to protected on their first hit, and
+only probationary slots are eviction victims — so a one-shot scan can only
+churn the probationary half while the re-referenced hot set survives in the
+protected half.  Promotion past the protected capacity demotes the
+protected LRU slot back to probationary (its value and stamp survive), so
+the protected segment also ages.  Both policies only change *which* rows
+stay cached — cached values are exact either way, so the bitwise
+trajectory contract below holds for both.
 
 Exactness
 ---------
@@ -67,11 +86,15 @@ import jax.numpy as jnp
 from jax import lax
 
 
+POLICIES = ("lru", "slru")
+
+
 class RowCache(NamedTuple):
-    """Fixed-slot LRU kernel-row cache (see module docstring)."""
+    """Fixed-slot LRU/SLRU kernel-row cache (see module docstring)."""
     tags: jax.Array     # (S,) i32 global sample ids, -1 = empty slot
     vals: jax.Array     # (S, M) f32 cached rows over buffer positions
     stamp: jax.Array    # (S,) i32 last-use tick
+    seg: jax.Array      # (S,) i32 SLRU segment (0 prob / 1 prot; 0 for lru)
     tick: jax.Array     # i32 — bumped once per cache access
     hits: jax.Array     # i32 — rows served from the value table
     misses: jax.Array   # i32 — rows (re)computed by the provider
@@ -85,6 +108,7 @@ def init_cache(slots: int, m: int,
         tags=jnp.full((slots,), -1, jnp.int32),
         vals=put_vals(np.zeros((slots, m), np.float32)),
         stamp=jnp.zeros((slots,), jnp.int32),
+        seg=jnp.zeros((slots,), jnp.int32),
         tick=jnp.int32(0),
         hits=jnp.int32(0),
         misses=jnp.int32(0),
@@ -115,17 +139,45 @@ def _find(tags: jax.Array, gid: jax.Array):
 # (bit-identical) row, which XLA performs as one O(M) dynamic-update-slice
 # on the loop-carried buffer.
 
-def _write(c: RowCache, gid, present, slot_e, row) -> tuple:
+_STAMP_MAX = jnp.int32(2**31 - 1)
+
+
+def _write(c: RowCache, gid, present, slot_e, row,
+           policy: str = "lru") -> tuple:
     """Write ``row`` under ``gid``: its existing slot when present, else the
-    least-recently-used slot. Returns (cache, slot)."""
-    slot = jnp.where(present, slot_e, jnp.argmin(c.stamp))
+    policy's eviction victim. Returns (cache, slot).
+
+    ``lru``: victim = least-recently-used slot; ``seg`` untouched (all 0).
+    ``slru``: victim = least-recently-used *probationary* slot (protected
+    slots are never evicted by an insert — that is the scan resistance);
+    a hit promotes its slot to protected, demoting the protected LRU back
+    to probationary when the protected segment is at capacity (S // 2).
+    The invariant |protected| <= S // 2 < S guarantees a probationary
+    victim always exists.
+    """
+    if policy == "lru":
+        slot = jnp.where(present, slot_e, jnp.argmin(c.stamp))
+        seg = c.seg
+    else:
+        prot = c.seg == 1
+        victim = jnp.argmin(jnp.where(prot, _STAMP_MAX, c.stamp))
+        slot = jnp.where(present, slot_e, victim)
+        cap = c.tags.shape[0] // 2
+        need_demote = present & (c.seg[slot] == 0) \
+            & (jnp.sum(prot.astype(jnp.int32)) >= cap)
+        dslot = jnp.argmin(jnp.where(prot, c.stamp, _STAMP_MAX))
+        seg = c.seg.at[dslot].set(
+            jnp.where(need_demote, 0, c.seg[dslot]))
+        seg = seg.at[slot].set(jnp.where(present, 1, 0))
     return c._replace(
         tags=c.tags.at[slot].set(gid),
         vals=c.vals.at[slot].set(row),
-        stamp=c.stamp.at[slot].set(c.tick)), slot
+        stamp=c.stamp.at[slot].set(c.tick),
+        seg=seg), slot
 
 
-def get_row(cache: RowCache, gid: jax.Array, compute: Callable[[], jax.Array]):
+def get_row(cache: RowCache, gid: jax.Array, compute: Callable[[], jax.Array],
+            policy: str = "lru"):
     """One row by global id: cached value on hit, ``compute()`` on miss.
     ``compute`` must be shard-local (it runs inside ``lax.cond``, where a
     collective would not be legal). Returns (row, cache)."""
@@ -133,14 +185,14 @@ def get_row(cache: RowCache, gid: jax.Array, compute: Callable[[], jax.Array]):
     slot, hit = _find(cache.tags, gid)
     got = cache.vals[slot]                              # O(M), pre-cond
     row = lax.cond(hit, lambda: got, compute)
-    cache, _ = _write(cache, gid, hit, slot, row)
+    cache, _ = _write(cache, gid, hit, slot, row, policy)
     return row, cache._replace(
         hits=cache.hits + hit.astype(jnp.int32),
         misses=cache.misses + (~hit).astype(jnp.int32))
 
 
 def get_pair(cache: RowCache, gid2: jax.Array,
-             compute2: Callable[[], jax.Array]):
+             compute2: Callable[[], jax.Array], policy: str = "lru"):
     """The fused two-row access of Eq. 6: returns ((M, 2) rows, cache).
 
     Pairwise hit policy: the value table is consulted only when *both*
@@ -157,18 +209,19 @@ def get_pair(cache: RowCache, gid2: jax.Array,
     both = h0 & h1
     got = jnp.stack([cache.vals[s0], cache.vals[s1]], axis=1)  # O(M), pre-cond
     rows = lax.cond(both, lambda: got, compute2)               # (M, 2)
-    cache, slot0 = _write(cache, gid2[0], h0, s0, rows[:, 0])
+    cache, slot0 = _write(cache, gid2[0], h0, s0, rows[:, 0], policy)
     # re-probe against the updated tags so gid2[1] == gid2[0] (or a fresh
     # insert colliding with s1's stamp) resolves to the right slot
     s1b, h1b = _find(cache.tags, gid2[1])
-    cache, _ = _write(cache, gid2[1], h1b, s1b, rows[:, 1])
+    cache, _ = _write(cache, gid2[1], h1b, s1b, rows[:, 1], policy)
     two = jnp.int32(2)
     return rows, cache._replace(
         hits=cache.hits + jnp.where(both, two, 0),
         misses=cache.misses + jnp.where(both, 0, two))
 
 
-def make_accessors(provider, data, cached: bool, never: jax.Array):
+def make_accessors(provider, data, cached: bool, never: jax.Array,
+                   policy: str = "lru"):
     """The runners' row-access functions, cached and uncached — ONE
     implementation because the exact barrier/cond structure is load-bearing
     for the bitwise cache-on == cache-off contract:
@@ -193,7 +246,7 @@ def make_accessors(provider, data, cached: bool, never: jax.Array):
         compute = lambda: lax.optimization_barrier(
             provider.row(data, lax.optimization_barrier(z)))
         if cached:
-            return get_row(c, gid, compute)
+            return get_row(c, gid, compute, policy)
         zero = jnp.zeros_like(data.sq_norms)
         return lax.cond(never, lambda: zero, compute), c
 
@@ -201,11 +254,33 @@ def make_accessors(provider, data, cached: bool, never: jax.Array):
         compute = lambda: lax.optimization_barrier(
             provider.rows2(data, lax.optimization_barrier(z2)))
         if cached:
-            return get_pair(c, gid2, compute)
+            return get_pair(c, gid2, compute, policy)
         zero = jnp.zeros(data.sq_norms.shape + (2,), jnp.float32)
         return lax.cond(never, lambda: zero, compute), c
 
     return get_row1, get_rows2
+
+
+def remap_cache_device(cache: Optional[RowCache], src: jax.Array,
+                       valid: jax.Array) -> Optional[RowCache]:
+    """Device-side cache carry-over across a *physical compaction* — the
+    jit-compatible half of the invalidation-by-remap contract.
+
+    ``src``/``valid`` are the compaction gather plan
+    (``dataplane.compact_plan``): the new buffer is a subset of the old, so
+    every cached row survives by a column re-gather (``jnp.take`` along the
+    value table's M axis), tags/stamps/segments/counters untouched. New
+    padding columns are zeroed (padding rows are never active, so the zeros
+    are never read as kernel values). No host materialization of the
+    (S, M) table — under the parallel solver the gather is compiled
+    alongside the buffer gather, so XLA reshards the mesh-sharded table in
+    the same step. Buffer *growth* (reconstruction / un-shrink) still goes
+    through the host :func:`remap_cache`, which invalidates wholesale.
+    """
+    if cache is None:
+        return None
+    vals = jnp.where(valid[None, :], jnp.take(cache.vals, src, axis=1), 0.0)
+    return cache._replace(vals=vals)
 
 
 def remap_cache(cache: Optional[RowCache], old_idx: np.ndarray,
@@ -213,8 +288,9 @@ def remap_cache(cache: Optional[RowCache], old_idx: np.ndarray,
                 put_vals: Callable = jnp.asarray) -> Optional[RowCache]:
     """Host-side cache carry-over across a buffer rebuild (see module
     docstring): re-gather value columns when the new buffer is a subset of
-    the old one (compaction), invalidate wholesale when it is not
-    (reconstruction / un-shrink re-adds rows with no cached values).
+    the old one (compaction under ``compact_backend='host'``), invalidate
+    wholesale when it is not (reconstruction / un-shrink re-adds rows with
+    no cached values).
 
     ``old_idx`` / ``new_idx`` are the driver's ``idx_buf`` arrays mapping
     buffer position -> global sample id (-1 on padding rows).

@@ -12,7 +12,8 @@ Implements the paper's Algorithm 1 (sequential view) as a jit-compiled
 Shapes are static under jit: shrinking inside the chunk is *mask-based*
 (restricts selection, as in the paper); the FLOP reduction the paper gets
 from eliminating samples is realized by *physical compaction* between chunks
-(see ``solver.py``), because XLA requires static shapes. gamma is maintained
+(see ``driver.py`` — a device-side gather), because XLA requires static
+shapes. gamma is maintained
 for every sample currently resident in the (compacted) buffer — the paper
 makes the same choice ("gamma ... is maintained for all the samples in the
 training set/non-shrunk samples", Sec. 2.2.1).
@@ -129,7 +130,8 @@ def wss2_scores(gamma, alpha, y, active, C, g_up, row_up, kdiag, k_uu):
 def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
                       shrink_interval: int, use_pallas: bool = False,
                       shrink_min_interval: int = 1, selection: str = "wss1",
-                      fmt: str = "dense", cache_slots: int = 0):
+                      fmt: str = "dense", cache_slots: int = 0,
+                      cache_policy: str = "lru"):
     """Build the jitted chunk: run up to ``max_iters`` SMO iterations or until
     beta_up + tol >= beta_low over the active set.
 
@@ -156,6 +158,9 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
     them with the exact cache-off provider kernels on miss — trajectories
     are bit-identical either way. With ``cache_slots == 0`` the cache
     argument is passed as None and the fused no-cache paths run unchanged.
+    ``cache_policy`` selects the eviction policy ('lru' | 'slru'); policies
+    only change which rows stay cached, never their values, so the bitwise
+    trajectory contract holds for both.
 
     Nothing here closes over buffer geometry: M, and for ELL buffers the
     lane budget K, are trace dimensions of the jitted chunk, so one runner
@@ -187,7 +192,7 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
         # executables — the shared factory is load-bearing for the bitwise
         # exactness contract (see rowcache.make_accessors).
         get_row1, get_rows2 = rowcache.make_accessors(
-            provider, data, cached, tol < 0.0)
+            provider, data, cached, tol < 0.0, cache_policy)
 
         def body(carry):
             s, c = carry

@@ -1,36 +1,40 @@
-"""SMO driver — the paper's Algorithm 5 control flow.
+"""Single-host SMO solver — public API + the epoch-driver hook surface.
 
-Phases (faithful to Alg. 5):
+The shrink -> compact -> reconstruct -> un-shrink -> re-optimize state
+machine (the paper's Algorithm 5) lives in :mod:`repro.core.driver` and is
+shared verbatim with :class:`repro.core.parallel.ParallelSMOSolver`; this
+module owns what is *per-solver*:
 
-  shrink stage    run jitted SMO chunks with in-loop shrinking until
-                  beta_up + 20*eps >= beta_low on the active set; physically
-                  compact the buffer between chunks when enough samples have
-                  been shrunk (this is where the FLOP/byte reduction the
-                  paper measures actually lands on TPU);
-  reconstruct     Alg. 6 for every non-active sample, then un-shrink
-                  (reset pi_q) and re-check optimality over ALL samples;
-  re-optimize     Single: shrinking disabled, run to 2*eps.
-                  Multi:  shrinking re-enabled (counter reset), run to 2*eps
-                          on the active set, reconstruct again, repeat until
-                          Eq. 9 holds over all samples.
+  * :class:`SVMConfig` / :class:`SVMModel` — the user-facing configuration
+    and trained-model API (predict / decision_function / dual_objective);
+  * :class:`SMOSolver` — the single-host hook implementations the driver
+    calls: chunk-runner construction (``_runner``), device placement
+    (``_put`` / ``_put_full`` / ``_put_cache_vals``), row-cache sizing
+    (``_cache_slots`` / ``_new_cache``), host-blocked Alg. 6
+    (``_reconstruct``), and compaction sharding pins
+    (``_compact_shardings``; None here — single device);
+  * model finalize — beta, support-vector extraction in the store's native
+    format, and the Eq. 9 convergence verdict over all samples.
 
-The "Original" baseline (Alg. 3, no shrinking) is the same driver with the
-shrink interval = 0 and no reconstruction, run straight to 2*eps.
+``repro.core.parallel`` overrides exactly the placement/runner/
+reconstruction hooks to train the same driver over a shard_map mesh —
+the Single/Multi policy logic, checkpoint/resume, and physical compaction
+exist once, in the driver.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import dataplane
+from repro.core import dataplane, driver
 from repro.core import heuristics as H
 from repro.core import kernel_fns, reconstruct, rowcache, smo
-from repro.data import sparse as spfmt
+from repro.core.driver import FitStats  # re-export (public API)
+
+__all__ = ["SVMConfig", "SVMModel", "SMOSolver", "FitStats", "train"]
 
 
 @dataclasses.dataclass
@@ -54,11 +58,17 @@ class SVMConfig:
                                  # every buffer build/compaction (bucketed to
                                  # power-of-two lanes); False pins K to the
                                  # store-wide ingest budget
-    row_cache: bool = False      # device-resident LRU kernel-row cache in
-                                 # front of the row provider; exact (cache
-                                 # on/off trajectories are bit-identical)
+    row_cache: bool = False      # device-resident kernel-row cache in front
+                                 # of the row provider; exact (cache on/off
+                                 # trajectories are bit-identical)
     row_cache_slots: int = 64    # cache capacity (rows); bucketed to a power
                                  # of two so it is not a jit retrace dimension
+    row_cache_policy: str = "lru"   # eviction: 'lru' | 'slru' (segmented —
+                                 # scan-resistant when the working set
+                                 # exceeds the slot count; still exact)
+    compact_backend: str = "device"  # physical compaction: 'device' (jitted
+                                 # jnp.take gather, zero host row traffic) |
+                                 # 'host' (store rebuild — the parity oracle)
     max_iters: int = 4_000_000
     chunk_iters: int = 256       # jitted while_loop segment length; smaller
                                  # chunks let physical compaction engage
@@ -76,38 +86,6 @@ class SVMConfig:
     @property
     def inv_2s2(self) -> float:
         return 1.0 / (2.0 * self.sigma2)
-
-
-@dataclasses.dataclass
-class FitStats:
-    iterations: int = 0
-    n_sv: int = 0
-    n_bound_sv: int = 0
-    reconstructions: int = 0
-    shrink_events: int = 0
-    compactions: int = 0
-    min_active: int = 0
-    train_time: float = 0.0
-    recon_time: float = 0.0
-    total_time: float = 0.0
-    converged: bool = False
-    stalled: bool = False
-    final_gap: float = 0.0
-    buffer_sizes: list = dataclasses.field(default_factory=list)
-    buffer_K: list = dataclasses.field(default_factory=list)
-    # per-buffer ELL lane budget (adaptive K trajectory); empty for dense
-    shard_K: list = dataclasses.field(default_factory=list)
-    # per-buffer tuple of lane-rounded K per shard (host-side raggedness;
-    # the device array is padded to max(shard_K) — XLA collectives need
-    # uniform shapes, unlike the paper's per-rank MPI buffers)
-    flops_est: float = 0.0       # model FLOPs of the gamma-update hot loop;
-                                 # selection-aware (wss2 bills two single-row
-                                 # passes + the selection sweep) and cache-
-                                 # aware (hits skip the kernel-row pass and
-                                 # are billed only the O(M) FMA epilogue)
-    cache_hits: int = 0          # kernel rows served from the LRU row cache
-    cache_misses: int = 0        # kernel rows (re)computed by the provider
-    cache_hit_rate: float = 0.0  # hits / (hits + misses); 0 when cache off
 
 
 @dataclasses.dataclass
@@ -172,22 +150,19 @@ class SVMModel:
         return float(a.sum() - 0.5 * self.sv_coef @ K @ self.sv_coef)
 
 
-def _bucket(n: int, lo: int) -> int:
-    return min(max(lo, 1 << (int(n - 1)).bit_length()), 1 << 30) if n > 0 else lo
-
-
 _RUNNER_CACHE: dict = {}
 
 
 class SMOSolver:
-    """Single-host SMO with adaptive shrinking. See ``repro.core.parallel``
-    for the shard_map multi-device version."""
+    """Single-host SMO with adaptive shrinking, trained through the shared
+    :class:`repro.core.driver.EpochDriver`. See ``repro.core.parallel`` for
+    the shard_map multi-device version (same driver, different hooks)."""
 
     def __init__(self, config: SVMConfig):
         self.cfg = config
         self.h = H.get(config.heuristic)
 
-    # -- backend hooks (overridden by repro.core.parallel) --------------------
+    # -- backend hooks (overridden by repro.core.parallel) ----------------
     def _cache_slots(self) -> int:
         """Row-cache capacity: 0 when disabled, else power-of-two bucketed
         so user-tuned values do not each get their own XLA executable."""
@@ -207,13 +182,16 @@ class SMOSolver:
         return rowcache.init_cache(slots, m, self._put_cache_vals)
 
     def _runner(self, cfg: SVMConfig, interval: int):
+        # the eviction policy is dead code in a cache-off runner — pin it in
+        # the key so 'lru' and 'slru' cache-off fits share one executable
+        policy = cfg.row_cache_policy if self._cache_slots() else "lru"
         key = (cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas,
-               cfg.selection, cfg.format, self._cache_slots())
+               cfg.selection, cfg.format, self._cache_slots(), policy)
         if key not in _RUNNER_CACHE:
             _RUNNER_CACHE[key] = smo.make_chunk_runner(
                 cfg.kernel, cfg.C, cfg.inv_2s2, interval, cfg.use_pallas,
                 selection=cfg.selection, fmt=cfg.format,
-                cache_slots=self._cache_slots())
+                cache_slots=self._cache_slots(), cache_policy=policy)
         return _RUNNER_CACHE[key]
 
     def _reconstruct(self, y, alpha, stale):
@@ -223,7 +201,6 @@ class SMOSolver:
         return reconstruct.reconstruct_gamma_store(
             self.cfg.kernel, self._store, y, alpha, stale, self.cfg.inv_2s2)
 
-    # -- buffer plumbing -----------------------------------------------------
     def _nshards(self) -> int:
         return 1
 
@@ -231,294 +208,36 @@ class SMOSolver:
         """Device placement hook; the parallel subclass shards over the mesh."""
         return jnp.asarray(arr)
 
-    def _make_buffer(self, y, alpha, gamma, idx):
-        """Gather rows ``idx`` from the host store into a padded buffer of p
-        balanced shards.
+    def _put_full(self, arr: np.ndarray):
+        """Placement for the (n,) alpha/gamma device masters the compaction
+        pipeline scatters into; replicated over the mesh in parallel."""
+        return jnp.asarray(arr)
 
-        Returns (data, y_buf, fresh state, idx_buf) where ``data`` is the
-        device-side DenseData/ELLData buffer and idx_buf maps buffer row ->
-        global sample index (-1 on padding rows). Active rows are distributed
-        contiguously and evenly across shards — the paper's "load balancing
-        ... requires contiguous data movement of samples" (Sec. 3.1.2).
+    def _compact_shardings(self):
+        """Output-sharding pins for the device compaction step — None on a
+        single device; the parallel subclass returns its mesh layout."""
+        return None
 
-        ELL-family stores get an *adaptive* lane budget: K is recomputed
-        from exactly the surviving rows (``store.buffer_K``) and bucketed to
-        a power-of-two number of lanes (bounds jit retraces — K is a trace
-        dimension of every chunk runner). Each shard's own lane-rounded K is
-        also recorded (``self._last_shard_K`` -> ``FitStats.shard_K``); the
-        physical device array is padded to the bucketed max because XLA
-        collectives require uniform shapes across shards, unlike the
-        paper's per-rank MPI buffers which are truly ragged.
-        """
-        p = self._nshards()
-        m_per = _bucket(-(-idx.size // p), max(self.cfg.min_buffer // p, 8))
-        m = m_per * p
-        ell = self._store.fmt == "ell"
-        K_buf = None
-        if ell:
-            K_buf = (spfmt.bucket_lanes(self._store.buffer_K(idx),
-                                        self.cfg.ell_lane, cap=self._store.K)
-                     if self.cfg.ell_adaptive else self._store.K)
-        buf = self._store.alloc(m, K_buf)
-        yb = np.ones((m,), np.float32)          # padding: y=+1, alpha=0 -> I1
-        ab = np.zeros((m,), np.float32)
-        gb = np.full((m,), np.inf, np.float32)  # padding gamma never selected
-        valid = np.zeros((m,), bool)
-        idx_buf = np.full((m,), -1, np.int64)
-        shard_K = []
-        base, extra = divmod(idx.size, p)
-        off = 0
-        for q in range(p):
-            cnt = base + (1 if q < extra else 0)
-            sl = slice(q * m_per, q * m_per + cnt)
-            sub = idx[off: off + cnt]
-            self._store.fill(buf, sl, sub)
-            yb[sl] = y[sub]
-            ab[sl] = alpha[sub]
-            gb[sl] = gamma[sub]
-            valid[sl] = True
-            idx_buf[sl] = sub
-            if ell:
-                shard_K.append(self._store.buffer_K(sub))
-            off += cnt
-        self._last_shard_K = tuple(shard_K)
-        # row identity travels with the buffer only when the row cache needs
-        # it — cache-off chunk graphs stay exactly as before
-        data = self._store.to_device(
-            buf, self._put, gids=idx_buf if self._cache_slots() else None)
-        state = smo.init_state(self._put(ab), self._put(gb),
-                               self._put(valid))
-        return data, self._put(yb), state, idx_buf
-
-    # -- fault tolerance -------------------------------------------------
-    def _save_ckpt(self, alpha, gamma, act_full, meta: dict):
-        from repro.ckpt import checkpoint as ck
-        import os
-        d = os.path.join(self.cfg.checkpoint_dir, f"step_{meta['step']}")
-        ck.save(d, meta["step"],
-                {"svm": {"alpha": alpha, "gamma": gamma,
-                         "active": act_full.astype(np.int8)}},
-                extra=meta)
-
-    def _load_ckpt(self, n: int):
-        from repro.ckpt import checkpoint as ck
-        step = ck.latest_step(self.cfg.checkpoint_dir)
-        if step is None:
-            return None
-        import os
-        d = os.path.join(self.cfg.checkpoint_dir, f"step_{step}")
-        like = {"alpha": np.zeros(n, np.float32),
-                "gamma": np.zeros(n, np.float32),
-                "active": np.zeros(n, np.int8)}
-        g = ck.restore(d, "svm", like)
-        man = ck.load_manifest(d)
-        return ({k: np.array(v) for k, v in g.items()}, man["extra"])
-
-    # -- main ----------------------------------------------------------------
+    # -- main -------------------------------------------------------------
     def fit(self, X, y: np.ndarray) -> SVMModel:
-        """Train on ``(X, y)``. ``X`` is a dense (n, d) matrix, or — with
-        ``format='ell'`` — CSR input (``data.sparse.CSRMatrix``, scipy-like
-        csr object, or a ``(data, indices, indptr, shape)`` tuple), which
-        streams CSR->ELL buffers and never allocates dense X on host."""
-        cfg, h = self.cfg, self.h
-        t0 = time.perf_counter()
-        if spfmt.is_csr_like(X):
-            X = spfmt.as_csr(X)      # normalizes scipy-like/tuple forms
-        else:
-            X = np.ascontiguousarray(X, np.float32)
-        y = np.ascontiguousarray(y, np.float32)
-        n, d = (int(s) for s in X.shape)
-        assert set(np.unique(y)) <= {-1.0, 1.0}, "labels must be +-1"
-        self._store = dataplane.make_store(X, cfg.format, cfg.ell_K,
-                                           cfg.ell_lane)
-        del X                                  # train from the store only
+        """Train on ``(X, y)`` via the shared epoch driver. ``X`` is a
+        dense (n, d) matrix, or — with ``format='ell'`` — CSR input
+        (``data.sparse.CSRMatrix``, scipy-like csr object, or a
+        ``(data, indices, indptr, shape)`` tuple), which streams CSR->ELL
+        buffers and never allocates dense X on host."""
+        cfg = self.cfg
+        alpha, gamma, y, stats = driver.EpochDriver(self).fit(X, y)
 
-        alpha = np.zeros((n,), np.float32)
-        gamma = (-y).astype(np.float32)
-        stats = FitStats(min_active=n)
-
-        interval = h.interval(n)
-        tol20 = jnp.float32(cfg.recon_eps_factor * cfg.eps)
-        tol2 = jnp.float32(2.0 * cfg.eps)
-
-        shrink_on = h.policy != "none"
-        recon_count = 0
-        t_train = 0.0
-        t_recon = 0.0
-        stalled = False
-        step0, nshr0, act_full0 = 0, 0, None
-        if cfg.resume and cfg.checkpoint_dir:
-            got = self._load_ckpt(n)
-            if got is not None:
-                g, meta = got
-                alpha, gamma = g["alpha"], g["gamma"]
-                act_full0 = g["active"].astype(bool)
-                step0 = int(meta["step"])
-                nshr0 = int(meta.get("shrink_events", 0))
-                recon_count = int(meta.get("recon_count", 0))
-                shrink_on = bool(meta.get("shrink_on", shrink_on))
-                stats.reconstructions = recon_count
-
-        # Build the runner only after a possible restore: a Single-policy
-        # checkpoint taken post-reconstruction carries shrink_on=False, and
-        # a runner pre-built with interval > 0 would silently re-enable
-        # shrinking on resume (stale gammas, broken Eq. 9 bookkeeping).
-        run_interval = interval if shrink_on else 0
-        runner = self._runner(cfg, run_interval)
-
-        if act_full0 is not None and shrink_on:
-            idx = np.flatnonzero(act_full0)
-        else:
-            idx = np.arange(n)
-        data, yb, state, idx = self._make_buffer(y, alpha, gamma, idx)
-        self._note_buffer(stats, data)
-        state = state._replace(step=jnp.int32(step0),
-                               n_shrinks=jnp.int32(nshr0))
-        if run_interval > 0:
-            state = state._replace(next_shrink=jnp.int32(step0 + run_interval))
-        ckpt_count = 0
-        # LRU kernel-row cache (None when off). Never checkpointed: cached
-        # rows are exact, so rebuilding it empty on resume is trajectory-
-        # neutral. miss_seen tracks the cumulative miss counter so each
-        # chunk's flops bill only the rows actually recomputed.
-        cache = self._new_cache(data.m)
-        miss_seen = 0
-
-        while True:
-            tol = tol20 if (shrink_on and recon_count == 0) else tol2
-            # ---- inner optimization at current tolerance --------------------
-            while True:
-                tc = time.perf_counter()
-                step_before = int(state.step)
-                state, cache = runner(data, yb, state, cache, tol,
-                                      min(cfg.chunk_iters,
-                                          max(1, cfg.max_iters
-                                              - int(state.step))))
-                state.converged.block_until_ready()
-                t_train += time.perf_counter() - tc
-                n_active = int(jnp.sum(state.active))
-                stats.min_active = min(stats.min_active, n_active)
-                # hot-loop model FLOPs, selection- and cache-aware: each
-                # iteration pays the O(M) epilogue (Eq. 6 FMA; wss2 adds the
-                # second-order selection sweep), plus one kernel-row pass
-                # per row actually computed — 2/iter without the cache, the
-                # provider-miss count with it.
-                iters_done = int(state.step) - step_before
-                if cache is not None:
-                    misses_now = int(cache.misses)
-                    rows_new = misses_now - miss_seen
-                    miss_seen = misses_now
-                else:
-                    rows_new = 2 * iters_done
-                epilogue = 12.0 if cfg.selection == "wss2" else 4.0
-                stats.flops_est += (rows_new * data.flops_row_pass()
-                                    + iters_done * epilogue) * float(data.m)
-                if cfg.checkpoint_dir:
-                    ckpt_count += 1
-                    if ckpt_count % cfg.checkpoint_every == 0:
-                        alpha, gamma = self._writeback(state, idx, alpha,
-                                                       gamma)
-                        act_full = np.zeros((n,), bool)
-                        act_full[idx[(idx >= 0)
-                                     & np.asarray(state.active)]] = True
-                        self._save_ckpt(alpha, gamma, act_full, {
-                            "step": int(state.step),
-                            "shrink_events": int(state.n_shrinks),
-                            "recon_count": recon_count,
-                            "shrink_on": shrink_on})
-                if bool(state.converged) or bool(state.stalled) or \
-                        int(state.step) >= cfg.max_iters:
-                    break
-                # physical compaction between chunks (DESIGN.md SS4) — moves
-                # rows in the store's native format (ELL: 2K+1 floats/row)
-                if shrink_on and n_active < cfg.compact_ratio * data.m \
-                        and _bucket(-(-n_active // self._nshards()),
-                                    max(cfg.min_buffer // self._nshards(), 8)) \
-                        * self._nshards() < data.m:
-                    alpha, gamma = self._writeback(state, idx, alpha, gamma)
-                    keep_mask = (idx >= 0) & np.asarray(state.active)
-                    keep = idx[keep_mask]
-                    idx_old = idx
-                    data, yb, state2, idx = self._make_buffer(
-                        y, alpha, gamma, keep)
-                    # survivors keep their global ids -> cached rows are
-                    # re-gathered into the compacted geometry, not dropped
-                    cache = rowcache.remap_cache(cache, idx_old, idx,
-                                                 self._put_cache_vals)
-                    state = state2._replace(
-                        step=state.step,
-                        next_shrink=state.step + max(1, min(interval, keep.size)),
-                        n_shrinks=state.n_shrinks)
-                    stats.compactions += 1
-                    self._note_buffer(stats, data)
-            stalled = stalled or bool(state.stalled)
-            # n_shrinks is cumulative for the whole run (carried through
-            # compactions/reconstructions, restored from checkpoints), so
-            # assign — a += here grew quadratically with reconstructions
-            # under the Multi policy.
-            stats.shrink_events = int(state.n_shrinks)
-            alpha, gamma = self._writeback(state, idx, alpha, gamma)
-
-            if not shrink_on or recon_count >= cfg.max_reconstructions \
-                    or int(state.step) >= cfg.max_iters:
-                break
-
-            # ---- gradient reconstruction + un-shrink (Alg. 5 lines 26-33) --
-            tr = time.perf_counter()
-            act = np.zeros((n,), bool)
-            live = (idx >= 0) & np.asarray(state.active)
-            act[idx[live]] = True
-            stale = np.flatnonzero(~act)
-            gamma[stale] = self._reconstruct(y, alpha, stale)
-            t_recon += time.perf_counter() - tr
-            recon_count += 1
-
-            # optimality over ALL samples (Eq. 9)
-            b_up, b_low = _betas(gamma, alpha, y, cfg.C)
-            if b_up + 2.0 * cfg.eps >= b_low:
-                state = state._replace(converged=jnp.bool_(True))
-                break
-            # un-shrink: rebuild full buffer; Single disables shrinking.
-            # The grown buffer re-adds rows no cached entry has values for,
-            # so remap_cache invalidates here (counters survive).
-            step_save, nshr = int(state.step), int(state.n_shrinks)
-            idx_old = idx
-            data, yb, state, idx = self._make_buffer(
-                y, alpha, gamma, np.arange(n))
-            cache = rowcache.remap_cache(cache, idx_old, idx,
-                                         self._put_cache_vals)
-            self._note_buffer(stats, data)
-            if h.policy == "single":
-                shrink_on = False
-                runner = self._runner(cfg, 0)
-            else:
-                runner = self._runner(cfg, interval)
-                state = state._replace(
-                    next_shrink=jnp.int32(step_save + interval))
-            state = state._replace(step=jnp.int32(step_save),
-                                   n_shrinks=jnp.int32(nshr))
-
-        # ---- finalize -------------------------------------------------------
-        b_up, b_low = _betas(gamma, alpha, y, cfg.C)
+        # ---- finalize: beta, SV extraction, Eq. 9 verdict ----------------
+        b_up, b_low = driver.betas(gamma, alpha, y, cfg.C)
         bnd = cfg.C * smo._BND
         i0 = (alpha > bnd) & (alpha < cfg.C - bnd)
         beta = float(gamma[i0].mean()) if i0.any() else float((b_low + b_up) / 2)
         sv = np.flatnonzero(alpha > 0)
-        stats.iterations = int(state.step)
         stats.n_sv = int(sv.size)
         stats.n_bound_sv = int(np.sum(alpha >= cfg.C))
-        stats.reconstructions = recon_count
-        stats.train_time = t_train
-        stats.recon_time = t_recon
-        stats.total_time = time.perf_counter() - t0
         stats.converged = bool(b_up + 2 * cfg.eps >= b_low)
-        stats.stalled = stalled
         stats.final_gap = float(b_low - b_up)
-        if cache is not None:
-            stats.cache_hits = int(cache.hits)
-            stats.cache_misses = int(cache.misses)
-            looked = stats.cache_hits + stats.cache_misses
-            stats.cache_hit_rate = stats.cache_hits / looked if looked else 0.0
         coef = (alpha[sv] * y[sv]).astype(np.float32)
         if self._store.fmt == "ell":
             # SV extraction at the SVs' own adaptive K (lane-rounded max
@@ -530,36 +249,6 @@ class SMOSolver:
                             n_features=self._store.n_features)
         return SVMModel(cfg, self._store.X[sv].copy(), coef, beta, alpha,
                         stats)
-
-    def _note_buffer(self, stats: FitStats, data) -> None:
-        """Record buffer geometry: size always; K/shard-K on ELL buffers."""
-        stats.buffer_sizes.append(data.m)
-        if isinstance(data, dataplane.ELLData):
-            stats.buffer_K.append(data.K)
-            stats.shard_K.append(self._last_shard_K)
-
-    @staticmethod
-    def _writeback(state: smo.SMOState, idx: np.ndarray,
-                   alpha: np.ndarray, gamma: np.ndarray):
-        ab = np.asarray(state.alpha)
-        gb = np.asarray(state.gamma)
-        mask = idx >= 0
-        alpha[idx[mask]] = ab[mask]
-        gamma[idx[mask]] = gb[mask]
-        return alpha, gamma
-
-
-def _betas(gamma: np.ndarray, alpha: np.ndarray, y: np.ndarray, C: float):
-    """Eq. 8 on host over all samples (used at reconstruction points)."""
-    pos = y > 0
-    at0 = alpha <= C * smo._BND
-    atc = alpha >= C * (1.0 - smo._BND)
-    i0 = ~at0 & ~atc
-    in_up = i0 | (pos & at0) | (~pos & atc)
-    in_low = i0 | (pos & atc) | (~pos & at0)
-    b_up = gamma[in_up].min() if in_up.any() else np.inf
-    b_low = gamma[in_low].max() if in_low.any() else -np.inf
-    return float(b_up), float(b_low)
 
 
 def train(X: np.ndarray, y: np.ndarray, **kw) -> SVMModel:

@@ -1,0 +1,27 @@
+"""Small shared numeric utilities for the SMO stack.
+
+Power-of-two bucketing is load-bearing everywhere a host-side size becomes
+a jit trace dimension (buffer rows M, reconstruction blocks, ring row
+blocks): bucketing keeps the XLA executable cache at O(log N) entries per
+runner instead of one per distinct size. The three hand-rolled copies that
+used to live in ``solver``, ``parallel`` and ``reconstruct`` are
+consolidated here so the rounding semantics cannot drift apart.
+"""
+from __future__ import annotations
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= ``n`` (1 for n <= 1)."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def bucket_pow2(n: int, lo: int, hi: int = 1 << 30) -> int:
+    """Power-of-two bucket of ``n`` clamped to [``lo``, ``hi``].
+
+    ``n <= 0`` returns ``lo`` (an empty gather still needs a non-degenerate
+    buffer shape). ``lo``/``hi`` need not themselves be powers of two; the
+    clamp applies after rounding.
+    """
+    if n <= 0:
+        return lo
+    return min(max(lo, next_pow2(n)), hi)

@@ -161,6 +161,23 @@ def to_ell(X: np.ndarray, K: int | None = None, lane: int = 128) -> ELLMatrix:
     return ELLMatrix(vals, cols, (n, d))
 
 
+def csr_row_extent(csr: CSRMatrix) -> np.ndarray:
+    """Per-row trailing-nonzero extent of the CSR->ELL packed layout: the
+    in-row position of the last *nonzero* stored entry + 1 (0 for
+    empty/all-zero rows). This — not ``row_nnz`` — is the smallest K a row
+    survives truncation to, and it matches :func:`ell_row_extent` on the
+    filled ELL buffer exactly, so host- and device-side adaptive-K
+    compaction agree even when the CSR input carries explicitly stored
+    zeros (thresholded matrices without ``eliminate_zeros()``)."""
+    n = csr.shape[0]
+    rows = np.repeat(np.arange(n), csr.row_nnz())
+    pos = np.arange(csr.nnz, dtype=np.int64) - csr.indptr[rows]
+    mask = csr.data != 0
+    ext = np.zeros(n, np.int64)
+    np.maximum.at(ext, rows[mask], pos[mask] + 1)
+    return ext
+
+
 def ell_row_extent(vals: np.ndarray) -> np.ndarray:
     """Per-row occupied-slot count of an ELL block: last nonzero slot + 1
     (0 for all-padding rows). ``to_ell`` packs nonzeros into a prefix, so

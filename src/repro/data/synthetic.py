@@ -12,6 +12,7 @@ Every generator is deterministic in (spec, seed, scale).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Literal
 
 import numpy as np
@@ -111,7 +112,10 @@ def make(spec: "DatasetSpec | str", scale: float = 1.0, seed: int = 0):
     (CPU-friendly benchmark sizes) without changing d or statistics."""
     if isinstance(spec, str):
         spec = SPECS[spec]
-    rng = np.random.default_rng(seed + hash(spec.name) % 2**16)
+    # crc32, not hash(): str hashing is salted per process, which made the
+    # "deterministic in (spec, seed, scale)" contract silently false across
+    # runs (two identical CLI invocations trained on different datasets)
+    rng = np.random.default_rng(seed + zlib.crc32(spec.name.encode()) % 2**16)
     n_tr = max(64, int(spec.n_train * scale))
     n_te = int(spec.n_test * scale)
     X, y = _GEN[spec.kind](rng, n_tr + max(n_te, 0), spec)

@@ -26,6 +26,14 @@ def main():
                     help="device-resident LRU kernel-row cache (exact: "
                          "identical trajectory, fewer kernel-row passes)")
     ap.add_argument("--row-cache-slots", type=int, default=64)
+    ap.add_argument("--row-cache-policy", default="lru",
+                    choices=("lru", "slru"),
+                    help="cache eviction: plain LRU or scan-resistant "
+                         "segmented LRU (both exact)")
+    ap.add_argument("--compact-backend", default="device",
+                    choices=("device", "host"),
+                    help="physical compaction: jitted on-device gather "
+                         "(default) or host store rebuild (parity oracle)")
     args = ap.parse_args()
 
     from repro.core import SMOSolver, SVMConfig
@@ -38,7 +46,9 @@ def main():
                     checkpoint_dir=args.ckpt_dir, resume=args.resume,
                     use_pallas=args.use_pallas, format=args.format,
                     selection=args.selection, row_cache=args.row_cache,
-                    row_cache_slots=args.row_cache_slots)
+                    row_cache_slots=args.row_cache_slots,
+                    row_cache_policy=args.row_cache_policy,
+                    compact_backend=args.compact_backend)
     if args.parallel:
         from repro.core.parallel import ParallelSMOSolver
         solver = ParallelSMOSolver(cfg)

@@ -1,0 +1,281 @@
+"""Epoch-driver pipeline tests: device-side compaction + cache remap must
+reproduce the host-path trajectory bit-identically (dense + ELL,
+single-host + parallel), save->resume must survive a device-side
+compaction, the consolidated pow2 utilities, and the segmented-LRU cache
+policy (exactness + scan resistance)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import SMOSolver, SVMConfig, dataplane, rowcache, train, util
+from repro.data import make_sparse
+from test_distributed import run_sub
+
+# wide-margin sparse problem: shrinks aggressively under the Multi policy,
+# so every fit goes through >= 1 physical compaction AND >= 1
+# reconstruction un-shrink — both halves of the remap contract
+SHRINKY = dict(C=2.0, sigma2=40.0, heuristic="multi5pc", chunk_iters=64,
+               min_buffer=64, eps=1e-3)
+
+
+def _shrinky_data(n=900, d=300):
+    return make_sparse(n, d, 0.05, seed=3, noise=0.05, label_noise=0.0,
+                       margin=0.5)
+
+
+# ------------------------------------------------------------------ helpers
+def test_pow2_helpers():
+    assert util.next_pow2(0) == 1
+    assert util.next_pow2(1) == 1
+    assert util.next_pow2(2) == 2
+    assert util.next_pow2(5) == 8
+    assert util.next_pow2(1024) == 1024
+    assert util.bucket_pow2(0, 64) == 64
+    assert util.bucket_pow2(-3, 64) == 64
+    assert util.bucket_pow2(3, 8) == 8
+    assert util.bucket_pow2(100, 8) == 128
+    assert util.bucket_pow2(100, 8, hi=64) == 64
+    assert util.bucket_pow2(1 << 40, 8) == 1 << 30
+
+
+def test_compact_plan_reference():
+    """Device gather plan == the host rebuild's balanced contiguous layout
+    on a hand-checked case."""
+    keep = np.array([True, False, True, True, False, True, True, False])
+    src, valid = dataplane.compact_plan(jnp.asarray(keep), jnp.int32(5),
+                                        p=2, m_per=4)
+    # survivors [0, 2, 3, 5, 6] dealt 3/2 over two shards of 4 slots
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  [1, 1, 1, 0, 1, 1, 0, 0])
+    assert np.asarray(src)[np.asarray(valid)].tolist() == [0, 2, 3, 5, 6]
+
+
+def test_compact_plan_property():
+    """Property test: for random keep masks and shard counts, the device
+    plan reproduces the host layout exactly (incl. empty shards)."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=60)
+    @given(st.integers(1, 4), st.lists(st.booleans(), min_size=1,
+                                       max_size=48))
+    def check(p, keepl):
+        keep = np.asarray(keepl, bool)
+        n_active = int(keep.sum())
+        m_per = max(1, -(-n_active // p))
+        src, valid = dataplane.compact_plan(
+            jnp.asarray(keep), jnp.int32(n_active), p=p, m_per=m_per)
+        src, valid = np.asarray(src), np.asarray(valid)
+        pos = np.flatnonzero(keep)
+        base, extra = divmod(n_active, p)
+        expect = np.full(p * m_per, -1, np.int64)
+        off = 0
+        for q in range(p):
+            cnt = base + (1 if q < extra else 0)
+            expect[q * m_per: q * m_per + cnt] = pos[off: off + cnt]
+            off += cnt
+        np.testing.assert_array_equal(valid, expect >= 0)
+        np.testing.assert_array_equal(src[valid], expect[expect >= 0])
+
+    check()
+
+
+def test_remap_cache_device_matches_host():
+    """Column re-gather of the (S, M) value table: device == host on a
+    compaction (subset) plan; tags/stamps/counters ride through."""
+    c = rowcache.init_cache(3, 6)
+    vals = np.arange(18, dtype=np.float32).reshape(3, 6)
+    c = c._replace(tags=jnp.asarray([4, 9, -1], jnp.int32),
+                   vals=jnp.asarray(vals), hits=jnp.int32(5),
+                   misses=jnp.int32(7))
+    old_idx = np.array([2, 4, 7, 9, -1, -1])
+    new_idx = np.array([4, 9, -1, -1])
+    keep = jnp.asarray(np.isin(old_idx, [4, 9]))
+    src, valid = dataplane.compact_plan(keep, jnp.int32(2), p=1, m_per=4)
+    host = rowcache.remap_cache(c, old_idx, new_idx)
+    dev = rowcache.remap_cache_device(c, src, valid)
+    np.testing.assert_array_equal(np.asarray(dev.vals),
+                                  np.asarray(host.vals))
+    np.testing.assert_array_equal(dev.tags, host.tags)
+    assert (int(dev.hits), int(dev.misses)) == (5, 7)
+    assert rowcache.remap_cache_device(None, src, valid) is None
+
+
+# -------------------------------------------- device == host (the core test)
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+@pytest.mark.parametrize("cache", [False, True])
+def test_device_compaction_bitwise_parity(fmt, cache):
+    """Device-side compaction (+ cache remap) must reproduce the host
+    rebuild path bit-for-bit: same iteration count, bitwise-equal alpha,
+    identical buffer-geometry trajectory — across >= 1 compaction and
+    >= 1 reconstruction."""
+    X, y = _shrinky_data()
+    kw = dict(format=fmt, row_cache=cache, **SHRINKY)
+    md = train(X, y, **kw)                              # device (default)
+    mh = train(X, y, compact_backend="host", **kw)      # parity oracle
+    assert md.stats.compactions >= 1
+    assert md.stats.reconstructions >= 1
+    assert md.stats.converged
+    assert md.stats.iterations == mh.stats.iterations
+    np.testing.assert_array_equal(md.alpha, mh.alpha)
+    assert md.stats.buffer_sizes == mh.stats.buffer_sizes
+    assert md.stats.buffer_K == mh.stats.buffer_K
+    assert md.stats.shard_K == mh.stats.shard_K
+    assert md.stats.compactions == mh.stats.compactions
+    if cache:
+        # identical trajectories -> identical hit/miss history through the
+        # device remap
+        assert (md.stats.cache_hits, md.stats.cache_misses) \
+            == (mh.stats.cache_hits, mh.stats.cache_misses)
+
+
+def test_csr_explicit_zeros_extent_parity():
+    """CSR inputs with explicitly stored zeros (thresholding without
+    eliminate_zeros()): the host store's adaptive-K extent must measure
+    trailing *nonzeros* like the device scan does, or the two backends pick
+    different lane buckets. Trains from raw CSR arrays carrying stored
+    zeros and asserts the full geometry trajectory matches."""
+    from repro.data import sparse as spfmt
+    X, y = _shrinky_data()
+    csr = spfmt.to_csr(X)
+    # re-insert explicit zeros: zero out ~30% of stored values, keep them
+    rng = np.random.default_rng(0)
+    data = csr.data.copy()
+    data[rng.random(data.size) < 0.3] = 0.0
+    zcsr = spfmt.CSRMatrix(data, csr.indices, csr.indptr, csr.shape)
+    # host extent == device extent on the filled buffer, rowwise
+    from repro.core import dataplane as dp
+    store = dp.CSRStore(zcsr)
+    rows = np.arange(zcsr.shape[0])
+    buf = store.alloc(rows.size, store.K)
+    store.fill(buf, slice(0, rows.size), rows)
+    dev_ext = np.asarray(dataplane.ell_extents(jnp.asarray(buf[0])))
+    np.testing.assert_array_equal(store.row_extent, dev_ext)
+    kw = dict(format="ell", **SHRINKY)
+    md = train(zcsr, y, **kw)
+    mh = train(zcsr, y, compact_backend="host", **kw)
+    assert md.stats.compactions >= 1
+    assert md.stats.iterations == mh.stats.iterations
+    np.testing.assert_array_equal(md.alpha, mh.alpha)
+    assert md.stats.buffer_K == mh.stats.buffer_K
+    assert md.stats.shard_K == mh.stats.shard_K
+
+
+def test_parallel_device_compaction_parity_4dev():
+    out = run_sub("""
+        import numpy as np, json
+        from repro.core import SVMConfig
+        from repro.core.parallel import ParallelSMOSolver
+        from repro.data import make_sparse
+        X, y = make_sparse(900, 300, 0.05, seed=3, noise=0.05,
+                           label_noise=0.0, margin=0.5)
+        kw = dict(C=2.0, sigma2=40.0, heuristic='multi5pc', chunk_iters=64,
+                  min_buffer=64, row_cache=True)
+        res = {}
+        for fmt in ('dense', 'ell'):
+            md = ParallelSMOSolver(SVMConfig(format=fmt, **kw)).fit(X, y)
+            mh = ParallelSMOSolver(SVMConfig(format=fmt,
+                                             compact_backend='host',
+                                             **kw)).fit(X, y)
+            res[fmt] = dict(
+                iters=[md.stats.iterations, mh.stats.iterations],
+                compactions=[md.stats.compactions, mh.stats.compactions],
+                recon=md.stats.reconstructions,
+                alpha_eq=bool(np.array_equal(md.alpha, mh.alpha)),
+                bufs_eq=md.stats.buffer_sizes == mh.stats.buffer_sizes,
+                shard_K_eq=md.stats.shard_K == mh.stats.shard_K,
+                conv=bool(md.stats.converged))
+        print(json.dumps(res))
+    """, devices=4)
+    import json
+    res = json.loads(out.strip().splitlines()[-1])
+    for fmt in ("dense", "ell"):
+        r = res[fmt]
+        assert r["conv"], r
+        assert r["compactions"][0] >= 1, r       # device path exercised
+        assert r["compactions"][0] == r["compactions"][1], r
+        assert r["recon"] >= 1, r                # un-shrink exercised
+        assert r["iters"][0] == r["iters"][1], r
+        assert r["alpha_eq"], r                  # bitwise
+        assert r["bufs_eq"] and r["shard_K_eq"], r
+
+
+# ------------------------------------------------------------ save -> resume
+def test_resume_across_device_compaction(tmp_path):
+    """Interrupt after >= 1 *device-side* compaction; the resumed run must
+    rejoin the uninterrupted trajectory (the checkpoint's alpha/gamma come
+    from the device masters, which hold drop-time values for rows shrunk
+    away before the save)."""
+    X, y = _shrinky_data()
+    full = train(X, y, **SHRINKY)
+    assert full.stats.converged and full.stats.compactions >= 1
+    cut = int(full.stats.iterations * 0.6)
+    d = str(tmp_path)
+    m1 = SMOSolver(SVMConfig(checkpoint_dir=d, max_iters=cut,
+                             **SHRINKY)).fit(X, y)
+    assert m1.stats.compactions >= 1, \
+        "cut landed before the first compaction"
+    assert m1.stats.iterations <= cut < full.stats.iterations
+    m2 = SMOSolver(SVMConfig(checkpoint_dir=d, resume=True,
+                             **SHRINKY)).fit(X, y)
+    assert m2.stats.converged
+    assert m2.stats.iterations == full.stats.iterations
+    np.testing.assert_allclose(m2.alpha, full.alpha, atol=1e-6)
+
+
+# ---------------------------------------------------------------- SLRU cache
+def test_slru_exactness_and_config_validation():
+    X, y = _shrinky_data(n=500, d=200)
+    kw = dict(format="ell", **SHRINKY)
+    m0 = train(X, y, **kw)
+    m1 = train(X, y, row_cache=True, row_cache_policy="slru", **kw)
+    assert m1.stats.iterations == m0.stats.iterations
+    np.testing.assert_array_equal(m1.alpha, m0.alpha)
+    assert m1.stats.cache_hits + m1.stats.cache_misses \
+        == 2 * m1.stats.iterations
+    with pytest.raises(ValueError, match="row_cache_policy"):
+        train(X, y, row_cache=True, row_cache_policy="mru", **kw)
+    with pytest.raises(ValueError, match="compact_backend"):
+        train(X, y, compact_backend="gpu", **kw)
+
+
+def test_slru_scan_resistance():
+    """The pathology SLRU exists for: a one-shot scan wider than the slot
+    count evicts an LRU cache's entire hot set, but SLRU's protected
+    segment (populated by re-referenced rows) survives it."""
+    S, m = 8, 4
+    hot = (1, 2, 3)
+
+    def run(policy):
+        c = rowcache.init_cache(S, m)
+        def acc(c, g):
+            return rowcache.get_row(c, jnp.int32(g),
+                                    lambda: jnp.full((m,), float(g)), policy)
+        for g in hot + hot:        # second pass promotes (slru) / refreshes
+            _, c = acc(c, g)
+        before = int(c.hits)
+        for g in range(100, 116):  # scan: 2x the slot count, all cold
+            _, c = acc(c, g)
+        for g in hot:              # does the hot set still hit?
+            row, c = acc(c, g)
+            np.testing.assert_array_equal(row, np.full((m,), float(g)))
+        return int(c.hits) - before
+
+    assert run("lru") == 0         # scan flushed everything
+    assert run("slru") == len(hot)  # protected segment survived the scan
+
+
+def test_slru_protected_capacity_bounded():
+    """Promotions past the protected capacity demote the protected LRU —
+    the protected segment can never swallow the whole table."""
+    S, m = 4, 2                    # cap = 2
+    c = rowcache.init_cache(S, m)
+    def acc(c, g):
+        return rowcache.get_row(c, jnp.int32(g),
+                                lambda: jnp.full((m,), float(g)), "slru")
+    for g in (1, 2, 3, 1, 2, 3):   # three promotions through cap 2
+        _, c = acc(c, g)
+    assert int(np.sum(np.asarray(c.seg) == 1)) <= S // 2
+    # a fresh insert still finds a probationary victim
+    _, c = acc(c, 99)
+    assert 99 in np.asarray(c.tags).tolist()
