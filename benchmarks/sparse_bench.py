@@ -40,6 +40,21 @@ buffer sizes, with the row cache on so the (slots, M) value-table remap is
 part of what is measured. Reports per-compaction latency and the
 device/host speedup, and asserts the backends' bitwise trajectory parity
 (identical iteration counts) en passant.
+
+Reconstruction sweep (``--recon-out`` -> ``BENCH_reconstruct.json``):
+trains a reconstruction-heavy workload under both Alg. 6 backends —
+``mirror='host'`` (every SV / stale-row block built in host numpy and
+shipped per block) and ``mirror='device'`` (one jitted scan over the
+device-resident full-set mirror) — across dense/ELL and problem sizes.
+``recon_block`` is set well below the problem size so the block GRID is
+real (several SV x query cells): that is the regime host streaming pays
+per-block python dispatch, numpy densify, and host->device transfers in,
+i.e. the large-n regime scaled down to CI budgets (at CI sizes a single
+8192-row block would make the sweep measure one GEMM, identical in both
+backends). Reports per-reconstruction latency and the device/host
+speedup, and asserts bitwise backend parity (identical iteration counts)
+en passant. On CPU the "host link" is memcpy, so the win here is pure
+orchestration — expect substantially bigger ratios across PCIe/ICI.
 """
 from __future__ import annotations
 
@@ -215,6 +230,62 @@ def bench_compact(sizes=(2048, 8192), d: int = 384, density: float = 0.05,
     return records
 
 
+def bench_recon(sizes=(1536, 3072), d: int = 384, density: float = 0.05,
+                eps: float = 1e-3, recon_block: int = 512,
+                seed: int = 3, fits: int = 3) -> list[dict]:
+    """Host-streaming vs device-mirror Alg. 6 latency (see module doc).
+
+    Each configuration is fit ``fits`` times and the minimum recon_time of
+    the warm fits (all reconstruction executables cached) is reported —
+    reconstruction runs only 2-3 times per fit, so a single fit's timing
+    is noise-bound.
+    """
+    records = []
+    for n in sizes:
+        X, y = make_sparse(n, d, density, seed=seed, noise=0.05,
+                           label_noise=0.0, margin=0.5)
+        for fmt in ("dense", "ell"):
+            by = {}
+            for mode in ("host", "device"):
+                cfg = SVMConfig(C=2.0, sigma2=float(d) / 8.0, eps=eps,
+                                heuristic="multi5pc", chunk_iters=64,
+                                min_buffer=64, format=fmt, mirror=mode,
+                                recon_block=recon_block)
+                m, best = None, float("inf")
+                for k in range(fits):
+                    m = SMOSolver(cfg).fit(X, y)
+                    if k > 0:                 # warm fits only
+                        best = min(best, m.stats.recon_time)
+                rec = {
+                    "n": n, "d": d, "fmt": fmt, "mirror": mode,
+                    "recon_block": recon_block,
+                    "reconstructions": m.stats.reconstructions,
+                    "iterations": m.stats.iterations,
+                    "us_per_recon": (best * 1e6
+                                     / max(m.stats.reconstructions, 1)),
+                }
+                by[mode] = rec
+                records.append(rec)
+            # the backends are bit-identical by contract
+            assert by["host"]["iterations"] == by["device"]["iterations"], \
+                (n, fmt, by)
+            assert by["device"]["reconstructions"] >= 1, (n, fmt, by)
+            by["device"]["speedup"] = (by["host"]["us_per_recon"]
+                                       / by["device"]["us_per_recon"])
+    return records
+
+
+def recon_csv_lines(records: list[dict]) -> list[str]:
+    lines = []
+    for r in records:
+        extra = (f";speedup={r['speedup']:.2f}" if "speedup" in r else "")
+        lines.append(
+            f"recon/{r['fmt']}/n{r['n']}/{r['mirror']},"
+            f"{r['us_per_recon']:.1f},"
+            f"recons={r['reconstructions']};iters={r['iterations']}{extra}")
+    return lines
+
+
 def compact_csv_lines(records: list[dict]) -> list[str]:
     lines = []
     for r in records:
@@ -264,10 +335,15 @@ def main(argv=None) -> None:
                     help="run the host-vs-device compaction latency sweep "
                          "and write it as a JSON artifact "
                          "(BENCH_compact.json in CI)")
+    ap.add_argument("--recon-out", default=None,
+                    help="run the host-streaming vs device-mirror Alg. 6 "
+                         "latency sweep and write it as a JSON artifact "
+                         "(BENCH_reconstruct.json in CI)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller problems (CI-budget run)")
     args = ap.parse_args(argv)
-    if args.out or not (args.cache_out or args.compact_out):
+    if args.out or not (args.cache_out or args.compact_out
+                        or args.recon_out):
         kw = dict(n=512, d=1024) if args.quick else {}
         records = bench_sparse(quick=args.quick, **kw)
         for line in csv_lines(records):
@@ -296,6 +372,15 @@ def main(argv=None) -> None:
             json.dump({"bench": "compaction", "records": compact_records}, f,
                       indent=1)
         print(f"wrote {args.compact_out}", flush=True)
+    if args.recon_out:
+        kw = dict(sizes=(1024, 1536), d=256) if args.quick else {}
+        recon_records = bench_recon(**kw)
+        for line in recon_csv_lines(recon_records):
+            print(line, flush=True)
+        with open(args.recon_out, "w") as f:
+            json.dump({"bench": "reconstruction", "records": recon_records},
+                      f, indent=1)
+        print(f"wrote {args.recon_out}", flush=True)
 
 
 if __name__ == "__main__":

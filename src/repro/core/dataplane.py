@@ -136,6 +136,7 @@ class DenseStore:
 
     def __init__(self, X: np.ndarray):
         self.X = np.ascontiguousarray(X, np.float32)
+        self._sq: "np.ndarray | None" = None
 
     @property
     def n(self) -> int:
@@ -149,17 +150,38 @@ class DenseStore:
         """Dense buffers have no lane budget; kept for protocol uniformity."""
         return 0
 
+    def sq_rows(self, rows: np.ndarray) -> np.ndarray:
+        """||x_i||^2 for ``rows``, gathered from ONE store-level array.
+
+        Every consumer of squared norms — buffer builds, un-shrink regrows,
+        the device mirror, reconstruction SV blocks — gathers from this
+        single precomputed (n,) array instead of re-summing per buffer.
+        That makes a device-side gather of mirror ``sq_norms`` bitwise
+        equal to a host rebuild by construction: the bits were fixed once
+        at ingest, so no path depends on how a particular buffer shape
+        groups the floating-point sum.
+        """
+        if self._sq is None:
+            sq = np.empty((self.n,), np.float32)
+            for s in range(0, self.n, 8192):
+                b = self.X[s: s + 8192]
+                sq[s: s + b.shape[0]] = (b * b).sum(axis=1)
+            self._sq = sq
+        return self._sq[rows]
+
     def alloc(self, m: int, K: "int | None" = None):
         return np.zeros((m, self.n_features), np.float32)
 
     def fill(self, buf, sl, rows: np.ndarray) -> None:
         buf[sl] = self.X[rows]
 
-    def to_device(self, buf, put, gids: "np.ndarray | None" = None
-                  ) -> DenseData:
-        sq = (buf * buf).sum(axis=1).astype(np.float32)
+    def to_device(self, buf, put, gids: "np.ndarray | None" = None,
+                  sq: "np.ndarray | None" = None) -> DenseData:
+        if sq is None:
+            sq = (buf * buf).sum(axis=1).astype(np.float32)
         g = None if gids is None else put(np.ascontiguousarray(gids, np.int32))
-        return DenseData(put(buf), put(sq), g)
+        return DenseData(put(buf), put(np.ascontiguousarray(sq, np.float32)),
+                         g)
 
     def dense_rows(self, rows: np.ndarray) -> np.ndarray:
         return self.X[rows]
@@ -185,16 +207,33 @@ class _EllFamilyStore:
         k = int(self.row_extent[rows].max()) if rows.size else 0
         return sp.round_lanes(k, self.lane)
 
+    def sq_rows(self, rows: np.ndarray) -> np.ndarray:
+        """||x_i||^2 gathered from one store-level (n,) array (see
+        ``DenseStore.sq_rows`` — the bit-stability argument is the same).
+        Computed once by streaming store-K ELL blocks, so ``ELLStore`` and
+        ``CSRStore`` produce identical bits for the same logical matrix."""
+        if getattr(self, "_sq", None) is None:
+            sq = np.empty((self.n,), np.float32)
+            for s in range(0, self.n, 8192):
+                rs = np.arange(s, min(s + 8192, self.n))
+                vb, _ = self.ell_rows(rs, self.K)
+                sq[s: s + rs.size] = (vb * vb).sum(axis=1)
+            self._sq = sq
+        return self._sq[rows]
+
     def alloc(self, m: int, K: "int | None" = None):
         K = self.K if K is None else int(K)
         return (np.zeros((m, K), np.float32), np.zeros((m, K), np.int32))
 
-    def to_device(self, buf, put, gids: "np.ndarray | None" = None
-                  ) -> ELLData:
+    def to_device(self, buf, put, gids: "np.ndarray | None" = None,
+                  sq: "np.ndarray | None" = None) -> ELLData:
         vb, cb = buf
-        sq = (vb * vb).sum(axis=1).astype(np.float32)
+        if sq is None:
+            sq = (vb * vb).sum(axis=1).astype(np.float32)
         g = None if gids is None else put(np.ascontiguousarray(gids, np.int32))
-        return ELLData(put(vb), put(cb), put(sq), self.n_features, g)
+        return ELLData(put(vb), put(cb),
+                       put(np.ascontiguousarray(sq, np.float32)),
+                       self.n_features, g)
 
     def ell_rows(self, rows: np.ndarray, K: "int | None" = None):
         """(vals, cols) for ``rows`` at lane budget K (default: their own
@@ -368,6 +407,37 @@ def ell_shard_extents(vals: jax.Array, keep: jax.Array, n_active: jax.Array,
     src, valid = compact_plan(keep, n_active, p, m_per)
     ext = jnp.where(valid, ell_extents(vals)[src], 0)
     return ext.reshape(p, m_per).max(axis=1)
+
+
+def deal(idx: np.ndarray, p: int, m_per: int):
+    """Host-side balanced contiguous dealing of rows ``idx`` over ``p``
+    shards of ``m_per`` slots: yields ``(buffer_slice, rows)`` per shard
+    (``base + (q < extra)`` rows each). This is the layout contract every
+    buffer build shares — ``compact_plan`` is its jit-compatible device
+    twin, and the two must stay interchangeable bit-for-bit."""
+    base, extra = divmod(int(idx.size), p)
+    off = 0
+    for q in range(p):
+        cnt = base + (1 if q < extra else 0)
+        yield slice(q * m_per, q * m_per + cnt), idx[off: off + cnt]
+        off += cnt
+
+
+def full_layout(rows: np.ndarray, p: int, m_per: int):
+    """Materialize the :func:`deal` layout: ``(idx, pos_of)`` with ``idx``
+    (p*m_per,) mapping buffer position -> global id (-1 on per-shard
+    padding tails) and ``pos_of`` (max_id+1,) the inverse. The ONE
+    construction of the position map the mirror / host-ring / grow paths
+    all share — the device==host bit-parity contract rides on them never
+    disagreeing about where a row sits."""
+    idx = np.full((p * m_per,), -1, np.int64)
+    for sl, sub in deal(rows, p, m_per):
+        idx[sl] = sub
+    n = int(rows.max()) + 1 if rows.size else 0
+    pos_of = np.full((n,), -1, np.int64)
+    real = idx >= 0
+    pos_of[idx[real]] = np.flatnonzero(real)
+    return idx, pos_of
 
 
 def compact_plan(keep: jax.Array, n_active: jax.Array, p: int, m_per: int):

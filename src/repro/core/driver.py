@@ -24,8 +24,8 @@ Phases (faithful to Alg. 5):
 The "Original" baseline (Alg. 3, no shrinking) is the same driver with the
 shrink interval = 0 and no reconstruction, run straight to 2*eps.
 
-Device-resident compaction
---------------------------
+Device-resident epoch cycle
+---------------------------
 Physical compaction is a *device-side* operation by default
 (``SVMConfig(compact_backend='device')``): one jitted step gathers the
 surviving rows (and their gids, squared norms, and — truncating the lane
@@ -40,8 +40,28 @@ bucket and ``FitStats.shard_K``); row data and cache values never cross
 the host link. The
 ``'host'`` backend keeps the store-rebuild path (numpy gather + re-upload)
 — bit-identical by construction, kept as the parity oracle for tests and
-the compaction benchmark. Buffer *growth* (un-shrink) still rebuilds from
-the host store: it re-adds rows the device buffer no longer holds.
+the compaction benchmark.
+
+The OTHER two host round-trips of the epoch cycle — Alg. 6 gradient
+reconstruction (the paper's named bottleneck, Sec. 3.4) and un-shrink
+buffer growth — go through the device-resident full-set mirror
+(``repro.core.mirror``; ``SVMConfig(mirror='auto'|'device'|'host')``,
+sized at fit time with 'auto' falling back to host streaming when it
+will not fit). With the mirror active, reconstruction is one jitted
+``lax.scan`` over mirror SV/query blocks accumulating into the donated
+(n,) gamma master (``_reconstruct_step``; only index vectors and the
+(n,) gamma needed by the host-side Eq. 9 check cross the link), and
+every buffer (re)build — initial, resume subset, un-shrink growth — is
+a device gather from the mirror + the alpha/gamma masters
+(``_grow_step``). The host-streaming reconstruction
+(``reconstruct.reconstruct_gamma_store`` / the parallel ring fed from
+host-built arrays) and host store rebuilds survive under
+``mirror='host'`` as the parity oracle, bit-identical by the same
+contract as ``compact_backend='host'``. Un-shrink growth also REWARMS
+the row cache (``rowcache.regrow_cache``) instead of invalidating it:
+every tagged slot is recomputed over the grown buffer with the exact
+in-loop compute islands, so tags, recency and counters survive the one
+buffer rebuild that used to reset them.
 """
 from __future__ import annotations
 
@@ -57,7 +77,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import dataplane, rowcache, smo, util
+from repro.core import dataplane, mirror, rowcache, smo
 from repro.data import sparse as spfmt
 
 
@@ -93,6 +113,9 @@ class FitStats:
     cache_hits: int = 0          # kernel rows served from the LRU row cache
     cache_misses: int = 0        # kernel rows (re)computed by the provider
     cache_hit_rate: float = 0.0  # hits / (hits + misses); 0 when cache off
+    mirror: str = ""             # resolved full-set mirror mode for this fit:
+                                 # 'device' (jitted Alg. 6 + device un-shrink)
+                                 # or 'host' (streaming paths / fallback)
 
 
 class CompactShardings(NamedTuple):
@@ -218,6 +241,9 @@ class EpochDriver:
         self.s = solver
         self.cfg = solver.cfg
         self.h = solver.h
+        self.mirror = None                      # device-resident full-set
+                                                # mirror (set by fit when the
+                                                # 'device' mode resolves)
         self.idx: Optional[np.ndarray] = None   # host mirror of data.gids;
                                                 # None = stale (device compact
                                                 # since last materialization)
@@ -249,41 +275,79 @@ class EpochDriver:
         cfg, sv = self.cfg, self.s
         store = sv._store
         p = sv._nshards()
-        m_per = util.bucket_pow2(-(-idx.size // p),
-                                 max(cfg.min_buffer // p, 8))
+        m_per, K_buf = self._buffer_geometry(idx, p)
         m = m_per * p
-        ell = store.fmt == "ell"
-        K_buf = None
-        if ell:
-            K_buf = (spfmt.bucket_lanes(store.buffer_K(idx), cfg.ell_lane,
-                                        cap=store.K)
-                     if cfg.ell_adaptive else store.K)
         buf = store.alloc(m, K_buf)
         yb = np.ones((m,), np.float32)          # padding: y=+1, alpha=0 -> I1
         ab = np.zeros((m,), np.float32)
         gb = np.full((m,), np.inf, np.float32)  # padding gamma never selected
+        sqb = np.zeros((m,), np.float32)
         valid = np.zeros((m,), bool)
         idx_buf = np.full((m,), -1, np.int64)
-        shard_K = []
-        base, extra = divmod(idx.size, p)
-        off = 0
-        for q in range(p):
-            cnt = base + (1 if q < extra else 0)
-            sl = slice(q * m_per, q * m_per + cnt)
-            sub = idx[off: off + cnt]
+        for sl, sub in dataplane.deal(idx, p, m_per):
             store.fill(buf, sl, sub)
             yb[sl] = y[sub]
             ab[sl] = alpha[sub]
             gb[sl] = gamma[sub]
+            # squared norms GATHER from the one store-level array (never
+            # re-summed per buffer) so host fills, device compactions, the
+            # mirror, and reconstruction SV blocks all share the same bits
+            sqb[sl] = store.sq_rows(sub)
             valid[sl] = True
             idx_buf[sl] = sub
-            if ell:
-                shard_K.append(store.buffer_K(sub))
-            off += cnt
-        self._last_shard_K = tuple(shard_K)
-        data = store.to_device(buf, sv._put, gids=idx_buf)
+        data = store.to_device(buf, sv._put, gids=idx_buf, sq=sqb)
         state = smo.init_state(sv._put(ab), sv._put(gb), sv._put(valid))
         return data, sv._put(yb), state, idx_buf
+
+    def _buffer_geometry(self, idx: np.ndarray, p: int):
+        """Shared buffer-shape rule: per-shard slots (pow2 bucketed) and,
+        for ELL stores, the adaptive lane budget of exactly ``idx`` —
+        records per-shard K (``FitStats.shard_K``) as a side effect. The
+        mirror build path computes the same geometry host-side, so both
+        build backends agree on shapes without touching row data."""
+        cfg, store = self.cfg, self.s._store
+        m_per = mirror.full_m_per(idx.size, p, cfg.min_buffer)
+        K_buf = None
+        if store.fmt == "ell":
+            K_buf = (spfmt.bucket_lanes(store.buffer_K(idx), cfg.ell_lane,
+                                        cap=store.K)
+                     if cfg.ell_adaptive else store.K)
+            self._last_shard_K = tuple(
+                store.buffer_K(sub)
+                for _, sub in dataplane.deal(idx, p, m_per))
+        else:
+            self._last_shard_K = ()
+        return m_per, K_buf
+
+    def _mirror_build(self, rows: np.ndarray):
+        """Device-side buffer build from the full-set mirror: the initial /
+        resume-subset build and the un-shrink growth step. Same geometry,
+        same balanced layout, same bits as :meth:`_make_buffer` — but rows,
+        gids and sq_norms are gathered on device from the mirror and
+        alpha/gamma from the (n,) masters, so no row data crosses the host
+        link. Only the (m_mirror,) keep mask and the scalar count go up."""
+        sv, mir = self.s, self.mirror
+        p = mir.p
+        m_per, K_new = self._buffer_geometry(rows, p)
+        keep = np.zeros((mir.idx.size,), bool)
+        keep[mir.pos_of[rows]] = True
+        data, yb, state = mirror.grow_step(
+            mir.data, mir.y, self.alpha_d, self.gamma_d, sv._put(keep),
+            jnp.int32(rows.size), p=p, m_per=m_per, K_new=K_new,
+            shards=sv._compact_shardings())
+        idx_buf, _ = dataplane.full_layout(rows, p, m_per)
+        return data, yb, state, idx_buf
+
+    def _build_buffer(self, rows: np.ndarray):
+        """Dispatch a buffer build for global rows ``rows``: device gather
+        from the mirror when one is resident, host store fill otherwise.
+        In host mode the masters are refreshed afterwards so both modes
+        leave (buffer, masters) in the same (bitwise) state."""
+        if self.mirror is not None:
+            return self._mirror_build(rows)
+        out = self._make_buffer(self.y, self.alpha, self.gamma, rows)
+        self._refresh_masters()
+        return out
 
     def _host_idx(self) -> np.ndarray:
         """Buffer position -> global sample id, materialized from the
@@ -317,6 +381,32 @@ class EpochDriver:
     def _refresh_masters(self):
         self.alpha_d = self.s._put_full(self.alpha)
         self.gamma_d = self.s._put_full(self.gamma)
+
+    # -- gradient reconstruction (Alg. 6) ---------------------------------
+    def _reconstruct_step(self, stale: np.ndarray):
+        """Reconstruct gamma for the global rows ``stale``. Mirror mode:
+        one jitted device program accumulating into the donated (n,) gamma
+        master (only index vectors go up; the (n,) gamma comes back once
+        for the host-side Eq. 9 check). Host mode: the streaming oracle
+        writes host gamma in place; the master is refreshed by the next
+        buffer build. Both modes leave identical gamma bits."""
+        sv, y = self.s, self.y
+        if stale.size == 0:
+            return
+        sv_rows = np.flatnonzero(self.alpha > 0.0)
+        if self.mirror is not None and sv_rows.size:
+            self.gamma_d = sv._reconstruct_mirror(
+                self.mirror, self.alpha_d, self.gamma_d, sv_rows, stale)
+            self.gamma = np.array(self.gamma_d)
+            return
+        if sv_rows.size == 0:
+            # no support vectors: Alg. 6 degenerates to gamma = -y (same
+            # bits as the oracle's early-out)
+            self.gamma[stale] = (-y[stale]).astype(np.float32)
+        else:
+            self.gamma[stale] = sv._reconstruct(y, self.alpha, stale)
+        if self.mirror is not None:
+            self.gamma_d = sv._put_full(self.gamma)
 
     # -- physical compaction ----------------------------------------------
     def _compact(self, n_active: int, p: int, m_per: int):
@@ -458,13 +548,27 @@ class EpochDriver:
         run_interval = interval if shrink_on else 0
         runner = sv._runner(cfg, run_interval)
 
+        # Resolve + build the device-resident full-set mirror (after the
+        # restore: a shrink-free run never reconstructs or grows, so the
+        # mirror would be dead weight). Masters are refreshed FIRST — the
+        # mirror build path gathers alpha/gamma from them.
+        mode, mir_m_per, mir_K, _ = mirror.resolve(cfg, sv._store,
+                                                   sv._nshards(), shrink_on)
+        stats.mirror = mode
+        self.mirror = (mirror.build(sv._store, y, sv._put, sv._nshards(),
+                                    mir_m_per, mir_K)
+                       if mode == "device" else None)
+        if self.mirror is not None:
+            self._refresh_masters()     # the mirror build path gathers
+                                        # alpha/gamma from the masters;
+                                        # _build_buffer refreshes them
+                                        # itself on the host path
+
         if act_full0 is not None and shrink_on:
             rows = np.flatnonzero(act_full0)
         else:
             rows = np.arange(n)
-        self.data, self.yb, self.state, self.idx = self._make_buffer(
-            y, self.alpha, self.gamma, rows)
-        self._refresh_masters()
+        self.data, self.yb, self.state, self.idx = self._build_buffer(rows)
         self._note_buffer()
         self.state = self.state._replace(step=jnp.int32(step0),
                                          n_shrinks=jnp.int32(nshr0))
@@ -529,8 +633,7 @@ class EpochDriver:
                 # moves rows in the store's native format on device
                 if shrink_on and n_active < cfg.compact_ratio * self.data.m:
                     p = sv._nshards()
-                    m_per = util.bucket_pow2(-(-n_active // p),
-                                             max(cfg.min_buffer // p, 8))
+                    m_per = mirror.full_m_per(n_active, p, cfg.min_buffer)
                     if m_per * p < self.data.m:
                         self._compact(n_active, p, m_per)
             stalled = stalled or bool(self.state.stalled)
@@ -552,7 +655,7 @@ class EpochDriver:
             live = (idx >= 0) & np.asarray(self.state.active)
             act[idx[live]] = True
             stale = np.flatnonzero(~act)
-            self.gamma[stale] = sv._reconstruct(y, self.alpha, stale)
+            self._reconstruct_step(stale)
             t_recon += time.perf_counter() - tr
             recon_count += 1
 
@@ -561,17 +664,29 @@ class EpochDriver:
             if b_up + 2.0 * cfg.eps >= b_low:
                 self.state = self.state._replace(converged=jnp.bool_(True))
                 break
-            # un-shrink: rebuild full buffer; Single disables shrinking.
-            # The grown buffer re-adds rows no cached entry has values for,
-            # so remap_cache invalidates here (counters survive).
+            # un-shrink: rebuild the full buffer (device mirror gather or
+            # host store rebuild); Single disables shrinking. Under wss1
+            # the row cache SURVIVES the growth: every tagged slot is
+            # rewarmed against the grown buffer with the in-loop fused
+            # two-row compute island, so tags, recency and counters carry
+            # across (exact — a later hit serves the bits an in-loop miss
+            # would have computed; enforced by the cache exactness tests).
+            # wss2 caches single-row (GEMV) computes, which XLA CPU does
+            # not codegen context-stably even behind barrier/cond islands
+            # (measured ulp drift loop-vs-standalone), so wss2 keeps the
+            # wholesale invalidation — exactness outranks warm starts.
             step_save = int(self.state.step)
             nshr = int(self.state.n_shrinks)
             idx_old = idx
-            self.data, self.yb, self.state, self.idx = self._make_buffer(
-                y, self.alpha, self.gamma, np.arange(n))
-            self._refresh_masters()
-            self.cache = rowcache.remap_cache(self.cache, idx_old, self.idx,
-                                              sv._put_cache_vals)
+            self.data, self.yb, self.state, self.idx = self._build_buffer(
+                np.arange(n))
+            if self.cache is not None:
+                if self.cfg.selection == "wss2":
+                    self.cache = rowcache.remap_cache(
+                        self.cache, idx_old, self.idx, sv._put_cache_vals)
+                else:
+                    self.cache = sv._regrow_cache(self.cache, self.data,
+                                                  True, n)
             self._note_buffer()
             if h.policy == "single":
                 shrink_on = False

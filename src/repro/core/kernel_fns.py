@@ -343,6 +343,33 @@ class ELLPallasRowProvider(ELLRowProvider):
         return ops.gamma_from_rows(gamma, rows, coef2)
 
 
+def recon_block(provider: "RowProvider", sv_data, Zi: jax.Array,
+                coef: jax.Array, never: jax.Array) -> jax.Array:
+    """One Alg. 6 block: ``K(Zi, sv_data) @ coef`` — (nZ,) partial gammas.
+
+    This is the ONE compute island both reconstruction backends run: the
+    host-streaming path calls it per (SV block, query block) from a
+    standalone jit, the device-mirror path calls it inside a
+    ``lax.scan``/``fori_loop`` over mirror blocks. The structure is
+    load-bearing for the bitwise device == host contract, exactly like
+    ``rowcache.make_accessors``:
+
+      * input/output ``optimization_barrier``s stop the exp/GEMV epilogue
+        from being duplicated into context-dependent consumer fusions;
+      * the compute sits inside a degenerate runtime-false ``lax.cond``
+        (``never`` must be a *traced* False), because XLA CPU codegens a
+        loop body's top-level region differently from a standalone
+        executable (observed: ulp-level drift of the same block computed
+        in a ``fori_loop`` vs top-level) while branch regions are
+        outlined identically in both contexts.
+    """
+    sv_b, Zi_b, coef_b = jax.lax.optimization_barrier((sv_data, Zi, coef))
+    compute = lambda: jax.lax.optimization_barrier(
+        provider.matrix(sv_b, Zi_b) @ coef_b)
+    zero = jnp.zeros((Zi.shape[0],), jnp.float32)
+    return jax.lax.cond(never, lambda: zero, compute)
+
+
 def make_provider(kernel: str, fmt: str = "dense", use_pallas: bool = False,
                   inv_2s2: float = 1.0) -> RowProvider:
     """Row provider for a (kernel, storage format, backend) combination —

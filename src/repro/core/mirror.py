@@ -1,0 +1,303 @@
+"""Device-resident full-set mirror of the training data.
+
+The shrink -> compact -> reconstruct -> un-shrink epoch cycle of Alg. 5 had
+two host round-trips left after the device compaction pipeline landed:
+Alg. 6 reconstruction streamed every SV / stale-row block through host
+numpy, and every un-shrink rebuilt the full buffer from the host store.
+Both exist only because the full training set was not resident on device.
+This module keeps it resident: one fill of the store at fit time into the
+*exact* balanced p-shard buffer layout ``EpochDriver._make_buffer`` would
+produce for the full set (dense, or block-ELL at the full set's adaptive
+lane budget; under ``ParallelSMOSolver`` sharded over the mesh on the
+sample axis), after which
+
+  * **buffer (re)builds** — the initial buffer, resume-subset builds, and
+    un-shrink growth — become one jitted device gather
+    (:func:`grow_step`): the same ``dataplane.compact_plan`` /
+    ``gather_rows`` machinery as device compaction, sourced from the
+    mirror instead of the outgoing buffer, with alpha/gamma gathered from
+    the device (n,) masters. Zero host row traffic.
+  * **Alg. 6 reconstruction** (:func:`reconstruct_device`) becomes a
+    ``lax.scan`` over mirror SV blocks with an inner ``fori_loop`` over
+    stale-row query blocks, replaying the host-streaming path's exact
+    uniform block plan (``reconstruct.plan_blocks`` / ``sv_lane_budget``)
+    through the same ``kernel_fns.recon_block`` barrier/cond island, and
+    accumulating gamma straight into the donated device (n,) master.
+
+Bit-exactness contract
+----------------------
+``SVMConfig(mirror='host')`` keeps the host-streaming paths
+(``reconstruct.reconstruct_gamma_store`` + host store rebuilds) as the
+parity oracle, bit-identical to the mirror paths by construction — the
+same contract (and test style) as ``compact_backend='host'``. The three
+load-bearing pieces: mirror rows are verbatim copies of store rows (so
+device gathers produce the bits host fills produce), squared norms are
+gathered from the ONE store-level ``sq_rows`` array on every path (never
+re-summed per buffer shape), and the reconstruction block compute is the
+shared degenerate-cond island that codegens identically standalone and
+inside a scan (see ``kernel_fns.recon_block``).
+
+Sizing (``SVMConfig(mirror='auto'|'device'|'host')``)
+-----------------------------------------------------
+The mirror is sized at fit time (:func:`resolve`): ``'auto'`` falls back
+to the host-streaming paths when the full-set mirror will not fit the
+per-device budget (``SVMConfig.mirror_budget_bytes``, defaulting to a
+fraction of the backend-reported device memory; unknown backends — CPU —
+are assumed to fit, their "device" memory being host RAM). ``'device'``
+raises a clear error instead of OOMing mid-fit — the CSR-ingest case the
+lane budget makes easy to hit: a full-set ELL mirror costs
+``n * K_full * 8`` bytes even when the CSR form is tiny.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import dataplane, kernel_fns, smo, util
+
+
+# Fraction of the backend-reported per-device memory the mirror may claim:
+# it shares the device with the training buffer (~mirror-sized at the first
+# epoch), the cache value table, and XLA scratch.
+_BUDGET_FRACTION = 0.4
+
+
+@dataclasses.dataclass
+class Mirror:
+    """Device-resident full training set in driver buffer layout."""
+    data: object            # DenseData | ELLData — m = p * m_per rows
+    y: jax.Array            # (m,) f32 labels by mirror position (+1 on pad)
+    idx: np.ndarray         # (m,) i64 host map: position -> global id (-1 pad)
+    pos_of: np.ndarray      # (n,) i64 inverse map: global id -> position
+    p: int
+    m_per: int
+    K: Optional[int]        # full-set ELL lane budget (None for dense)
+    n: int
+    nbytes: int
+
+
+def full_m_per(count: int, p: int, min_buffer: int) -> int:
+    """Per-shard slot count for a ``count``-row buffer — the ONE rounding
+    rule (`driver._make_buffer`, compaction scheduling, and the mirror all
+    use it, so mirror geometry == host-rebuild geometry)."""
+    return util.bucket_pow2(-(-count // p), max(min_buffer // p, 8))
+
+
+def mirror_nbytes(store, p: int, m_per: int, K: Optional[int]) -> int:
+    """Device bytes of the full-set mirror (rows + sq_norms + gids + y)."""
+    m = p * m_per
+    if store.fmt == "ell":
+        return m * (int(K) * 8 + 12)
+    return m * (store.n_features * 4 + 12)
+
+
+def budget_bytes(cfg) -> Optional[int]:
+    """Per-device mirror budget: the explicit config cap, else a fraction
+    of the backend-reported device memory, else None (unknown -> fits)."""
+    if cfg.mirror_budget_bytes is not None:
+        return int(cfg.mirror_budget_bytes)
+    try:
+        stats = jax.local_devices()[0].memory_stats() or {}
+    except Exception:
+        stats = {}
+    limit = stats.get("bytes_limit")
+    return int(_BUDGET_FRACTION * limit) if limit else None
+
+
+def resolve(cfg, store, p: int, shrink_on: bool) -> tuple:
+    """Decide the mirror mode at fit time: ``(mode, m_per, K, nbytes)``.
+
+    ``mode`` is 'device' or 'host'. Shrink-free runs ('none' policy, or a
+    resume restored past the Single policy's un-shrink) never reconstruct
+    or grow, so the mirror would be dead weight — they resolve to 'host'.
+    ``mirror='device'`` over budget raises with the numbers spelled out
+    instead of OOMing mid-fit; ``'auto'`` falls back to 'host'.
+    """
+    if cfg.mirror not in ("auto", "device", "host"):
+        raise ValueError(f"unknown mirror {cfg.mirror!r} "
+                         "(want 'auto', 'device' or 'host')")
+    m_per = full_m_per(store.n, p, cfg.min_buffer)
+    if cfg.mirror == "host" or not shrink_on:
+        return "host", m_per, None, 0
+    K = None
+    if store.fmt == "ell":
+        all_rows = np.arange(store.n)
+        from repro.data import sparse as spfmt
+        K = (spfmt.bucket_lanes(store.buffer_K(all_rows), store.lane,
+                                cap=store.K)
+             if cfg.ell_adaptive else store.K)
+    need = mirror_nbytes(store, p, m_per, K) // p    # sharded over p devices
+    cap = budget_bytes(cfg)
+    if cap is not None and need > cap:
+        if cfg.mirror == "device":
+            raise ValueError(
+                f"mirror='device' needs {need} bytes/device "
+                f"(n={store.n}, fmt={store.fmt}"
+                + (f", ELL lane budget K={K}" if K is not None else "")
+                + f") but the device-memory cap is {cap} bytes; "
+                "use mirror='auto' (host-streaming fallback) or raise "
+                "mirror_budget_bytes")
+        return "host", m_per, K, need
+    return "device", m_per, K, need
+
+
+def build(store, y: np.ndarray, put, p: int, m_per: int,
+          K: Optional[int]) -> Mirror:
+    """One host fill of the full set into the driver's balanced buffer
+    layout — the only host->device row traffic a mirrored fit performs."""
+    n = store.n
+    m = p * m_per
+    buf = store.alloc(m, K)
+    yb = np.ones((m,), np.float32)
+    sqb = np.zeros((m,), np.float32)
+    idx, pos_of = dataplane.full_layout(np.arange(n), p, m_per)
+    for sl, sub in dataplane.deal(np.arange(n), p, m_per):
+        store.fill(buf, sl, sub)
+        yb[sl] = y[sub]
+        sqb[sl] = store.sq_rows(sub)
+    data = store.to_device(buf, put, gids=idx, sq=sqb)
+    return Mirror(data=data, y=put(yb), idx=idx, pos_of=pos_of, p=p,
+                  m_per=m_per, K=K, n=n,
+                  nbytes=mirror_nbytes(store, p, m_per, K))
+
+
+# --------------------------------------------------------------------------
+# Buffer builds from the mirror (initial, resume-subset, un-shrink growth).
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "m_per", "K_new", "shards"))
+def grow_step(data, y_m, alpha_d, gamma_d, keep_pos, n_sel,
+              *, p, m_per, K_new, shards):
+    """Gather a fresh training buffer for the rows marked in ``keep_pos``
+    (a (m_mirror,) bool mask by mirror position) out of the device mirror:
+    the un-shrink growth step, and — with a subset mask — the initial /
+    resume buffer build. Rows, gids and sq_norms come from the mirror
+    (``compact_plan`` + ``gather_rows``, exactly the device-compaction
+    machinery, so the balanced layout is the host rebuild's bit-for-bit);
+    alpha/gamma come from the (n,) device masters, which hold every row's
+    latest value (drop-time values for shrunk rows, reconstruction output
+    for stale rows). Nothing is donated — the mirror and masters persist.
+    Returns ``(data, y_buf, fresh state)``; the driver patches the step
+    counters like it does after a host rebuild.
+    """
+    src, valid = dataplane.compact_plan(keep_pos, n_sel, p, m_per)
+    data2 = dataplane.gather_rows(data, src, valid, K_new)
+    yb2 = jnp.where(valid, y_m[src], 1.0)       # padding: y=+1, alpha=0 -> I1
+    gid = jnp.where(valid, data2.gids, 0)
+    alpha2 = jnp.where(valid, alpha_d[gid], 0.0)
+    gamma2 = jnp.where(valid, gamma_d[gid], jnp.float32(jnp.inf))
+    state = smo.init_state(alpha2, gamma2, valid)
+    out = (data2, yb2, state)
+    if shards is not None:
+        wsc = lax.with_sharding_constraint
+        if isinstance(data2, dataplane.ELLData):
+            data2 = dataplane.ELLData(
+                wsc(data2.vals, shards.rows), wsc(data2.cols, shards.rows),
+                wsc(data2.sq_norms, shards.vec), data2.n_features,
+                wsc(data2.gids, shards.vec))
+        else:
+            data2 = dataplane.DenseData(
+                wsc(data2.X, shards.rows), wsc(data2.sq_norms, shards.vec),
+                wsc(data2.gids, shards.vec))
+        vec = lambda a: wsc(a, shards.vec)
+        rep = lambda a: wsc(a, shards.rep)
+        state = state._replace(
+            alpha=vec(state.alpha), gamma=vec(state.gamma),
+            active=vec(state.active), beta_up=rep(state.beta_up),
+            beta_low=rep(state.beta_low), i_up=rep(state.i_up),
+            i_low=rep(state.i_low), step=rep(state.step),
+            next_shrink=rep(state.next_shrink), n_shrinks=rep(state.n_shrinks),
+            converged=rep(state.converged), stalled=rep(state.stalled))
+        out = (data2, wsc(yb2, shards.vec), state)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Device-side Alg. 6 (single-host backend; the parallel solver feeds the
+# mirror through its ppermute ring instead — see parallel.py).
+
+
+def _sv_block(data, pos, valid, K_sv):
+    """SV block by mirror positions, native format, padding rows zeroed —
+    the device analogue of ``store.alloc`` + ``store.fill`` over the SV
+    subset (ELL rows truncate exactly: nonzeros pack a slot prefix and
+    every SV extent is <= K_sv by construction of the shared budget)."""
+    safe = jnp.where(valid, pos, 0)
+    sq = jnp.where(valid, data.sq_norms[safe], 0.0)
+    if isinstance(data, dataplane.DenseData):
+        return dataplane.DenseData(
+            jnp.where(valid[:, None], data.X[safe], 0.0), sq)
+    vals = jnp.where(valid[:, None], data.vals[safe, :K_sv], 0.0)
+    cols = jnp.where(valid[:, None], data.cols[safe, :K_sv], 0)
+    return dataplane.ELLData(vals, cols, sq, data.n_features)
+
+
+def _dense_block(data, pos, valid):
+    """Stale-row query block, densified from the mirror — the device
+    analogue of ``store.dense_rows``. The scatter-add is exact: each real
+    column appears once per row, duplicate padding columns add 0.0."""
+    safe = jnp.where(valid, pos, 0)
+    if isinstance(data, dataplane.DenseData):
+        return jnp.where(valid[:, None], data.X[safe], 0.0)
+    vals = jnp.where(valid[:, None], data.vals[safe], 0.0)
+    cols = jnp.where(valid[:, None], data.cols[safe], 0)
+    B = pos.shape[0]
+    return jnp.zeros((B, data.n_features), jnp.float32).at[
+        jnp.arange(B)[:, None], cols].add(vals)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("provider", "sv_blk", "row_blk", "nsb", "nrb", "K_sv",
+                     "n"),
+    donate_argnames=("gamma_d",))
+def reconstruct_device(provider, data, y_m, alpha_d, gamma_d, sv_pos,
+                       stale_pos, never, *, sv_blk, row_blk, nsb, nrb,
+                       K_sv, n):
+    """Alg. 6 as ONE jitted program over the mirror: ``lax.scan`` over SV
+    blocks (outer, so the block grid walks in the host oracle's order),
+    ``fori_loop`` over stale-row query blocks (inner), the shared
+    ``kernel_fns.recon_block`` island per cell, gamma scattered into the
+    donated (n,) master. ``sv_pos`` / ``stale_pos`` are mirror positions
+    padded with -1 to ``nsb * sv_blk`` / ``nrb * row_blk`` — the only
+    per-reconstruction host->device traffic (index vectors, never rows).
+    """
+    acc0 = jnp.zeros((nrb * row_blk,), jnp.float32)
+
+    def sv_step(acc, pos):
+        valid = pos >= 0
+        svd = _sv_block(data, pos, valid, K_sv)
+        safe = jnp.where(valid, pos, 0)
+        gid = jnp.where(valid, data.gids[safe], 0)
+        coef = jnp.where(valid, alpha_d[gid] * y_m[safe], 0.0)
+
+        def rb(i, acc):
+            bpos = lax.dynamic_slice(stale_pos, (i * row_blk,), (row_blk,))
+            Zi = _dense_block(data, bpos, bpos >= 0)
+            g = kernel_fns.recon_block(provider, svd, Zi, coef, never)
+            s = i * row_blk
+            return lax.dynamic_update_slice(
+                acc, lax.dynamic_slice(acc, (s,), (row_blk,)) + g, (s,))
+
+        return lax.fori_loop(0, nrb, rb, acc), None
+
+    acc, _ = lax.scan(sv_step, acc0, sv_pos.reshape(nsb, sv_blk))
+    valid = stale_pos >= 0
+    safe = jnp.where(valid, stale_pos, 0)
+    gnew = acc - y_m[safe]
+    tgt = jnp.where(valid, data.gids[safe], n)
+    return gamma_d.at[tgt].set(gnew, mode="drop")
+
+
+def pad_pos(pos: np.ndarray, total: int) -> np.ndarray:
+    """Pad a position vector with -1 up to ``total`` (i32, contiguous)."""
+    out = np.full((total,), -1, np.int32)
+    out[: pos.size] = pos
+    return out

@@ -27,9 +27,17 @@ psum(1) — two collectives, matching the paper's two (bcast + allreduce).
 Gradient reconstruction (Alg. 6) is a ring: (X_shard, coef_shard) blocks
 rotate via ``lax.ppermute`` while each shard accumulates K(X_stale, block) @
 coef partial sums — p steps, compute/comm overlappable, no kernel cache.
+The ring runs in both mirror modes on the same executable: ``mirror='host'``
+builds its inputs in host numpy (the parity oracle), the device mirror
+derives them on device (per-position alpha/coef from the (n,) masters, the
+SV-masked payload masked out of the mirror rows) and scatters stale outputs
+straight into the donated gamma master — bit-identical arrays either way,
+because both use the mirror's balanced buffer layout and the store-level
+``sq_rows`` provenance.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import numpy as np
@@ -38,8 +46,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import dataplane, driver, kernel_fns, rowcache, smo, solver
+from repro.core import dataplane, driver, kernel_fns
+from repro.core import mirror as mirror_mod
+from repro.core import reconstruct, rowcache, smo, solver
 from repro.core import util
+from repro.data import sparse as spfmt
 from repro.launch.mesh import shard_map_compat
 
 AXIS = "shards"
@@ -173,7 +184,11 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
 
             if selection == "wss2":
                 # second-order i_low: i_up row shard-locally, then one
-                # extra candidate exchange electing the best-scored shard
+                # extra candidate exchange electing the best-scored shard.
+                # The candidate's K(up, cand) — its entry of the selection
+                # row — rides the payload, so the update step reuses the
+                # exact value the scores priced the pair with instead of
+                # recomputing the O(d) dot (still one collective).
                 row_up_l, cache = get_row1(
                     cache, sel["gid_up"] if cached else None, x_up)
                 scores_l = smo.wss2_scores(
@@ -181,19 +196,20 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
                     row_up_l, kdiag_l, k_uu)
                 j2 = jnp.argmax(scores_l)
                 parts2 = [jnp.stack([scores_l[j2], gamma_l[j2],
-                                     alpha_l[j2], y_l[j2]])]
+                                     alpha_l[j2], y_l[j2], row_up_l[j2]])]
                 if cached:
                     parts2.append(lax.bitcast_convert_type(
                         gid_l[j2][None], jnp.float32))
                 parts2.append(ldata.dense_row(j2))
                 pays2 = lax.all_gather(jnp.concatenate(parts2), axis)
                 k_low = jnp.argmax(pays2[:, 0])
-                off2 = 4 + (1 if cached else 0)
+                off2 = 5 + (1 if cached else 0)
                 g_low = pays2[k_low, 1]
                 a_low = pays2[k_low, 2]
                 y_low = pays2[k_low, 3]
+                k_ul2 = pays2[k_low, 4]
                 x_low = pays2[k_low, off2:]
-                gid_low = (lax.bitcast_convert_type(pays2[k_low, 4],
+                gid_low = (lax.bitcast_convert_type(pays2[k_low, 5],
                                                     jnp.int32)
                            if cached else None)
                 j_low = j2
@@ -204,12 +220,15 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
                 gid_low = sel.get("gid_low")
 
             x2 = jnp.stack([x_up, x_low])
-            # replicated O(d); barrier-isolated for the exactness contract
-            # (see smo.make_chunk_runner)
-            xu_b, xl_b = lax.optimization_barrier((x_up, x_low))
-            k_ul = lax.optimization_barrier(
-                row1(xl_b[None, :], jnp.sum(xl_b * xl_b)[None],
-                     xu_b, inv_2s2)[0])
+            if selection == "wss2":
+                k_ul = k_ul2          # selection-row reuse (see above)
+            else:
+                # replicated O(d); barrier-isolated for the exactness
+                # contract (see smo.make_chunk_runner)
+                xu_b, xl_b = lax.optimization_barrier((x_up, x_low))
+                k_ul = lax.optimization_barrier(
+                    row1(xl_b[None, :], jnp.sum(xl_b * xl_b)[None],
+                         xu_b, inv_2s2)[0])
             a_up_new, a_low_new = smo.pair_update(
                 sel["a_up"], a_low, sel["y_up"], y_low,
                 sel["beta_up"], g_low, k_ul,
@@ -408,6 +427,38 @@ def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
     return jax.jit(mapped)
 
 
+def make_cache_warmer(mesh: Mesh, kernel: str, inv_2s2: float,
+                      axis: str = AXIS, use_pallas: bool = False,
+                      fmt: str = "dense", n_features: int = 0,
+                      pairs: bool = True):
+    """shard_map row-cache rewarm across un-shrink growth: replicated
+    (S, d) tag queries in, each shard recomputes its own (S, M_local)
+    value-table segment over its local buffer view with the exact in-loop
+    compute islands (``rowcache.warm_vals``) — so post-growth hits serve
+    the bits an in-loop miss on that shard would have produced."""
+    provider = kernel_fns.make_provider(kernel, fmt, use_pallas, inv_2s2)
+    n_data = 3 if fmt == "ell" else 2
+
+    def local(*args):
+        if fmt == "ell":
+            vals_l, cols_l, sq_l = args[:3]
+            ldata = dataplane.ELLData(vals_l, cols_l, sq_l, n_features)
+        else:
+            X_l, sq_l = args[:2]
+            ldata = dataplane.DenseData(X_l, sq_l)
+        zq, tags, never = args[n_data:]
+        return rowcache.warm_vals(provider, ldata, zq, tags, never, pairs)
+
+    sharded = P(axis)
+    rep = P()
+    data_specs = ((P(axis, None), P(axis, None), sharded) if fmt == "ell"
+                  else (P(axis, None), sharded))
+    mapped = shard_map_compat(local, mesh=mesh,
+                              in_specs=data_specs + (rep, rep, rep),
+                              out_specs=P(None, axis))
+    return jax.jit(mapped)
+
+
 class ParallelSMOSolver(solver.SMOSolver):
     """Multi-device SMO with adaptive shrinking, trained through the
     *same* :class:`repro.core.driver.EpochDriver` as the single-host
@@ -474,19 +525,10 @@ class ParallelSMOSolver(solver.SMOSolver):
                 cache_slots=self._cache_slots(), cache_policy=policy)
         return self._runners[key]
 
-    def _reconstruct(self, y, alpha, stale):
-        """Distributed Alg. 6: shard the full problem over the mesh and run
-        the ppermute ring; returns reconstructed gamma for ``stale`` rows.
-
-        ELL-family stores (``ELLStore``/``CSRStore``) send two sparse
-        payloads: own-side rows at the full set's adaptive K, and the ring
-        payload restricted to support-vector rows at the *SV set's*
-        lane-rounded K — non-SV rows carry coef 0, so zeroing them is exact
-        and the rotated bytes track the live model, not the ingest budget."""
+    # -- Alg. 6: the ppermute ring, fed from host arrays or the mirror ----
+    def _ring(self, fmt: str):
         store = self._store
-        n = store.n
-        fmt = store.fmt
-        rb = min(4096, util.next_pow2(max(64, n)))
+        rb = min(4096, util.next_pow2(max(64, store.n)))
         # row_block and (for ELL) n_features are closed over by the ring —
         # key them so refits on different datasets rebuild the closure.
         key = ("recon", self.cfg.kernel, self.cfg.inv_2s2, fmt, rb,
@@ -495,42 +537,146 @@ class ParallelSMOSolver(solver.SMOSolver):
             self._runners[key] = make_ring_reconstructor(
                 self.mesh, self.cfg.kernel, self.cfg.inv_2s2, self.axis,
                 row_block=rb, fmt=fmt, n_features=store.n_features)
-        recon = self._runners[key]
-        p = self._nshards()
-        m = -(-n // p) * p                       # pad to shard-divisible
-        stale_mask = np.zeros((m,), bool)
-        stale_mask[stale] = True
-        pad1 = lambda a: np.pad(a.astype(np.float32), (0, m - n))
-        all_rows = np.arange(n)
+        return self._runners[key]
+
+    def _full_layout(self):
+        """The full set's balanced p-shard buffer layout (position -> gid,
+        -1 on per-shard padding tails) and its inverse. Host-built ring
+        inputs use this layout so they are positioned EXACTLY like the
+        device mirror — the two reconstruction modes then run the same
+        ring executable on bit-identical arrays."""
+        store, p = self._store, self._nshards()
+        m_per = mirror_mod.full_m_per(store.n, p, self.cfg.min_buffer)
+        return dataplane.full_layout(np.arange(store.n), p, m_per)
+
+    def _sv_lane_budget(self, sv: np.ndarray) -> int:
+        return reconstruct.sv_lane_budget(self._store, sv,
+                                          self.cfg.ell_adaptive)
+
+    def _reconstruct(self, y, alpha, stale):
+        """Distributed Alg. 6, host-streaming backend (``mirror='host'`` /
+        fallback): build the ring inputs in host numpy — full-set rows in
+        the mirror layout, the SV-masked ring payload at the SV set's lane
+        budget — and run the ppermute ring; returns gamma for ``stale``.
+
+        ELL-family stores (``ELLStore``/``CSRStore``) send two sparse
+        payloads: own-side rows at the full set's adaptive K, and the ring
+        payload restricted to support-vector rows at the *SV set's*
+        lane-rounded K — non-SV rows carry coef 0, so zeroing them is exact
+        and the rotated bytes track the live model, not the ingest budget.
+        Both K's are trace dimensions of the jitted ring, power-of-two
+        bucketed (``ell_adaptive=False`` pins them to the store budget)."""
+        store = self._store
+        n = store.n
+        fmt = store.fmt
+        recon = self._ring(fmt)
+        idx, pos_of = self._full_layout()
+        m = idx.size
+        real = idx >= 0
+        rid = idx[real]
+        stale_mask_n = np.zeros((n,), bool)
+        stale_mask_n[stale] = True
+        yb = np.ones((m,), np.float32)
+        yb[real] = y[rid]
+        ab = np.zeros((m,), np.float32)
+        ab[real] = alpha[rid]
+        sb = np.zeros((m,), bool)
+        sb[real] = stale_mask_n[rid]
         if fmt == "ell":
-            # both K's are trace dimensions of the jitted ring — bucket
-            # them (power-of-two lanes, like _make_buffer) so a drifting
-            # SV-set extent re-specializes O(log K) times, not per call;
-            # ell_adaptive=False pins them to the store budget, extending
-            # that knob's stable-trace-shape guarantee to Alg. 6
-            from repro.data import sparse as spfmt
-            adapt = self.cfg.ell_adaptive
-            K_own = (spfmt.bucket_lanes(store.buffer_K(all_rows),
+            K_own = (spfmt.bucket_lanes(store.buffer_K(np.arange(n)),
                                         store.lane, cap=store.K)
-                     if adapt else store.K)
+                     if self.cfg.ell_adaptive else store.K)
             buf = store.alloc(m, K_own)
-            store.fill(buf, slice(0, n), all_rows)
+            for sl, sub in dataplane.deal(np.arange(n), self._nshards(),
+                                          m // self._nshards()):
+                store.fill(buf, sl, sub)
             vp, cp = buf
             sv = np.flatnonzero(alpha > 0.0)
-            K_sv = (spfmt.bucket_lanes(store.buffer_K(sv), store.lane,
-                                       cap=store.K)
-                    if adapt else store.K)
+            K_sv = self._sv_lane_budget(sv)
             rvp = np.zeros((m, K_sv), np.float32)
             rcp = np.zeros((m, K_sv), np.int32)
             if sv.size:
-                store.fill((rvp, rcp), sv, sv)
+                store.fill((rvp, rcp), pos_of[sv], sv)
             dargs = (self._put(vp), self._put(cp),
                      self._put(rvp), self._put(rcp))
         else:
             Xp = np.zeros((m, store.n_features), np.float32)
-            Xp[:n] = store.X
+            Xp[real] = store.X[rid]
             dargs = (self._put(Xp),)
-        g = recon(*dargs, self._put(pad1(y)), self._put(pad1(alpha)),
-                  self._put(np.zeros((m,), np.float32)),
-                  self._put(stale_mask))
-        return np.asarray(g)[stale]
+        g = recon(*dargs, self._put(yb), self._put(ab),
+                  self._put(np.zeros((m,), np.float32)), self._put(sb))
+        return np.asarray(g)[pos_of[stale]]
+
+    def _reconstruct_mirror(self, mir, alpha_d, gamma_d, sv_rows, stale):
+        """Distributed Alg. 6 over the device mirror: the same ring
+        executable as :meth:`_reconstruct`, but every input is derived on
+        device — per-position alpha gathered from the (n,) master, the
+        SV-masked ring payload masked out of the mirror rows — and the
+        stale outputs are scattered straight into the donated gamma
+        master. Host traffic: one (n,) stale mask up, nothing per block."""
+        cfg, store = self.cfg, self._store
+        fmt = store.fmt
+        n = store.n
+        recon = self._ring(fmt)
+        stale_mask_n = np.zeros((n,), bool)
+        stale_mask_n[stale] = True
+        stale_full = self._put_full(stale_mask_n)
+        gids = mir.data.gids
+        if "recon_prep" not in self._runners:
+            rep = NamedSharding(self.mesh, P())
+
+            @functools.partial(jax.jit, static_argnames=("K_sv",))
+            def prep(data, alpha_d, stale_full, *, K_sv):
+                valid = data.gids >= 0
+                safe = jnp.where(valid, data.gids, 0)
+                ab = jnp.where(valid, alpha_d[safe], 0.0)
+                sb = valid & stale_full[safe]
+                gamma0 = jnp.zeros_like(ab)
+                if K_sv is None:
+                    return ab, sb, gamma0, ()
+                is_sv = jnp.where(valid, alpha_d[safe] > 0.0, False)
+                rvp = jnp.where(is_sv[:, None], data.vals[:, :K_sv], 0.0)
+                rcp = jnp.where(is_sv[:, None], data.cols[:, :K_sv], 0)
+                return ab, sb, gamma0, (rvp, rcp)
+
+            @functools.partial(jax.jit, donate_argnames=("gamma_d",),
+                               static_argnames=("n",), out_shardings=rep)
+            def scatter(gamma_d, out, gids, sb, *, n):
+                tgt = jnp.where(sb, jnp.where(gids >= 0, gids, n), n)
+                return gamma_d.at[tgt].set(out, mode="drop")
+
+            self._runners["recon_prep"] = (prep, scatter)
+        prep, scatter = self._runners["recon_prep"]
+        K_sv = self._sv_lane_budget(sv_rows) if fmt == "ell" else None
+        ab, sb, gamma0, ring_payload = prep(mir.data, alpha_d, stale_full,
+                                            K_sv=K_sv)
+        dargs = ((mir.data.vals, mir.data.cols) + ring_payload
+                 if fmt == "ell" else (mir.data.X,))
+        out = recon(*dargs, mir.y, ab, gamma0, sb)
+        return scatter(gamma_d, out, gids, sb, n=n)
+
+    def _regrow_cache(self, cache, data, pairs: bool, n: int):
+        """Rewarm the mesh-sharded cache value table across un-shrink
+        growth: tag query rows are gathered globally (replicated — the
+        same S x d bytes the candidate all_gather ships per iteration),
+        then each shard recomputes its own (S, M_local) segment under
+        shard_map with the exact in-loop compute structure
+        (``rowcache.warm_vals`` on the local buffer view)."""
+        cfg = self.cfg
+        fmt = self._store.fmt
+        key = ("warm", cfg.kernel, cfg.inv_2s2, fmt, self._store.n_features,
+               cfg.use_pallas, pairs)
+        if key not in self._runners:
+            self._runners[key] = make_cache_warmer(
+                self.mesh, cfg.kernel, cfg.inv_2s2, self.axis,
+                cfg.use_pallas, fmt=fmt, n_features=self._store.n_features,
+                pairs=pairs)
+        if "tag_queries" not in self._runners:
+            self._runners["tag_queries"] = jax.jit(
+                rowcache.tag_queries, static_argnames=("n",),
+                out_shardings=NamedSharding(self.mesh, P()))
+        zq = self._runners["tag_queries"](data, cache.tags, n=n)
+        dargs = ((data.vals, data.cols, data.sq_norms) if fmt == "ell"
+                 else (data.X, data.sq_norms))
+        vals = self._runners[key](*dargs, zq, cache.tags, jnp.asarray(False))
+        return cache._replace(vals=vals)

@@ -1,4 +1,4 @@
-"""Gradient reconstruction — the paper's Algorithm 6.
+"""Gradient reconstruction — the paper's Algorithm 6 (host-streaming path).
 
 Recomputes gamma_i = sum_{j : alpha_j > 0} alpha_j y_j K(x_i, x_j) - y_i for
 samples whose gamma went stale while shrunk. Cost is |X - A| * |SV| kernel
@@ -6,15 +6,29 @@ evaluations — "the bottleneck in achieving the overall speedup" (Sec. 3.4) —
 so the driver triggers it only at the 20-eps / 2-eps thresholds of Alg. 5,
 and Single/Multi policies bound how often it runs.
 
+This module is the HOST-STREAMING backend and the parity oracle: every SV
+and stale-row block is built in host numpy (``store.fill`` /
+``store.dense_rows``) and shipped to the device per block. The default
+training path (``SVMConfig(mirror='auto'|'device')``) instead runs Alg. 6
+as one jitted program over the device-resident full-set mirror
+(``repro.core.mirror``) with zero per-block host transfers; the two are
+bit-identical — the same uniform block plan (:func:`plan_blocks`, shared
+K_sv from :func:`sv_lane_budget`, shared ``store.sq_rows`` provenance for
+squared norms) drives both, and the per-block compute is the single
+barrier/cond island ``kernel_fns.recon_block`` in both backends, exactly
+like ``compact_backend='host'`` oracles the device compaction step.
+
 Kernel blocks go through the row-provider layer (``kernel_fns.make_provider``)
 against an SV device buffer built in the host store's *native* format: dense
 stores ship a ``DenseData`` block, ELL-family stores an ``ELLData`` block at
-the SV subset's own adaptive lane budget — the support-vector side of Alg. 6
+the SV set's adaptive lane budget — the support-vector side of Alg. 6
 never densifies. Only the (row_block, d) stale-row query side travels dense,
 mirroring the chunk runners' "working-set rows travel dense" rule.
 
-Shapes are bucketed (next power of two) so jit recompiles O(log N) times at
-most across a whole training run.
+Block shapes are uniform per call (count padded up to a whole number of
+power-of-two-bucketed blocks) so jit recompiles O(log N) times at most —
+and so the device-mirror backend can drive the identical decomposition
+from a ``lax.scan``.
 """
 from __future__ import annotations
 
@@ -28,32 +42,53 @@ from repro.core import kernel_fns, util
 from repro.data import sparse as spfmt
 
 
-def _bucket(n: int, lo: int = 128) -> int:
-    return util.bucket_pow2(n, lo)
+def plan_blocks(count: int, cap: int, lo: int = 128) -> tuple:
+    """Uniform block decomposition of ``count`` items: ``(blk, n_blocks)``
+    with ``blk`` a power-of-two bucket (<= ``cap``) and ``count`` padded up
+    to ``blk * n_blocks``. Shared by the host-streaming loop and the
+    device-mirror scan so both walk byte-identical block shapes."""
+    blk = min(int(cap), util.bucket_pow2(count, lo))
+    return blk, max(1, -(-int(count) // blk))
+
+
+def sv_lane_budget(store, sv_idx: np.ndarray, adaptive: bool = True) -> int:
+    """The support-vector blocks' shared ELL lane budget: the SV set's own
+    lane-rounded max extent, power-of-two bucketed (``ell_adaptive=False``
+    pins it to the store budget). One value for ALL SV blocks of a
+    reconstruction — a per-block budget would make the device scan's
+    shapes ragged."""
+    if not adaptive:
+        return store.K
+    return spfmt.bucket_lanes(store.buffer_K(sv_idx), store.lane,
+                              cap=store.K)
 
 
 @functools.partial(jax.jit, static_argnames=("provider",))
-def _recon_block(provider, sv_data, Zi, coef):
-    """Partial gamma for query rows Zi given an SV buffer in its native
-    storage format (coef = alpha*y, 0 on padding rows)."""
-    return provider.matrix(sv_data, Zi) @ coef
+def _recon_block(provider, sv_data, Zi, coef, never):
+    """Host-path wrapper of the shared block island (see
+    ``kernel_fns.recon_block`` for why the cond/barrier structure is
+    load-bearing)."""
+    return kernel_fns.recon_block(provider, sv_data, Zi, coef, never)
 
 
 def reconstruct_gamma_store(kernel: str, store, y: np.ndarray,
                             alpha: np.ndarray, rows: np.ndarray,
                             inv_2s2: float, row_block: int = 8192,
-                            sv_block: int = 8192) -> np.ndarray:
+                            sv_block: int = 8192,
+                            ell_adaptive: bool = True) -> np.ndarray:
     """Alg. 6 over a data-plane store (dense, block-ELL, or CSR).
 
     Host-side orchestration: gathers the support-vector set (alpha > 0 —
     includes bound SVs at alpha = C, the false-positive class the paper
     worries about) into native-format device blocks, densifies
     (row_block, d) stale-row query blocks on the fly, and streams both
-    through the provider's ``matrix``. Peak dense scratch is bounded by the
-    block sizes, never N*d (the paper's Fig. 1b memory argument holds
-    through reconstruction, including for CSR-ingested datasets that never
-    had a dense host form). Mirrors Alg. 6's loop structure with the
-    q-th-CPU loop replaced by block streaming.
+    through the shared ``kernel_fns.recon_block`` island. Peak dense
+    scratch is bounded by the block sizes, never N*d (the paper's Fig. 1b
+    memory argument holds through reconstruction, including for
+    CSR-ingested datasets that never had a dense host form). Mirrors
+    Alg. 6's loop structure with the q-th-CPU loop replaced by block
+    streaming; the device-mirror backend replays the identical plan on
+    device (``repro.core.mirror.reconstruct_device``).
     """
     if rows.size == 0:
         return np.zeros((0,), np.float32)
@@ -64,37 +99,37 @@ def reconstruct_gamma_store(kernel: str, store, y: np.ndarray,
     provider = kernel_fns.make_provider(kernel, store.fmt, inv_2s2=inv_2s2)
     d = store.n_features
     ell = store.fmt == "ell"
+    K_sv = sv_lane_budget(store, sv_idx, ell_adaptive) if ell else None
+    sv_blk, nsb = plan_blocks(sv_idx.size, sv_block)
+    row_blk, nrb = plan_blocks(rows.size, row_block)
+    never = jnp.asarray(False)
 
     # SV blocks are the OUTER loop so at most one native-format SV device
     # block is live at a time — peak device memory stays bounded by
-    # (sv_block, row_block) even when the support set itself outgrows
-    # device memory (the rcv1/webspam-scale regime the CSR data plane
-    # targets). Each SV block is built exactly once.
-    acc = np.zeros((rows.size,), np.float32)
-    for t in range(0, sv_idx.size, sv_block):
-        sub = sv_idx[t: t + sv_block]
-        nsv = _bucket(sub.size)
-        K = None
-        if ell:
-            # the SV subset's own lane budget, power-of-two bucketed so a
-            # drifting support set re-specializes O(log K) times
-            K = spfmt.bucket_lanes(store.buffer_K(sub), store.lane,
-                                   cap=store.K)
-        buf = store.alloc(nsv, K)
+    # (sv_blk, row_blk) even when the support set itself outgrows device
+    # memory (the rcv1/webspam-scale regime the CSR data plane targets).
+    # Each SV block is built exactly once. The device-mirror backend scans
+    # the same (nsb, nrb) grid in the same order, so the acc additions
+    # below associate identically.
+    acc = np.zeros((nrb * row_blk,), np.float32)
+    for t in range(nsb):
+        sub = sv_idx[t * sv_blk: (t + 1) * sv_blk]
+        buf = store.alloc(sv_blk, K_sv)
         store.fill(buf, slice(0, sub.size), sub)
-        coef = np.zeros((nsv,), np.float32)
+        sq = np.zeros((sv_blk,), np.float32)
+        sq[: sub.size] = store.sq_rows(sub)
+        coef = np.zeros((sv_blk,), np.float32)
         coef[: sub.size] = (alpha[sub] * y[sub]).astype(np.float32)
-        sv_data = store.to_device(buf, jnp.asarray)
+        sv_data = store.to_device(buf, jnp.asarray, sq=sq)
         coef_d = jnp.asarray(coef)
-        for s in range(0, rows.size, row_block):
-            blk = rows[s: s + row_block]
-            nb = _bucket(blk.size)
-            Zi = np.zeros((nb, d), np.float32)
+        for s in range(nrb):
+            blk = rows[s * row_blk: (s + 1) * row_blk]
+            Zi = np.zeros((row_blk, d), np.float32)
             Zi[: blk.size] = store.dense_rows(blk)
             g = np.asarray(_recon_block(provider, sv_data, jnp.asarray(Zi),
-                                        coef_d))
-            acc[s: s + blk.size] += g[: blk.size]
-    return acc - y[rows]
+                                        coef_d, never))
+            acc[s * row_blk: (s + 1) * row_blk] += g
+    return acc[: rows.size] - y[rows]
 
 
 def reconstruct_gamma(kernel: str, X: np.ndarray, y: np.ndarray,

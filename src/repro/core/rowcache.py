@@ -70,14 +70,20 @@ rebuild the solver calls :func:`remap_cache` with the old and new
     that is safe because padding rows are never active, their gamma is
     pinned at +inf, and the writeback masks them out.
   * **reconstruction / un-shrink** (the buffer grows back): re-added
-    positions have no cached values, so no entry can be completed — the
-    cache is invalidated wholesale (tags reset, counters preserved).
+    positions have no cached values, so no entry can be *completed* by a
+    gather — instead the cache survives by **rewarming**
+    (:func:`regrow_cache`): every tagged slot's row is recomputed over the
+    grown buffer with the exact in-loop compute islands, so tags, LRU/SLRU
+    history and counters all carry across growth and the first post-growth
+    accesses hit. (:func:`remap_cache` retains the old wholesale-drop
+    behavior for callers that cannot rewarm.)
 
 Checkpoints never store the cache: it is rebuilt empty on resume, which is
 trajectory-neutral because cached rows are exact.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple, Optional
 
 import numpy as np
@@ -259,6 +265,90 @@ def make_accessors(provider, data, cached: bool, never: jax.Array,
         return lax.cond(never, lambda: zero, compute), c
 
     return get_row1, get_rows2
+
+
+def tag_queries(data, tags: jax.Array, n: int) -> jax.Array:
+    """Dense (S, d) query rows for the cached tags, gathered from the
+    buffer by global id (jit-compatible). Every tag must be resident in
+    ``data`` — true at un-shrink, where the buffer is the full set. Bits
+    match the in-loop ``data.dense_row`` queries exactly (the ELL
+    scatter-add is exact: one real entry per column plus zeros)."""
+    m = data.gids.shape[0]
+    inv = jnp.zeros((n + 1,), jnp.int32).at[
+        jnp.where(data.gids >= 0, data.gids, n)].set(
+        jnp.arange(m, dtype=jnp.int32))
+    tpos = inv[jnp.clip(tags, 0, n)]
+    return jax.vmap(data.dense_row)(tpos)
+
+
+def warm_vals(provider, data, zq: jax.Array, tags: jax.Array,
+              never: jax.Array, pairs: bool) -> jax.Array:
+    """Recompute the (S, M) value table over ``data`` for the tagged slots.
+
+    This is what lets the row cache SURVIVE un-shrink growth instead of
+    being invalidated wholesale: a grown buffer re-adds columns no cached
+    entry has values for, so surviving exactly means recomputing each
+    tagged row over the new buffer — with the *same* barrier +
+    degenerate-cond compute islands the chunk runners' miss path uses
+    (``make_accessors``), so a later hit serves bits identical to what an
+    in-loop miss would have produced and the cache-on == cache-off
+    trajectory contract holds across growth. ``pairs`` selects the fused
+    two-row kernel (wss1 caches rows produced by ``rows2``) vs the
+    single-row kernel (wss2 caches rows produced by ``row``); slots are
+    walked in (0,1),(2,3),... pairs — partner choice cannot change a
+    column's bits (the position-symmetric ``ell_dots2`` / independent
+    GEMM columns the pairwise hit policy already relies on). Untagged
+    slots are zeroed; tags/stamps/segments/counters are untouched.
+    Shard-local (no collectives), so the parallel solver can run it
+    under shard_map on the local buffer view.
+
+    CAVEAT: only the ``pairs`` (rows2 GEMM) path is context-stable on XLA
+    CPU — single-row GEMV computes drift by ulps between loop and
+    standalone contexts even behind barrier/cond islands (measured), so
+    the driver rewarms only under wss1 and keeps wholesale invalidation
+    for wss2, where exactness would otherwise break.
+    """
+    m = data.sq_norms.shape[0]
+    S = tags.shape[0]
+    if pairs:
+        def step(c, sl):
+            z2 = zq[sl]                                       # (2, d)
+            compute = lambda: lax.optimization_barrier(
+                provider.rows2(data, lax.optimization_barrier(z2)))
+            rows = lax.cond(
+                never, lambda: jnp.zeros((m, 2), jnp.float32), compute)
+            return c, rows.T                                  # (2, m)
+        _, out = lax.scan(step, 0,
+                          jnp.arange(S, dtype=jnp.int32).reshape(S // 2, 2))
+        vals = out.reshape(S, m)
+    else:
+        def step(c, s):
+            compute = lambda: lax.optimization_barrier(
+                provider.row(data, lax.optimization_barrier(zq[s])))
+            row = lax.cond(
+                never, lambda: jnp.zeros((m,), jnp.float32), compute)
+            return c, row
+        _, vals = lax.scan(step, 0, jnp.arange(S, dtype=jnp.int32))
+    return jnp.where((tags >= 0)[:, None], vals, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("provider", "pairs", "n"))
+def _regrow_step(cache: RowCache, data, never, *, provider, pairs, n):
+    zq = tag_queries(data, cache.tags, n)
+    return cache._replace(
+        vals=warm_vals(provider, data, zq, cache.tags, never, pairs))
+
+
+def regrow_cache(cache: Optional[RowCache], data, provider, pairs: bool,
+                 n: int) -> Optional[RowCache]:
+    """Single-host cache carry-over across un-shrink growth: rewarm every
+    tagged slot against the grown (full-set) buffer in one jitted pass.
+    See :func:`warm_vals`; the parallel solver wraps the same scan in
+    shard_map (``parallel.ParallelSMOSolver._regrow_cache``)."""
+    if cache is None:
+        return None
+    return _regrow_step(cache, data, jnp.asarray(False), provider=provider,
+                        pairs=pairs, n=n)
 
 
 def remap_cache_device(cache: Optional[RowCache], src: jax.Array,

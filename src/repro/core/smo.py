@@ -217,17 +217,29 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
             a_low = s.alpha[il]
 
             z2 = jnp.stack([x_up, x_low])                       # (2, d)
-            # K(x_up, x_low) directly from the two rows — O(d), avoids
-            # depending on the full kernel-row computation. The barriers pin
-            # this scalar island to an identical isolated subgraph in every
-            # runner variant: without them XLA contracts the dot/FMA chain
-            # differently depending on surrounding fusion (observed 1-ulp
-            # k_ul drift between the cached and uncached executables), which
-            # would break the cache-on == cache-off exactness contract.
-            xu_b, xl_b = lax.optimization_barrier((x_up, x_low))
-            k_ul = lax.optimization_barrier(
-                row1(xl_b[None, :], jnp.sum(xl_b * xl_b)[None],
-                     xu_b, inv_2s2)[0])
+            if selection == "wss2":
+                # K(x_up, x_low) is already in hand: it is the i_low entry
+                # of the selection row the second-order scores were built
+                # from (produced through the shared provider/cache), so the
+                # update reuses it instead of recomputing the O(d) dot.
+                # Exact under the cache contract: row_up is bit-identical
+                # cache-on and cache-off, hence so is this scalar — and the
+                # update now prices the pair with the same K value the
+                # selection scored it by.
+                k_ul = row_up[il]
+            else:
+                # K(x_up, x_low) directly from the two rows — O(d), avoids
+                # depending on the full kernel-row computation. The barriers
+                # pin this scalar island to an identical isolated subgraph in
+                # every runner variant: without them XLA contracts the
+                # dot/FMA chain differently depending on surrounding fusion
+                # (observed 1-ulp k_ul drift between the cached and uncached
+                # executables), which would break the cache-on == cache-off
+                # exactness contract.
+                xu_b, xl_b = lax.optimization_barrier((x_up, x_low))
+                k_ul = lax.optimization_barrier(
+                    row1(xl_b[None, :], jnp.sum(xl_b * xl_b)[None],
+                         xu_b, inv_2s2)[0])
             k_ll = kself(x_low, inv_2s2)
 
             a_up_new, a_low_new = pair_update(

@@ -10,8 +10,10 @@ module owns what is *per-solver*:
   * :class:`SMOSolver` — the single-host hook implementations the driver
     calls: chunk-runner construction (``_runner``), device placement
     (``_put`` / ``_put_full`` / ``_put_cache_vals``), row-cache sizing
-    (``_cache_slots`` / ``_new_cache``), host-blocked Alg. 6
-    (``_reconstruct``), and compaction sharding pins
+    (``_cache_slots`` / ``_new_cache``) and rewarming across un-shrink
+    (``_regrow_cache``), Alg. 6 in both backends (``_reconstruct`` —
+    host streaming; ``_reconstruct_mirror`` — the jitted scan over the
+    device full-set mirror), and compaction sharding pins
     (``_compact_shardings``; None here — single device);
   * model finalize — beta, support-vector extraction in the store's native
     format, and the Eq. 9 convergence verdict over all samples.
@@ -31,7 +33,9 @@ import jax.numpy as jnp
 
 from repro.core import dataplane, driver
 from repro.core import heuristics as H
-from repro.core import kernel_fns, reconstruct, rowcache, smo
+from repro.core import kernel_fns
+from repro.core import mirror as mirror_mod
+from repro.core import reconstruct, rowcache, smo
 from repro.core.driver import FitStats  # re-export (public API)
 
 __all__ = ["SVMConfig", "SVMModel", "SMOSolver", "FitStats", "train"]
@@ -69,6 +73,20 @@ class SVMConfig:
     compact_backend: str = "device"  # physical compaction: 'device' (jitted
                                  # jnp.take gather, zero host row traffic) |
                                  # 'host' (store rebuild — the parity oracle)
+    mirror: str = "auto"         # device-resident full-set mirror: 'device'
+                                 # (jitted Alg. 6 reconstruction + device
+                                 # un-shrink; errors if over budget) | 'host'
+                                 # (streaming paths — the parity oracle) |
+                                 # 'auto' (device when it fits the budget)
+    mirror_budget_bytes: "int | None" = None
+                                 # per-device byte cap for the mirror;
+                                 # default: a fraction of the backend-
+                                 # reported device memory (unknown -> fits)
+    recon_block: int = 8192      # Alg. 6 SV/query block edge (single-host
+                                 # backends; both walk the same grid, so
+                                 # this never affects parity — smaller
+                                 # blocks bound peak scratch, larger ones
+                                 # amortize per-block overhead)
     max_iters: int = 4_000_000
     chunk_iters: int = 256       # jitted while_loop segment length; smaller
                                  # chunks let physical compaction engage
@@ -195,11 +213,47 @@ class SMOSolver:
         return _RUNNER_CACHE[key]
 
     def _reconstruct(self, y, alpha, stale):
-        """Alg. 6 for global row indices ``stale``; host-blocked baseline.
+        """Alg. 6 for global row indices ``stale``; the host-streaming
+        backend (``mirror='host'`` / auto fallback — the parity oracle).
         Consumes the data-plane store, so ELL storage streams densified
         blocks instead of materializing a dense X."""
         return reconstruct.reconstruct_gamma_store(
-            self.cfg.kernel, self._store, y, alpha, stale, self.cfg.inv_2s2)
+            self.cfg.kernel, self._store, y, alpha, stale, self.cfg.inv_2s2,
+            row_block=self.cfg.recon_block, sv_block=self.cfg.recon_block,
+            ell_adaptive=self.cfg.ell_adaptive)
+
+    def _reconstruct_mirror(self, mir, alpha_d, gamma_d, sv_rows, stale):
+        """Alg. 6 as one jitted scan over the device mirror, accumulating
+        into the donated (n,) gamma master — replays the host oracle's
+        exact block plan (``reconstruct.plan_blocks`` / shared K_sv /
+        shared ``recon_block`` island), so the two backends are
+        bit-identical. Returns the updated gamma master."""
+        cfg, store = self.cfg, self._store
+        provider = kernel_fns.make_provider(cfg.kernel, store.fmt,
+                                            inv_2s2=cfg.inv_2s2)
+        K_sv = (reconstruct.sv_lane_budget(store, sv_rows, cfg.ell_adaptive)
+                if store.fmt == "ell" else None)
+        sv_blk, nsb = reconstruct.plan_blocks(sv_rows.size, cfg.recon_block)
+        row_blk, nrb = reconstruct.plan_blocks(stale.size, cfg.recon_block)
+        sv_pos = mirror_mod.pad_pos(
+            mir.pos_of[sv_rows].astype(np.int32), nsb * sv_blk)
+        stale_pos = mirror_mod.pad_pos(
+            mir.pos_of[stale].astype(np.int32), nrb * row_blk)
+        return mirror_mod.reconstruct_device(
+            provider, mir.data, mir.y, alpha_d, gamma_d,
+            jnp.asarray(sv_pos), jnp.asarray(stale_pos), jnp.asarray(False),
+            sv_blk=sv_blk, row_blk=row_blk, nsb=nsb, nrb=nrb, K_sv=K_sv,
+            n=mir.n)
+
+    def _regrow_cache(self, cache, data, pairs: bool, n: int):
+        """Rewarm the row cache across un-shrink growth (see
+        ``rowcache.regrow_cache``). The provider must match the chunk
+        runner's exactly — including the Pallas backend flag — so warmed
+        bits equal in-loop miss bits."""
+        provider = kernel_fns.make_provider(self.cfg.kernel, self._store.fmt,
+                                            self.cfg.use_pallas,
+                                            self.cfg.inv_2s2)
+        return rowcache.regrow_cache(cache, data, provider, pairs, n)
 
     def _nshards(self) -> int:
         return 1

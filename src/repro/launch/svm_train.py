@@ -34,6 +34,15 @@ def main():
                     choices=("device", "host"),
                     help="physical compaction: jitted on-device gather "
                          "(default) or host store rebuild (parity oracle)")
+    ap.add_argument("--mirror", default="auto",
+                    choices=("auto", "device", "host"),
+                    help="device-resident full-set mirror: jitted Alg. 6 "
+                         "reconstruction + device-side un-shrink when it "
+                         "fits ('auto'), forced ('device', errors over "
+                         "budget), or host-streaming oracle ('host')")
+    ap.add_argument("--mirror-budget-bytes", type=int, default=None,
+                    help="per-device byte cap for the mirror (default: "
+                         "a fraction of reported device memory)")
     args = ap.parse_args()
 
     from repro.core import SMOSolver, SVMConfig
@@ -48,7 +57,9 @@ def main():
                     selection=args.selection, row_cache=args.row_cache,
                     row_cache_slots=args.row_cache_slots,
                     row_cache_policy=args.row_cache_policy,
-                    compact_backend=args.compact_backend)
+                    compact_backend=args.compact_backend,
+                    mirror=args.mirror,
+                    mirror_budget_bytes=args.mirror_budget_bytes)
     if args.parallel:
         from repro.core.parallel import ParallelSMOSolver
         solver = ParallelSMOSolver(cfg)
@@ -59,7 +70,8 @@ def main():
     cache = (f" cache_hit={s.cache_hit_rate:.2f}" if args.row_cache else "")
     print(f"{args.dataset}/{args.heuristic}: iters={s.iterations} "
           f"nsv={s.n_sv} conv={s.converged} recon={s.reconstructions} "
-          f"train={s.train_time:.2f}s recon_t={s.recon_time:.2f}s{cache}")
+          f"mirror={s.mirror} train={s.train_time:.2f}s "
+          f"recon_t={s.recon_time:.2f}s{cache}")
     if len(yt):
         print(f"test acc: {(m.predict(Xt) == yt).mean():.4f}")
 
