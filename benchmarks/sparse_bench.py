@@ -55,6 +55,17 @@ backends). Reports per-reconstruction latency and the device/host
 speedup, and asserts bitwise backend parity (identical iteration counts)
 en passant. On CPU the "host link" is memcpy, so the win here is pure
 orchestration — expect substantially bigger ratios across PCIe/ICI.
+
+Fused-epoch sweep (``--epoch-out`` -> ``BENCH_epoch.json``): trains a
+shrink-heavy workload at ``fuse_iters`` in {1, 4, 16, 64} across
+dense/ELL specs. Every k shares ONE executable (the schedule scalars are
+traced) and the k=1 run is the bit-exact oracle — parity (identical
+iteration counts) is asserted en passant — so the only thing the sweep
+varies is how many per-dispatch host round-trips (launch + one
+``EpochSummary`` sync each) the same iteration trajectory is amortized
+over. us/iter should fall monotonically to the amortization knee, where
+dispatch overhead stops being a measurable share of an iteration; on CPU
+the sync is cheap, so across PCIe/ICI the knee sits at larger k.
 """
 from __future__ import annotations
 
@@ -275,6 +286,70 @@ def bench_recon(sizes=(1536, 3072), d: int = 384, density: float = 0.05,
     return records
 
 
+FUSE_SWEEP = (1, 4, 16, 64)
+
+
+def bench_epoch(sizes=(1536, 3072), d: int = 384, density: float = 0.05,
+                eps: float = 1e-3, seed: int = 3,
+                sweep=FUSE_SWEEP) -> list[dict]:
+    """us/iter vs ``fuse_iters`` on shrink-heavy dense/ELL specs (see
+    module doc). Each configuration is fit twice and the second run
+    reported, so the numbers are warm-jit — which also exercises the
+    one-executable-for-all-k property: k > 1 fits recompile nothing.
+    """
+    records = []
+    for n in sizes:
+        X, y = make_sparse(n, d, density, seed=seed, noise=0.05,
+                           label_noise=0.0, margin=0.5)
+        for fmt in ("dense", "ell"):
+            oracle = None
+            for k in sweep:
+                cfg = SVMConfig(C=2.0, sigma2=float(d) / 8.0, eps=eps,
+                                heuristic="multi5pc", chunk_iters=64,
+                                min_buffer=64, format=fmt,
+                                row_cache=True, row_cache_slots=256,
+                                fuse_iters=k)
+                m = None
+                for _ in range(2):            # second run = warm jit
+                    m = SMOSolver(cfg).fit(X, y)
+                rec = {
+                    "n": n, "d": d, "fmt": fmt, "fuse_iters": k,
+                    "iterations": m.stats.iterations,
+                    "dispatches": m.stats.dispatches,
+                    "us_per_iter": (m.stats.train_time * 1e6
+                                    / max(m.stats.iterations, 1)),
+                    "us_per_dispatch": (m.stats.train_time * 1e6
+                                        / max(m.stats.dispatches, 1)),
+                    "compactions": m.stats.compactions,
+                    "shrink_events": m.stats.shrink_events,
+                }
+                records.append(rec)
+                if k == sweep[0]:
+                    oracle = rec
+                else:
+                    # any k is bit-identical to the k=1 oracle by contract
+                    assert rec["iterations"] == oracle["iterations"], \
+                        (n, fmt, k, rec, oracle)
+                    assert rec["shrink_events"] == oracle["shrink_events"], \
+                        (n, fmt, k, rec, oracle)
+                    assert rec["dispatches"] < oracle["dispatches"], \
+                        (n, fmt, k, rec, oracle)
+                    rec["speedup"] = (oracle["us_per_iter"]
+                                      / rec["us_per_iter"])
+    return records
+
+
+def epoch_csv_lines(records: list[dict]) -> list[str]:
+    lines = []
+    for r in records:
+        extra = (f";speedup={r['speedup']:.2f}" if "speedup" in r else "")
+        lines.append(
+            f"epoch/{r['fmt']}/n{r['n']}/k{r['fuse_iters']},"
+            f"{r['us_per_iter']:.1f},"
+            f"iters={r['iterations']};dispatches={r['dispatches']}{extra}")
+    return lines
+
+
 def recon_csv_lines(records: list[dict]) -> list[str]:
     lines = []
     for r in records:
@@ -339,11 +414,14 @@ def main(argv=None) -> None:
                     help="run the host-streaming vs device-mirror Alg. 6 "
                          "latency sweep and write it as a JSON artifact "
                          "(BENCH_reconstruct.json in CI)")
+    ap.add_argument("--epoch-out", default=None,
+                    help="run the fused-epoch fuse_iters sweep and write it "
+                         "as a JSON artifact (BENCH_epoch.json in CI)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller problems (CI-budget run)")
     args = ap.parse_args(argv)
     if args.out or not (args.cache_out or args.compact_out
-                        or args.recon_out):
+                        or args.recon_out or args.epoch_out):
         kw = dict(n=512, d=1024) if args.quick else {}
         records = bench_sparse(quick=args.quick, **kw)
         for line in csv_lines(records):
@@ -381,6 +459,15 @@ def main(argv=None) -> None:
             json.dump({"bench": "reconstruction", "records": recon_records},
                       f, indent=1)
         print(f"wrote {args.recon_out}", flush=True)
+    if args.epoch_out:
+        kw = dict(sizes=(1024, 2048), d=256) if args.quick else {}
+        epoch_records = bench_epoch(**kw)
+        for line in epoch_csv_lines(epoch_records):
+            print(line, flush=True)
+        with open(args.epoch_out, "w") as f:
+            json.dump({"bench": "fused_epoch", "records": epoch_records},
+                      f, indent=1)
+        print(f"wrote {args.epoch_out}", flush=True)
 
 
 if __name__ == "__main__":

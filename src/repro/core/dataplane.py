@@ -399,14 +399,43 @@ def ell_extents(vals: jax.Array) -> jax.Array:
 def ell_shard_extents(vals: jax.Array, keep: jax.Array, n_active: jax.Array,
                       *, p: int, m_per: int) -> jax.Array:
     """Per-shard max occupied extent of the surviving rows under the
-    compaction re-layout — the ONE (p,) readback of an ELL device
-    compaction. Its max fixes the new lane bucket (host applies
-    ``data.sparse.bucket_lanes``, exactly like the host rebuild), and the
-    per-shard values become ``FitStats.shard_K``; the main compaction step
-    needs no extent scan of its own."""
+    compaction re-layout, with the new per-shard slot count ``m_per``
+    static. Kept as the shape-explicit reference implementation (and test
+    oracle) for :func:`ell_shard_extents_dyn`, which the fused epoch
+    runner uses in-dispatch — where ``m_per`` is a *traced* quantity and a
+    reshape by it is impossible."""
     src, valid = compact_plan(keep, n_active, p, m_per)
     ext = jnp.where(valid, ell_extents(vals)[src], 0)
     return ext.reshape(p, m_per).max(axis=1)
+
+
+def ell_shard_extents_dyn(vals: jax.Array, keep: jax.Array,
+                          n_active: jax.Array, p: int) -> jax.Array:
+    """Per-shard max occupied extent of the surviving rows — no static
+    ``m_per``, so it can run inside the fused epoch dispatch whose summary
+    carries the (p,) result back to the host (which buckets the max into
+    the new lane budget and records ``FitStats.shard_K``).
+
+    Shard membership under the balanced contiguous re-layout depends only
+    on the survivor's global rank and ``n_active`` (shard ``q`` owns ranks
+    ``[q*base + min(q, extra), ...)`` with ``base, extra = divmod(n_active,
+    p)``), never on the per-shard padding ``m_per`` — so this computes the
+    same values as :func:`ell_shard_extents` by a segment-max over the
+    rank->shard map instead of a reshape. Integer-only arithmetic: exact.
+    """
+    ext = jnp.where(keep, ell_extents(vals), 0)
+    rank = jnp.cumsum(keep.astype(jnp.int32)) - 1      # survivor rank per pos
+    n_active = n_active.astype(jnp.int32)
+    base = n_active // p
+    extra = n_active - base * p
+    cut = extra * (base + 1)
+    # ranks below ``cut`` land in the first ``extra`` (base+1)-row shards;
+    # the rest deal into base-row shards. base == 0 makes the second branch
+    # dead (all ranks < n_active == cut); the max() only guards the div.
+    q = jnp.where(rank < cut, rank // (base + 1),
+                  extra + (rank - cut) // jnp.maximum(base, 1))
+    q = jnp.where(keep, q, p)                          # drop non-survivors
+    return jnp.zeros((p,), jnp.int32).at[q].max(ext, mode="drop")
 
 
 def deal(idx: np.ndarray, p: int, m_per: int):

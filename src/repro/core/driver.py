@@ -24,6 +24,42 @@ Phases (faithful to Alg. 5):
 The "Original" baseline (Alg. 3, no shrinking) is the same driver with the
 shrink interval = 0 and no reconstruction, run straight to 2*eps.
 
+Fused-epoch dispatch loop
+-------------------------
+The optimization hot loop is NOT an iteration loop: ``fit`` dispatches
+*fused epochs* (``smo.make_chunk_runner`` / the shard_map twin in
+``parallel``) of up to ``SVMConfig.fuse_iters`` segments each — a segment
+being one legacy chunk of up to ``chunk_iters`` SMO iterations — and the
+only thing it reads back per dispatch is the fixed-size
+``smo.EpochSummary``. Everything the host used to sync scalars for
+(convergence, stall, iteration budget, the compaction predicate, the
+shrink counter, cache hit/miss counters, the (p,) ELL shard extents of a
+pending compaction) is evaluated on device between segments and rides
+that one summary; host<->device traffic per dispatch is O(p), not O(n),
+and there are exactly zero per-iteration readbacks. See the dispatch
+timeline diagram in ``smo.py``.
+
+Host decisions happen only at dispatch boundaries, on summary fields:
+
+  * hard exit     summary.converged | stalled | step >= max_iters;
+  * compaction    summary.need_compact -> the host buckets the new
+                  geometry from summary.n_active (+ summary.shard_ext for
+                  the ELL lane budget) and dispatches the jitted compact
+                  step — no separate extent-scan dispatch;
+  * checkpoints   the segment budget of each dispatch is clipped to the
+                  checkpoint cadence (``heuristics.fuse_budget``), so a
+                  k-fused run saves at exactly the same iteration counts
+                  as the ``fuse_iters=1`` oracle;
+  * Eq. 9 check   at reconstruction points, both bounds come from ONE
+                  jitted reduction (``betas``) — a (2,) readback, not the
+                  full (n,) gamma; in device-mirror mode it runs directly
+                  on the (n,) device masters, and host gamma is
+                  materialized only at checkpoints and fit exit.
+
+``fuse_iters=1`` (default) runs one segment per dispatch on the SAME XLA
+executable as any k > 1 (all schedule scalars are traced), which makes it
+the bit-exact parity oracle the fused-epoch tests diff against.
+
 Device-resident epoch cycle
 ---------------------------
 Physical compaction is a *device-side* operation by default
@@ -67,6 +103,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import os
 import time
 import warnings
@@ -77,7 +114,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import dataplane, mirror, rowcache, smo
+from repro.core import dataplane, heuristics, mirror, rowcache, smo
 from repro.data import sparse as spfmt
 
 
@@ -90,6 +127,13 @@ class FitStats:
     shrink_events: int = 0
     compactions: int = 0
     min_active: int = 0
+    dispatches: int = 0          # fused-epoch runner launches; each reads
+                                 # back ONE EpochSummary and nothing else,
+                                 # so iterations / dispatches is the
+                                 # amortization the fusion buys
+    dispatch_times: list = dataclasses.field(default_factory=list)
+                                 # wall seconds per dispatch (len ==
+                                 # dispatches) — what BENCH_epoch.json plots
     train_time: float = 0.0
     recon_time: float = 0.0
     compact_time: float = 0.0    # wall time in physical compaction (either
@@ -127,18 +171,33 @@ class CompactShardings(NamedTuple):
     rep: jax.sharding.Sharding         # replicated scalars / (n,) masters
 
 
-def betas(gamma: np.ndarray, alpha: np.ndarray, y: np.ndarray, C: float):
-    """Eq. 8 on host over all samples (used at reconstruction points and
-    by the solvers' finalize)."""
+@functools.partial(jax.jit, static_argnames=("C",))
+def _betas_step(gamma, alpha, y, *, C):
+    """Eq. 8 bounds over all samples in ONE jitted reduction. ``C`` is
+    static (a python float) so the ``C * _BND`` thresholds constant-fold
+    f64 -> f32 exactly like the closure constants of ``smo.select_pair``
+    — same index sets. Empty sets fall out of the inf/-inf sentinels with
+    the same semantics as the old host early-outs."""
     pos = y > 0
     at0 = alpha <= C * smo._BND
     atc = alpha >= C * (1.0 - smo._BND)
     i0 = ~at0 & ~atc
     in_up = i0 | (pos & at0) | (~pos & atc)
     in_low = i0 | (pos & atc) | (~pos & at0)
-    b_up = gamma[in_up].min() if in_up.any() else np.inf
-    b_low = gamma[in_low].max() if in_low.any() else -np.inf
-    return float(b_up), float(b_low)
+    b_up = jnp.min(jnp.where(in_up, gamma, jnp.inf))
+    b_low = jnp.max(jnp.where(in_low, gamma, -jnp.inf))
+    return jnp.stack([b_up, b_low])
+
+
+def betas(gamma, alpha, y, C: float):
+    """Eq. 8 over all samples (reconstruction points and the solvers'
+    finalize). Accepts host or device arrays; either way the reduction
+    runs on device and the host syncs a single (2,) result — both bounds
+    in one round-trip (the old per-bound reads cost two syncs when handed
+    lazy device values, and an (n,) gamma readback besides)."""
+    out = np.asarray(_betas_step(jnp.asarray(gamma), jnp.asarray(alpha),
+                                 jnp.asarray(y), C=float(C)))
+    return float(out[0]), float(out[1])
 
 
 def _scatter_full(alpha_d, gamma_d, alpha_buf, gamma_buf, gids):
@@ -365,14 +424,19 @@ class EpochDriver:
             self.stats.shard_K.append(self._last_shard_K)
 
     # -- writeback ---------------------------------------------------------
-    def _writeback(self):
-        """Sync host alpha/gamma from the device masters after scattering
-        the current buffer in. Rows dropped at earlier compactions keep the
-        drop-time values the compaction step scattered — same bits the
-        host-backend rebuild would have written back then."""
+    def _writeback_masters(self):
+        """Scatter the current buffer's alpha/gamma into the (n,) device
+        masters. Rows dropped at earlier compactions keep the drop-time
+        values the compaction step scattered — same bits the host-backend
+        rebuild would have written back then. No host traffic."""
         self.alpha_d, self.gamma_d = _writeback_step(
             self.alpha_d, self.gamma_d, self.state.alpha, self.state.gamma,
             self.data.gids)
+
+    def _writeback(self):
+        """Master writeback + full host sync of alpha/gamma (checkpoints,
+        host-mode epoch boundaries, and the host compaction oracle)."""
+        self._writeback_masters()
         # np.array (not asarray): jax arrays surface as read-only views and
         # reconstruction writes gamma[stale] in place
         self.alpha = np.array(self.alpha_d)
@@ -386,18 +450,26 @@ class EpochDriver:
     def _reconstruct_step(self, stale: np.ndarray):
         """Reconstruct gamma for the global rows ``stale``. Mirror mode:
         one jitted device program accumulating into the donated (n,) gamma
-        master (only index vectors go up; the (n,) gamma comes back once
-        for the host-side Eq. 9 check). Host mode: the streaming oracle
-        writes host gamma in place; the master is refreshed by the next
-        buffer build. Both modes leave identical gamma bits."""
+        master — only index vectors go up, NOTHING comes back (the Eq. 9
+        check reads the masters through ``betas``, a (2,) sync; full host
+        gamma is materialized lazily at checkpoints/fit exit). Host mode:
+        the streaming oracle writes host gamma in place; the master is
+        refreshed by the next buffer build. Both modes leave identical
+        gamma bits."""
         sv, y = self.s, self.y
         if stale.size == 0:
             return
         sv_rows = np.flatnonzero(self.alpha > 0.0)
-        if self.mirror is not None and sv_rows.size:
-            self.gamma_d = sv._reconstruct_mirror(
-                self.mirror, self.alpha_d, self.gamma_d, sv_rows, stale)
-            self.gamma = np.array(self.gamma_d)
+        if self.mirror is not None:
+            if sv_rows.size:
+                self.gamma_d = sv._reconstruct_mirror(
+                    self.mirror, self.alpha_d, self.gamma_d, sv_rows, stale)
+            else:
+                # no support vectors: Alg. 6 degenerates to gamma = -y.
+                # Scatter on device (same bits as the host early-out; a
+                # rare path, so eager ops rather than a per-shape jit)
+                st = jnp.asarray(stale)
+                self.gamma_d = self.gamma_d.at[st].set(-self.y_d[st])
             return
         if sv_rows.size == 0:
             # no support vectors: Alg. 6 degenerates to gamma = -y (same
@@ -405,28 +477,33 @@ class EpochDriver:
             self.gamma[stale] = (-y[stale]).astype(np.float32)
         else:
             self.gamma[stale] = sv._reconstruct(y, self.alpha, stale)
-        if self.mirror is not None:
-            self.gamma_d = sv._put_full(self.gamma)
 
     # -- physical compaction ----------------------------------------------
-    def _compact(self, n_active: int, p: int, m_per: int):
+    def _compact(self, n_active: int, p: int, m_per: int, shard_ext=None):
         """One physical compaction — device backend by default, host
-        backend (store rebuild) as the parity oracle."""
+        backend (store rebuild) as the parity oracle. ``shard_ext`` is the
+        (p,) per-shard surviving ELL extents when the caller already has
+        them (the fused-epoch summary computes them in-dispatch via
+        ``dataplane.ell_shard_extents_dyn``); ``None`` falls back to the
+        standalone extent scan — same values by the dyn/static parity
+        contract."""
         cfg, sv = self.cfg, self.s
         t0 = time.perf_counter()
         ell = isinstance(self.data, dataplane.ELLData)
         if cfg.compact_backend == "device":
             K_new = None
             if ell:
-                # the ONE extra readback of an ELL device compaction: (p,)
-                # per-shard surviving extents — their max fixes the lane
+                # per-shard surviving extents: their max fixes the lane
                 # bucket (host-side bucket_lanes, exactly like the host
                 # rebuild buckets store.buffer_K) and the per-shard values
-                # feed FitStats.shard_K
+                # feed FitStats.shard_K. Normally these rode the epoch
+                # summary — the dedicated scan dispatch is the fallback
+                # for callers outside the fused loop
                 lane = sv._store.lane
-                shard_ext = np.asarray(dataplane.ell_shard_extents(
-                    self.data.vals, self.state.active, jnp.int32(n_active),
-                    p=p, m_per=m_per))
+                if shard_ext is None:
+                    shard_ext = np.asarray(dataplane.ell_shard_extents(
+                        self.data.vals, self.state.active,
+                        jnp.int32(n_active), p=p, m_per=m_per))
                 self._last_shard_K = tuple(
                     spfmt.round_lanes(int(e), lane) for e in shard_ext)
                 K_new = (spfmt.bucket_lanes(int(shard_ext.max()), lane,
@@ -563,6 +640,9 @@ class EpochDriver:
                                         # alpha/gamma from the masters;
                                         # _build_buffer refreshes them
                                         # itself on the host path
+            self.y_d = sv._put_full(y)  # device-side Eq. 9 (betas) reads
+                                        # the masters; it needs y in the
+                                        # same global order
 
         if act_full0 is not None and shrink_on:
             rows = np.flatnonzero(act_full0)
@@ -582,29 +662,53 @@ class EpochDriver:
         # so each chunk's flops bill only the rows actually recomputed.
         self.cache = sv._new_cache(self.data.m)
         miss_seen = 0
+        fuse = max(1, int(cfg.fuse_iters))
+        p = sv._nshards()
+        mper_lo = max(cfg.min_buffer // p, 8)   # full_m_per's clamp floor,
+                                                # for the device predicate
+        step_host = step0
 
         while True:
             tol = tol20 if (shrink_on and recon_count == 0) else tol2
             # ---- inner optimization at current tolerance ----------------
+            # Each pass dispatches ONE fused epoch of up to k_eff segments
+            # and syncs ONE EpochSummary; every decision below reads
+            # summary fields — state/cache stay on device untouched.
             while True:
                 tc = time.perf_counter()
-                step_before = int(self.state.step)
-                self.state, self.cache = runner(
+                step_before = step_host
+                # clip the segment budget to the checkpoint cadence so a
+                # fused run saves at exactly the oracle's iteration counts
+                k_eff = (heuristics.fuse_budget(fuse, ckpt_count,
+                                                cfg.checkpoint_every)
+                         if cfg.checkpoint_dir else fuse)
+                # host twin of the device compaction trigger: n_active <
+                # ceil(ratio * m) is the integer-exact form of the float
+                # compare the host loop used to do
+                compact_lt = (math.ceil(cfg.compact_ratio * self.data.m)
+                              if shrink_on else 0)
+                self.state, self.cache, summ_d = runner(
                     self.data, self.yb, self.state, self.cache, tol,
-                    min(cfg.chunk_iters,
-                        max(1, cfg.max_iters - int(self.state.step))))
-                self.state.converged.block_until_ready()
-                t_train += time.perf_counter() - tc
-                n_active = int(jnp.sum(self.state.active))
-                stats.min_active = min(stats.min_active, n_active)
+                    jnp.int32(k_eff), jnp.int32(cfg.chunk_iters),
+                    jnp.int32(cfg.max_iters), jnp.int32(compact_lt),
+                    jnp.int32(mper_lo))
+                summ = jax.device_get(summ_d)   # the one, fixed-size sync
+                dt = time.perf_counter() - tc
+                t_train += dt
+                stats.dispatches += 1
+                stats.dispatch_times.append(dt)
+                step_host = int(summ.step)
+                iters_done = step_host - step_before
+                n_active = int(summ.n_active)
+                stats.min_active = min(stats.min_active,
+                                       int(summ.min_active))
                 # hot-loop model FLOPs, selection- and cache-aware: each
                 # iteration pays the O(M) epilogue (Eq. 6 FMA; wss2 adds
                 # the second-order selection sweep), plus one kernel-row
                 # pass per row actually computed — 2/iter without the
                 # cache, the provider-miss count with it.
-                iters_done = int(self.state.step) - step_before
                 if self.cache is not None:
-                    misses_now = int(self.cache.misses)
+                    misses_now = int(summ.cache_misses)
                     rows_new = misses_now - miss_seen
                     miss_seen = misses_now
                 else:
@@ -614,7 +718,7 @@ class EpochDriver:
                                     + iters_done * epilogue) \
                     * float(self.data.m)
                 if cfg.checkpoint_dir:
-                    ckpt_count += 1
+                    ckpt_count += int(summ.segs)
                     if ckpt_count % cfg.checkpoint_every == 0:
                         self._writeback()
                         idx = self._host_idx()
@@ -622,30 +726,40 @@ class EpochDriver:
                         act_full[idx[(idx >= 0)
                                      & np.asarray(self.state.active)]] = True
                         self._save_ckpt(act_full, {
-                            "step": int(self.state.step),
-                            "shrink_events": int(self.state.n_shrinks),
+                            "step": step_host,
+                            "shrink_events": int(summ.n_shrinks),
                             "recon_count": recon_count,
                             "shrink_on": shrink_on})
-                if bool(self.state.converged) or bool(self.state.stalled) \
-                        or int(self.state.step) >= cfg.max_iters:
+                if bool(summ.converged) or bool(summ.stalled) \
+                        or step_host >= cfg.max_iters:
                     break
                 # physical compaction between chunks (DESIGN.md SS4) —
-                # moves rows in the store's native format on device
-                if shrink_on and n_active < cfg.compact_ratio * self.data.m:
-                    p = sv._nshards()
+                # the runner evaluated the trigger on device and stopped
+                # the epoch at the boundary; the host only buckets the new
+                # geometry (and, on ELL, reuses the summary's extents)
+                if bool(summ.need_compact):
                     m_per = mirror.full_m_per(n_active, p, cfg.min_buffer)
-                    if m_per * p < self.data.m:
-                        self._compact(n_active, p, m_per)
-            stalled = stalled or bool(self.state.stalled)
+                    self._compact(n_active, p, m_per,
+                                  shard_ext=np.asarray(summ.shard_ext))
+            stalled = stalled or bool(summ.stalled)
             # n_shrinks is cumulative for the whole run (carried through
             # compactions/reconstructions, restored from checkpoints), so
             # assign — a += here grew quadratically with reconstructions
             # under the Multi policy.
-            stats.shrink_events = int(self.state.n_shrinks)
-            self._writeback()
+            stats.shrink_events = int(summ.n_shrinks)
+            if self.mirror is not None:
+                # device mode: scatter the buffer into the masters and sync
+                # host alpha only (reconstruction picks the SV set on
+                # host). Host gamma stays stale — Eq. 9 below reads the
+                # masters, and full gamma is materialized once at fit exit
+                # (checkpoints sync it themselves via _writeback).
+                self._writeback_masters()
+                self.alpha = np.array(self.alpha_d)
+            else:
+                self._writeback()
 
             if not shrink_on or recon_count >= cfg.max_reconstructions \
-                    or int(self.state.step) >= cfg.max_iters:
+                    or step_host >= cfg.max_iters:
                 break
 
             # ---- gradient reconstruction + un-shrink (Alg. 5 l. 26-33) --
@@ -659,34 +773,34 @@ class EpochDriver:
             t_recon += time.perf_counter() - tr
             recon_count += 1
 
-            # optimality over ALL samples (Eq. 9)
-            b_up, b_low = betas(self.gamma, self.alpha, y, cfg.C)
+            # optimality over ALL samples (Eq. 9) — one (2,) sync either
+            # way; device mode reads the masters, never the (n,) gamma
+            if self.mirror is not None:
+                b_up, b_low = betas(self.gamma_d, self.alpha_d, self.y_d,
+                                    cfg.C)
+            else:
+                b_up, b_low = betas(self.gamma, self.alpha, y, cfg.C)
             if b_up + 2.0 * cfg.eps >= b_low:
                 self.state = self.state._replace(converged=jnp.bool_(True))
                 break
             # un-shrink: rebuild the full buffer (device mirror gather or
-            # host store rebuild); Single disables shrinking. Under wss1
-            # the row cache SURVIVES the growth: every tagged slot is
-            # rewarmed against the grown buffer with the in-loop fused
-            # two-row compute island, so tags, recency and counters carry
-            # across (exact — a later hit serves the bits an in-loop miss
-            # would have computed; enforced by the cache exactness tests).
-            # wss2 caches single-row (GEMV) computes, which XLA CPU does
-            # not codegen context-stably even behind barrier/cond islands
-            # (measured ulp drift loop-vs-standalone), so wss2 keeps the
-            # wholesale invalidation — exactness outranks warm starts.
-            step_save = int(self.state.step)
-            nshr = int(self.state.n_shrinks)
-            idx_old = idx
+            # host store rebuild); Single disables shrinking. The row
+            # cache SURVIVES the growth under BOTH selections: every
+            # tagged slot is rewarmed against the grown buffer with the
+            # exact in-loop compute island — wss1 the fused two-row pass,
+            # wss2 the duplicated-query rows2 single-row island
+            # (kernel_fns.row_via_rows2, which resolved the GEMV context
+            # instability that used to force wholesale invalidation here)
+            # — so tags, recency and counters carry across (exact: a
+            # later hit serves the bits an in-loop miss would have
+            # computed; enforced by the cache exactness tests).
+            step_save = step_host
+            nshr = int(summ.n_shrinks)
             self.data, self.yb, self.state, self.idx = self._build_buffer(
                 np.arange(n))
             if self.cache is not None:
-                if self.cfg.selection == "wss2":
-                    self.cache = rowcache.remap_cache(
-                        self.cache, idx_old, self.idx, sv._put_cache_vals)
-                else:
-                    self.cache = sv._regrow_cache(self.cache, self.data,
-                                                  True, n)
+                self.cache = sv._regrow_cache(
+                    self.cache, self.data, cfg.selection != "wss2", n)
             self._note_buffer()
             if h.policy == "single":
                 shrink_on = False
@@ -699,7 +813,11 @@ class EpochDriver:
                                              n_shrinks=jnp.int32(nshr))
 
         # ---- account ----------------------------------------------------
-        stats.iterations = int(self.state.step)
+        if self.mirror is not None:
+            # the one full (n,) gamma materialization of a device-mode fit
+            # (plus any checkpoints); alpha was synced at the epoch tail
+            self.gamma = np.array(self.gamma_d)
+        stats.iterations = step_host
         stats.reconstructions = recon_count
         stats.train_time = t_train
         stats.recon_time = t_recon

@@ -37,6 +37,22 @@ class ShrinkHeuristic:
         return max(1, int(math.ceil(self.value * n_total)))
 
 
+def fuse_budget(fuse_iters: int, ckpt_count: int, checkpoint_every: int) -> int:
+    """Segments the next fused dispatch may run without crossing a
+    checkpoint boundary.
+
+    The checkpoint cadence is counted in *segments* (one segment == one
+    legacy dispatch), so a k-segment epoch must stop exactly where the
+    k=1 oracle would have saved: min(k, segments until the next multiple
+    of ``checkpoint_every``). Always >= 1; ``checkpoint_every <= 0`` (or
+    no checkpointing) leaves k uncapped.
+    """
+    k = max(1, int(fuse_iters))
+    if checkpoint_every <= 0:
+        return k
+    return min(k, checkpoint_every - ckpt_count % checkpoint_every)
+
+
 ORIGINAL = ShrinkHeuristic("Original", "none")
 
 # Rows 2-13 of Table 3.

@@ -370,6 +370,27 @@ def recon_block(provider: "RowProvider", sv_data, Zi: jax.Array,
     return jax.lax.cond(never, lambda: zero, compute)
 
 
+def row_via_rows2(provider: "RowProvider", data, z: jax.Array) -> jax.Array:
+    """Context-stable single-row production: K(z, buffer) as column 0 of the
+    fused two-row kernel applied to a *duplicated* query — (M,).
+
+    Single-row GEMV computes are NOT context-stable on XLA CPU: the same
+    ``provider.row`` drifts by ulps between loop-body and standalone
+    contexts even behind barrier/cond islands (measured — this was the
+    reason the wss2 row cache used to be invalidated wholesale at
+    un-shrink). The rows2 GEMM *is* context-stable (the property every
+    cache exactness contract already rests on), and its columns are
+    position-symmetric (``ell_dots2`` is batch-major by construction;
+    dense GEMM columns reduce independently), so ``rows2([z; z])[:, 0]``
+    is a bit-stable single row at the cost of one redundant column. Both
+    the in-loop wss2 miss path and the rewarm scan route through this one
+    helper, which is what lets ``rowcache.regrow_cache`` carry the wss2
+    cache across un-shrink exactly like wss1.
+    """
+    z2 = jax.lax.optimization_barrier(jnp.stack([z, z]))
+    return jax.lax.optimization_barrier(provider.rows2(data, z2)[:, 0])
+
+
 def make_provider(kernel: str, fmt: str = "dense", use_pallas: bool = False,
                   inv_2s2: float = 1.0) -> RowProvider:
     """Row provider for a (kernel, storage format, backend) combination —

@@ -69,7 +69,15 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
                                selection: str = "wss1",
                                cache_slots: int = 0,
                                cache_policy: str = "lru"):
-    """shard_map SMO chunk. State scalars are replicated; arrays sharded.
+    """shard_map fused-epoch SMO runner — the distributed twin of
+    ``smo.make_chunk_runner``: one dispatch runs up to ``k`` segments of up
+    to ``chunk_iters`` iterations, evaluates the hard exits and the
+    compaction predicate on device between segments (loop control fully
+    replicated, so collective trip counts stay uniform), and returns
+    ``(state, cache, EpochSummary)`` with the (p,) ELL shard extents
+    computed under the ``need_compact`` cond in the wrapping jit. All
+    schedule scalars are traced. State scalars are replicated; arrays
+    sharded.
 
     ``fmt='ell'`` consumes block-ELL shards (vals, cols, sq); candidate rows
     are densified locally before the all_gather so the collective payload
@@ -126,7 +134,7 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
         rest = rest[7:]
         if cached:
             cache0, rest = rest[0], rest[1:]
-        tol, max_iters = rest
+        tol, k, chunk_iters, max_iters, compact_lt, mper_lo = rest
 
         if fmt == "ell":
             ldata = dataplane.ELLData(vals_l, cols_l, sq_l, n_features,
@@ -275,18 +283,65 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
             return (alpha_l, gamma_l, active_l, cache, sel, step1,
                     next_shrink, n_shrinks, conv, stalled)
 
-        def cond(carry):
-            (_, _, _, _, _, step, _, _, conv, stalled) = carry
-            return (~conv) & (~stalled) & (step - step0 < max_iters)
+        m_total = sq_l.shape[0] * p          # global buffer rows (static)
 
-        sel0 = gather_select(gamma_l, alpha_l, active_l)
-        conv0 = sel0["beta_up"] + tol >= sel0["beta_low"]
-        carry = (alpha_l, gamma_l, active_l, cache0, sel0, step0,
-                 next_shrink0, n_shrinks0, conv0, jnp.bool_(False))
-        (alpha_l, gamma_l, active_l, cache, sel, step, next_shrink,
-         n_shrinks, conv, stalled) = lax.while_loop(cond, body, carry)
-        out = (alpha_l, gamma_l, active_l, sel["beta_up"], sel["beta_low"],
-               step, next_shrink, n_shrinks, conv, stalled)
+        def run_segment(alpha_l, gamma_l, active_l, cache, step,
+                        next_shrink, n_shrinks):
+            # Segment entry == legacy dispatch entry: re-elect the global
+            # working set (replicated — all shards agree) and clear the
+            # stall latch. Loop control is replicated throughout, so the
+            # collectives inside see uniform trip counts on every shard.
+            sel0 = gather_select(gamma_l, alpha_l, active_l)
+            conv0 = sel0["beta_up"] + tol >= sel0["beta_low"]
+            start = step
+            lim = jnp.minimum(chunk_iters, jnp.maximum(1, max_iters - start))
+
+            def cond(carry):
+                (_, _, _, _, _, step, _, _, conv, stalled) = carry
+                return (~conv) & (~stalled) & (step - start < lim)
+
+            carry = (alpha_l, gamma_l, active_l, cache, sel0, step,
+                     next_shrink, n_shrinks, conv0, jnp.bool_(False))
+            return lax.while_loop(cond, body, carry)
+
+        def epoch_cond(carry):
+            segs, done = carry[11], carry[13]
+            return (~done) & (segs < k)
+
+        def epoch_body(carry):
+            (alpha_l, gamma_l, active_l, cache, step, next_shrink,
+             n_shrinks, _, _, _, _, segs, min_act, _, _, _) = carry
+            (alpha_l, gamma_l, active_l, cache, sel, step, next_shrink,
+             n_shrinks, conv, stalled) = run_segment(
+                alpha_l, gamma_l, active_l, cache, step, next_shrink,
+                n_shrinks)
+            n_act = lax.psum(jnp.sum(active_l.astype(jnp.int32)), axis)
+            min_act = jnp.minimum(min_act, n_act)
+            hard = conv | stalled | (step >= max_iters)
+            if shrink_interval > 0:
+                # device twin of the host compaction rule — see
+                # smo.make_chunk_runner; exact integer arithmetic
+                m_per_new = util.bucket_pow2_device(
+                    (n_act + p - 1) // p, mper_lo)
+                need_c = ((~hard) & (n_act < compact_lt)
+                          & (m_per_new * p < m_total))
+            else:
+                need_c = jnp.bool_(False)
+            return (alpha_l, gamma_l, active_l, cache, step, next_shrink,
+                    n_shrinks, sel["beta_up"], sel["beta_low"], conv,
+                    stalled, segs + 1, min_act, hard | need_c, need_c,
+                    n_act)
+
+        carry = (alpha_l, gamma_l, active_l, cache0, step0, next_shrink0,
+                 n_shrinks0, jnp.float32(-1.0), jnp.float32(1.0),
+                 jnp.bool_(False), jnp.bool_(False), jnp.int32(0),
+                 jnp.int32(jnp.iinfo(jnp.int32).max), jnp.bool_(False),
+                 jnp.bool_(False), jnp.int32(0))
+        (alpha_l, gamma_l, active_l, cache, step, next_shrink, n_shrinks,
+         b_up, b_low, conv, stalled, segs, min_act, _, need_c,
+         n_act) = lax.while_loop(epoch_cond, epoch_body, carry)
+        out = (alpha_l, gamma_l, active_l, b_up, b_low, step, next_shrink,
+               n_shrinks, conv, stalled, segs, min_act, need_c, n_act)
         if cached:
             out += (cache,)
         return out
@@ -308,15 +363,33 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
     in_specs += (sharded,) * 4 + (rep,) * 3
     if cached:
         in_specs += (cache_spec,)
-    in_specs += (rep, rep)
-    out_specs = (sharded, sharded, sharded) + (rep,) * 7
+    in_specs += (rep,) * 6        # tol, k, chunk_iters, max_iters,
+                                  # compact_lt, mper_lo
+    out_specs = (sharded, sharded, sharded) + (rep,) * 11
     if cached:
         out_specs += (cache_spec,)
     mapped = shard_map_compat(local_chunk, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs)
-    jitted = jax.jit(mapped)
+    p_mesh = mesh.shape[axis]
 
-    def run_chunk(data, y, state: smo.SMOState, cache, tol, max_iters: int):
+    @jax.jit
+    def epoch(*args):
+        out = mapped(*args)
+        active, need_c, n_act = out[2], out[12], out[13]
+        if fmt == "ell" and shrink_interval > 0:
+            # (p,) surviving extents ride the summary — integer-exact, so
+            # they match the single-host runner's values bit-for-bit
+            shard_ext = lax.cond(
+                need_c,
+                lambda: dataplane.ell_shard_extents_dyn(
+                    args[0], active, n_act, p_mesh),
+                lambda: jnp.zeros((p_mesh,), jnp.int32))
+        else:
+            shard_ext = jnp.zeros((p_mesh,), jnp.int32)
+        return out + (shard_ext,)
+
+    def run_epoch(data, y, state: smo.SMOState, cache, tol, k, chunk_iters,
+                  max_iters, compact_lt, mper_lo):
         dargs = ((data.vals, data.cols, data.sq_norms) if fmt == "ell"
                  else (data.X, data.sq_norms))
         if cached:
@@ -325,17 +398,28 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
                         state.step, state.next_shrink, state.n_shrinks)
         if cached:
             args += (cache,)
-        args += (tol, jnp.int32(max_iters))
-        out = jitted(*args)
+        args += (tol, jnp.int32(k), jnp.int32(chunk_iters),
+                 jnp.int32(max_iters), jnp.int32(compact_lt),
+                 jnp.int32(mper_lo))
+        out = epoch(*args)
         (alpha, gamma, active, b_up, b_low, step, next_shrink, n_shrinks,
-         conv, stalled) = out[:10]
-        cache_out = out[10] if cached else None
+         conv, stalled, segs, min_act, need_c, n_act) = out[:14]
+        cache_out = out[14] if cached else None
+        shard_ext = out[-1]
+        summ = smo.EpochSummary(
+            step=step, segs=segs, n_active=n_act, min_active=min_act,
+            n_shrinks=n_shrinks, converged=conv, stalled=stalled,
+            need_compact=need_c,
+            cache_hits=cache_out.hits if cached else jnp.int32(0),
+            cache_misses=cache_out.misses if cached else jnp.int32(0),
+            shard_ext=shard_ext)
         return state._replace(
             alpha=alpha, gamma=gamma, active=active, beta_up=b_up,
             beta_low=b_low, step=step, next_shrink=next_shrink,
-            n_shrinks=n_shrinks, converged=conv, stalled=stalled), cache_out
+            n_shrinks=n_shrinks, converged=conv, stalled=stalled), \
+            cache_out, summ
 
-    return run_chunk
+    return run_epoch
 
 
 def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,

@@ -91,6 +91,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import kernel_fns
+
 
 POLICIES = ("lru", "slru")
 
@@ -249,8 +251,12 @@ def make_accessors(provider, data, cached: bool, never: jax.Array,
     False.
     """
     def get_row1(c, gid, z):
-        compute = lambda: lax.optimization_barrier(
-            provider.row(data, lax.optimization_barrier(z)))
+        # Single rows go through the duplicated-query rows2 GEMM
+        # (kernel_fns.row_via_rows2) rather than provider.row: the GEMV is
+        # not context-stable on XLA CPU, the GEMM is — which is what lets
+        # the wss2 cache be rewarmed across un-shrink with the exact bits
+        # an in-loop miss would produce (see warm_vals).
+        compute = lambda: kernel_fns.row_via_rows2(provider, data, z)
         if cached:
             return get_row(c, gid, compute, policy)
         zero = jnp.zeros_like(data.sq_norms)
@@ -302,11 +308,14 @@ def warm_vals(provider, data, zq: jax.Array, tags: jax.Array,
     Shard-local (no collectives), so the parallel solver can run it
     under shard_map on the local buffer view.
 
-    CAVEAT: only the ``pairs`` (rows2 GEMM) path is context-stable on XLA
-    CPU — single-row GEMV computes drift by ulps between loop and
-    standalone contexts even behind barrier/cond islands (measured), so
-    the driver rewarms only under wss1 and keeps wholesale invalidation
-    for wss2, where exactness would otherwise break.
+    Context stability: single-row GEMV computes were *measured* to drift
+    by ulps between loop and standalone contexts on XLA CPU even behind
+    barrier/cond islands, which used to force wholesale invalidation of
+    the wss2 cache at un-shrink. Resolved by producing single rows
+    through the duplicated-query rows2 GEMM (``kernel_fns.row_via_rows2``
+    — the context-stable, position-symmetric shape): the non-``pairs``
+    path here and the in-loop wss2 miss path (``make_accessors``) share
+    that one helper, so wss2 now rewarms exactly like wss1.
     """
     m = data.sq_norms.shape[0]
     S = tags.shape[0]
@@ -323,8 +332,8 @@ def warm_vals(provider, data, zq: jax.Array, tags: jax.Array,
         vals = out.reshape(S, m)
     else:
         def step(c, s):
-            compute = lambda: lax.optimization_barrier(
-                provider.row(data, lax.optimization_barrier(zq[s])))
+            # same compute island as the in-loop wss2 miss path
+            compute = lambda: kernel_fns.row_via_rows2(provider, data, zq[s])
             row = lax.cond(
                 never, lambda: jnp.zeros((m,), jnp.float32), compute)
             return c, row

@@ -1,7 +1,8 @@
-"""SMO (Keerthi Modification-2) inner loop with in-loop adaptive shrinking.
+"""SMO (Keerthi Modification-2) fused-epoch inner loop with in-loop
+adaptive shrinking.
 
 Implements the paper's Algorithm 1 (sequential view) as a jit-compiled
-``lax.while_loop`` chunk. One iteration:
+``lax.while_loop``. One iteration:
 
   1. working-set selection (Eq. 8): worst KKT violators over the *active* set,
   2. analytic pair update (Eq. 11/12) with joint box clipping (Eq. 2),
@@ -9,14 +10,53 @@ Implements the paper's Algorithm 1 (sequential view) as a jit-compiled
   4. shrink rule (Eq. 10) when the heuristic counter fires (Alg. 4),
   5. optimality test (Eq. 9).
 
+Fused multi-iteration epochs
+----------------------------
+One dispatch of the runner built by :func:`make_chunk_runner` executes up
+to ``k`` *segments*. Each segment is exactly one legacy chunk: selection
+re-establishment at entry, then up to ``chunk_iters`` iterations in the
+inner ``lax.while_loop`` carrying the full (SMOState, RowCache) pytree.
+Between segments an *outer* while loop evaluates, on device, every
+decision the host used to read scalars back for: the hard exits
+(Eq. 9 convergence, the stall guard, the global iteration budget) and the
+physical-compaction predicate — ``n_active < compact_lt`` with
+``compact_lt = ceil(compact_ratio * m)`` plus "the rebuilt buffer would
+really be smaller", both exact integer twins of the host rule
+(:func:`repro.core.util.bucket_pow2_device`). The dispatch returns a
+fixed-size :class:`EpochSummary`; the host reads THAT, once, and nothing
+else.
+
+Dispatch timeline (device above the line, host below)::
+
+        +-- seg 1 --+-- seg 2 --+ ... +-- seg s --+ summary
+        | select_pair re-establish; <= chunk_iters iterations;
+        | post-segment exit tests: converged | stalled |
+        | step >= max_iters | need_compact  -> stop fusing
+  ------+-------------------------------------------------+---------
+   one jit dispatch; k, chunk_iters,          one EpochSummary readback:
+   max_iters, compact_lt, mper_lo all         step / segs / n_active /
+   ride as TRACED i32 scalars                 min_active / n_shrinks /
+                                              converged / stalled /
+                                              need_compact / cache hits+
+                                              misses / (p,) shard_ext
+   host decides only at epoch boundaries: checkpoint save, compaction
+   geometry (n_active + shard_ext from the summary), reconstruction.
+
+Because every schedule scalar is traced, ``fuse_iters=1`` runs the SAME
+XLA executable as any k>1 — one executable per buffer geometry serves
+every schedule, so the bit-exact k>1 == k=1 contract reduces to segment
+*scheduling*: the device stops fusing exactly where the legacy host loop
+would have intervened (hard exit or compaction), and the driver aligns
+checkpoint boundaries via ``heuristics.fuse_budget``.
+
 Shapes are static under jit: shrinking inside the chunk is *mask-based*
 (restricts selection, as in the paper); the FLOP reduction the paper gets
-from eliminating samples is realized by *physical compaction* between chunks
-(see ``driver.py`` — a device-side gather), because XLA requires static
-shapes. gamma is maintained
-for every sample currently resident in the (compacted) buffer — the paper
-makes the same choice ("gamma ... is maintained for all the samples in the
-training set/non-shrunk samples", Sec. 2.2.1).
+from eliminating samples is realized by *physical compaction* between
+dispatches (see ``driver.py`` — a device-side gather), because XLA
+requires static shapes. gamma is maintained for every sample currently
+resident in the (compacted) buffer — the paper makes the same choice
+("gamma ... is maintained for all the samples in the training
+set/non-shrunk samples", Sec. 2.2.1).
 """
 from __future__ import annotations
 
@@ -27,7 +67,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import kernel_fns, rowcache
+from repro.core import dataplane, kernel_fns, rowcache, util
 
 _INF = jnp.float32(jnp.inf)
 _TAU = 1e-12  # libsvm-style guard for non-PD pair curvature
@@ -51,6 +91,27 @@ class SMOState(NamedTuple):
     n_shrinks: jax.Array    # i32, shrink events so far (this chunk run)
     converged: jax.Array    # bool — Eq. 9 at the chunk's tolerance
     stalled: jax.Array      # bool — progress guard tripped
+
+
+class EpochSummary(NamedTuple):
+    """Fixed-size per-dispatch readback of the fused epoch runner — the
+    ONLY host<->device traffic of the optimization hot loop. Every
+    decision the driver makes between dispatches (hard exit, checkpoint
+    save, compaction geometry) is a function of these scalars plus the
+    (p,) shard extents; buffer arrays cross the link only at checkpoint
+    and reconstruction boundaries."""
+    step: jax.Array          # i32 — global iteration counter after the epoch
+    segs: jax.Array          # i32 — segments actually run (<= k)
+    n_active: jax.Array      # i32 — active count after the last segment
+    min_active: jax.Array    # i32 — min of the per-segment active counts
+    n_shrinks: jax.Array     # i32 — cumulative shrink events
+    converged: jax.Array     # bool — Eq. 9 at the dispatch tolerance
+    stalled: jax.Array       # bool — progress guard tripped
+    need_compact: jax.Array  # bool — device-evaluated compaction predicate
+    cache_hits: jax.Array    # i32 — cumulative row-cache hits (0: cache off)
+    cache_misses: jax.Array  # i32 — cumulative row-cache misses
+    shard_ext: jax.Array     # (p,) i32 — per-shard surviving ELL extents,
+                             # computed only when need_compact (else zeros)
 
 
 def select_pair(gamma: jax.Array, alpha: jax.Array, y: jax.Array,
@@ -131,9 +192,24 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
                       shrink_interval: int, use_pallas: bool = False,
                       shrink_min_interval: int = 1, selection: str = "wss1",
                       fmt: str = "dense", cache_slots: int = 0,
-                      cache_policy: str = "lru"):
-    """Build the jitted chunk: run up to ``max_iters`` SMO iterations or until
-    beta_up + tol >= beta_low over the active set.
+                      cache_policy: str = "lru", nshards: int = 1):
+    """Build the jitted fused-epoch runner::
+
+        state, cache, summary = run_epoch(data, y, state, cache, tol,
+                                          k, chunk_iters, max_iters,
+                                          compact_lt, mper_lo)
+
+    which runs up to ``k`` segments of up to ``chunk_iters`` SMO
+    iterations each — stopping a segment on beta_up + tol >= beta_low
+    over the active set (Eq. 9) or the stall guard, and stopping the
+    epoch on any hard exit or the moment the device-side compaction
+    predicate fires (see module docstring). All six schedule scalars are
+    traced i32/f32, so one executable per buffer geometry serves every
+    schedule — ``fuse_iters=1`` and ``fuse_iters=k`` literally share code.
+
+    ``nshards`` (static) is the shard count the compaction predicate and
+    the (p,) ``shard_ext`` summary lane are computed for; the single-host
+    solver passes 1.
 
     ``shrink_interval`` <= 0 disables in-loop shrinking (the paper's
     "Original" baseline, Alg. 3). The next shrink fires after
@@ -175,15 +251,11 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
     provider = kernel_fns.make_provider(kernel, fmt, use_pallas, inv_2s2)
     cached = cache_slots > 0
 
-    @functools.partial(jax.jit, static_argnames=("max_iters",),
-                       donate_argnums=(2, 3))
-    def run_chunk(data, y, state: SMOState, cache, tol: jax.Array,
-                  max_iters: int):
-        start = state.step
-
-        def cond(carry):
-            s, _ = carry
-            return (~s.converged) & (~s.stalled) & (s.step - start < max_iters)
+    @functools.partial(jax.jit, donate_argnums=(2, 3))
+    def run_epoch(data, y, state: SMOState, cache, tol: jax.Array,
+                  k: jax.Array, chunk_iters: jax.Array, max_iters: jax.Array,
+                  compact_lt: jax.Array, mper_lo: jax.Array):
+        m = data.m
 
         if selection == "wss2":
             kdiag = provider.diag(data)
@@ -289,17 +361,81 @@ def make_chunk_runner(kernel: str, C: float, inv_2s2: float,
                              step1, next_shrink, n_shrinks, converged,
                              stalled), c)
 
-        s = state
-        # (Re)establish selection/convergence for the current buffer before
-        # looping — the driver may have compacted/reconstructed since the
-        # last chunk.
-        b_up, i_up, b_low, i_low = select_pair(s.gamma, s.alpha, y, s.active, C)
-        s = s._replace(beta_up=b_up, i_up=i_up, beta_low=b_low, i_low=i_low,
-                       converged=b_up + tol >= b_low,
-                       stalled=jnp.bool_(False))
-        return lax.while_loop(cond, body, (s, cache))
+        def run_segment(s: SMOState, c):
+            # Segment entry == legacy dispatch entry: (re)establish
+            # selection/convergence for the current buffer and clear the
+            # stall latch. Idempotent for a continuing segment (the body
+            # just ended on the same select_pair over the same state) and
+            # exactly the old semantics after a host-side compaction or
+            # reconstruction.
+            b_up, i_up, b_low, i_low = select_pair(s.gamma, s.alpha, y,
+                                                   s.active, C)
+            s = s._replace(beta_up=b_up, i_up=i_up, beta_low=b_low,
+                           i_low=i_low, converged=b_up + tol >= b_low,
+                           stalled=jnp.bool_(False))
+            start = s.step
+            # The host used to size each dispatch as
+            # min(chunk_iters, max(1, max_iters - step)); same rule, traced.
+            lim = jnp.minimum(chunk_iters, jnp.maximum(1, max_iters - start))
 
-    return run_chunk
+            def cond(carry):
+                s, _ = carry
+                return (~s.converged) & (~s.stalled) & (s.step - start < lim)
+
+            return lax.while_loop(cond, body, (s, c))
+
+        def epoch_cond(carry):
+            _, _, segs, _, done, _, _ = carry
+            return (~done) & (segs < k)
+
+        def epoch_body(carry):
+            s, c, segs, min_act, _, _, _ = carry
+            s, c = run_segment(s, c)
+            n_act = jnp.sum(s.active).astype(jnp.int32)
+            min_act = jnp.minimum(min_act, n_act)
+            hard = s.converged | s.stalled | (s.step >= max_iters)
+            if shrink_interval > 0:
+                # Device twin of the host compaction test: n_active below
+                # ceil(compact_ratio * m) AND the rebuilt buffer would be
+                # genuinely smaller after per-shard pow2 bucketing. Exact
+                # integer arithmetic on both sides, so the epoch stops
+                # fusing precisely where the legacy host loop compacted.
+                m_per_new = util.bucket_pow2_device(
+                    (n_act + nshards - 1) // nshards, mper_lo)
+                need_c = ((~hard) & (n_act < compact_lt)
+                          & (m_per_new * nshards < m))
+            else:
+                need_c = jnp.bool_(False)
+            return (s, c, segs + 1, min_act, hard | need_c, need_c, n_act)
+
+        carry0 = (state, cache, jnp.int32(0),
+                  jnp.int32(jnp.iinfo(jnp.int32).max), jnp.bool_(False),
+                  jnp.bool_(False), jnp.int32(0))
+        s, c, segs, min_act, _, need_c, n_act = lax.while_loop(
+            epoch_cond, epoch_body, carry0)
+
+        if fmt == "ell" and shrink_interval > 0:
+            # (p,) surviving extents ride the summary so an ELL compaction
+            # needs no extra readback dispatch; computed only when the
+            # predicate fired (the cond keeps the scan off the hot exit).
+            shard_ext = lax.cond(
+                need_c,
+                lambda: dataplane.ell_shard_extents_dyn(
+                    data.vals, s.active, n_act, nshards),
+                lambda: jnp.zeros((nshards,), jnp.int32))
+        else:
+            shard_ext = jnp.zeros((nshards,), jnp.int32)
+
+        summ = EpochSummary(
+            step=s.step, segs=segs, n_active=n_act, min_active=min_act,
+            n_shrinks=s.n_shrinks, converged=s.converged,
+            stalled=s.stalled, need_compact=need_c,
+            cache_hits=c.hits if cached else jnp.int32(0),
+            cache_misses=c.misses if cached else jnp.int32(0),
+            shard_ext=shard_ext)
+        return s, c, summ
+
+    return run_epoch
 
 
 def init_state(alpha: jax.Array, gamma: jax.Array,

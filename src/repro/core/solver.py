@@ -92,13 +92,25 @@ class SVMConfig:
                                  # chunks let physical compaction engage
                                  # sooner (-16% gamma-update FLOPs measured
                                  # on a9a; EXPERIMENTS.md section Perf/SVM-2)
+    fuse_iters: int = 1          # segments (of up to chunk_iters iterations
+                                 # each) fused into ONE device dispatch; the
+                                 # epoch summary is the only readback. 1 =
+                                 # one segment per dispatch — the bit-exact
+                                 # parity oracle for every k > 1 (same XLA
+                                 # executable; k rides as a traced scalar).
+                                 # Raise to amortize dispatch latency once
+                                 # per-iteration compute is small (see
+                                 # benchmarks/sparse_bench.py --epoch-out)
     compact_ratio: float = 0.55  # compact buffer when active fraction < this
     min_buffer: int = 256
     recon_eps_factor: float = 20.0  # Alg. 5 line 7 first-reconstruction gate
     use_pallas: bool = False
     max_reconstructions: int = 64   # safety bound for Multi
     checkpoint_dir: "str | None" = None  # save SMO state between chunks
-    checkpoint_every: int = 1       # in chunks
+    checkpoint_every: int = 1       # in chunks (= fused-epoch segments);
+                                    # fused dispatches clip their segment
+                                    # budget to this cadence, so save
+                                    # points match the fuse_iters=1 oracle
     resume: bool = False            # restore from checkpoint_dir if present
 
     @property

@@ -6,8 +6,19 @@ blocks): bucketing keeps the XLA executable cache at O(log N) entries per
 runner instead of one per distinct size. The three hand-rolled copies that
 used to live in ``solver``, ``parallel`` and ``reconstruct`` are
 consolidated here so the rounding semantics cannot drift apart.
+
+The ``*_device`` twins below are the jit-traceable versions of the same
+rules, used by the fused epoch runner to evaluate the compaction predicate
+(``need_compact``) on device without a host round-trip. They must agree
+with the host functions on every int32 input — the fused runner exits its
+segment loop exactly when the host would have compacted, so a single
+disagreement desynchronizes the k>1 trajectory from the k=1 oracle
+(``tests/test_fused_epoch.py`` sweeps the equivalence).
 """
 from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
 
 
 def next_pow2(n: int) -> int:
@@ -25,3 +36,19 @@ def bucket_pow2(n: int, lo: int, hi: int = 1 << 30) -> int:
     if n <= 0:
         return lo
     return min(max(lo, next_pow2(n)), hi)
+
+
+def next_pow2_device(n: jax.Array) -> jax.Array:
+    """Traced int32 twin of :func:`next_pow2` (bit-smear cascade — exact
+    integer arithmetic, no float rounding). Valid for n < 2**30."""
+    v = jnp.maximum(n.astype(jnp.int32), 1) - 1
+    for sh in (1, 2, 4, 8, 16):
+        v = v | (v >> sh)
+    return v + 1
+
+
+def bucket_pow2_device(n: jax.Array, lo: jax.Array,
+                       hi: int = 1 << 30) -> jax.Array:
+    """Traced int32 twin of :func:`bucket_pow2`; same clamp semantics."""
+    p2 = next_pow2_device(n)
+    return jnp.where(n <= 0, lo, jnp.minimum(jnp.maximum(lo, p2), hi))

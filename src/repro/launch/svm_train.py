@@ -13,6 +13,12 @@ def main():
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--eps", type=float, default=1e-3)
     ap.add_argument("--chunk-iters", type=int, default=256)
+    ap.add_argument("--fuse-iters", type=int, default=1,
+                    help="SMO segments fused into one device dispatch "
+                         "(each up to --chunk-iters iterations); the host "
+                         "reads back one fixed-size summary per dispatch. "
+                         "Any value is bit-identical to 1 — raise it to "
+                         "amortize dispatch overhead on small problems")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--parallel", action="store_true",
@@ -52,6 +58,7 @@ def main():
     X, y, Xt, yt = make(args.dataset, scale=args.scale, seed=0)
     cfg = SVMConfig(C=spec.C, sigma2=spec.sigma2, eps=args.eps,
                     heuristic=args.heuristic, chunk_iters=args.chunk_iters,
+                    fuse_iters=args.fuse_iters,
                     checkpoint_dir=args.ckpt_dir, resume=args.resume,
                     use_pallas=args.use_pallas, format=args.format,
                     selection=args.selection, row_cache=args.row_cache,

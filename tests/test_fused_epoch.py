@@ -1,0 +1,211 @@
+"""Fused multi-iteration device epochs (``SVMConfig.fuse_iters``).
+
+The contract under test: any ``fuse_iters`` k produces the bit-identical
+trajectory of the k=1 oracle — same iteration count, same shrink events,
+same reconstructions, same alpha BITS — because all schedule scalars are
+traced (one XLA executable per buffer geometry, for every k) and the
+host's legacy per-chunk decisions (convergence, compaction trigger,
+checkpoint cadence) are replayed exactly on device between segments.
+Satellites ride along: the segment/checkpoint alignment rule
+(``heuristics.fuse_budget``), the device twins of the host scheduling
+arithmetic (``util.bucket_pow2_device``, ``dataplane.ell_shard_extents_dyn``),
+and save -> resume landing mid-epoch-schedule.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import SMOSolver, SVMConfig
+from repro.core import dataplane, heuristics, util
+from repro.data import make_sparse
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# shrink-heavy config: converges ~1.3k iters with 2 compactions and >= 2
+# reconstructions under multi5pc, so a fused run crosses every epoch-cycle
+# boundary (shrink, compact, reconstruct, un-shrink) the driver has
+SHRINKY = dict(C=2.0, sigma2=40.0, heuristic="multi5pc", chunk_iters=64,
+               min_buffer=64, eps=1e-3)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_sparse(600, 300, 0.05, seed=3, noise=0.05, label_noise=0.0,
+                       margin=0.5)
+
+
+def _fit(X, y, k, **kw):
+    return SMOSolver(SVMConfig(fuse_iters=k, **SHRINKY, **kw)).fit(X, y)
+
+
+# ---------------------------------------------------------------- parity --
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+@pytest.mark.parametrize("cache", [False, True])
+@pytest.mark.parametrize("sel", ["wss1", "wss2"])
+def test_bitwise_parity_vs_k1_oracle(data, fmt, cache, sel):
+    X, y = data
+    kw = dict(format=fmt, selection=sel)
+    if cache:
+        kw.update(row_cache=True, row_cache_slots=128)
+    oracle = _fit(X, y, 1, **kw)
+    assert oracle.stats.converged
+    assert oracle.stats.compactions >= 1          # the run exercises Alg. 5
+    assert oracle.stats.reconstructions >= 1
+    assert oracle.stats.dispatches >= oracle.stats.iterations \
+        // SHRINKY["chunk_iters"]
+    for k in (4, 32):
+        m = _fit(X, y, k, **kw)
+        assert m.stats.iterations == oracle.stats.iterations
+        assert m.stats.shrink_events == oracle.stats.shrink_events
+        assert m.stats.reconstructions == oracle.stats.reconstructions
+        assert m.stats.compactions == oracle.stats.compactions
+        assert m.stats.min_active == oracle.stats.min_active
+        assert m.stats.cache_hits == oracle.stats.cache_hits
+        assert np.array_equal(m.alpha.view(np.int32),
+                              oracle.alpha.view(np.int32)), (fmt, cache, sel, k)
+        assert m.beta == oracle.beta
+        # the fusion actually fused: strictly fewer host round-trips
+        assert m.stats.dispatches < oracle.stats.dispatches
+        assert len(m.stats.dispatch_times) == m.stats.dispatches
+
+
+def test_parallel_fused_parity_4dev(data):
+    code = """
+        import numpy as np
+        from repro.core import SVMConfig
+        from repro.core.parallel import ParallelSMOSolver
+        from repro.data import make_sparse
+        X, y = make_sparse(600, 300, 0.05, seed=3, noise=0.05,
+                           label_noise=0.0, margin=0.5)
+        kw = dict(C=2.0, sigma2=40.0, heuristic='multi5pc', chunk_iters=64,
+                  min_buffer=64, eps=1e-3)
+        for fmt in ('dense', 'ell'):
+            m1 = ParallelSMOSolver(
+                SVMConfig(fuse_iters=1, format=fmt, **kw)).fit(X, y)
+            m8 = ParallelSMOSolver(
+                SVMConfig(fuse_iters=8, format=fmt, **kw)).fit(X, y)
+            assert m1.stats.compactions >= 1, fmt
+            assert m8.stats.iterations == m1.stats.iterations, fmt
+            assert m8.stats.shrink_events == m1.stats.shrink_events, fmt
+            assert np.array_equal(m8.alpha.view(np.int32),
+                                  m1.alpha.view(np.int32)), fmt
+            assert m8.stats.dispatches < m1.stats.dispatches, fmt
+        print('PARITY_OK')
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PARITY_OK" in out.stdout
+
+
+# ------------------------------------------------------- checkpoint align --
+def test_fused_checkpoint_schedule_matches_oracle(tmp_path, data):
+    """A fused run must SAVE at exactly the oracle's iteration counts: the
+    segment budget of each dispatch is clipped to the checkpoint cadence,
+    never the other way around."""
+    X, y = data
+    d1, d8 = str(tmp_path / "k1"), str(tmp_path / "k8")
+    os.makedirs(d1), os.makedirs(d8)
+    m1 = SMOSolver(SVMConfig(fuse_iters=1, checkpoint_dir=d1,
+                             checkpoint_every=4, **SHRINKY)).fit(X, y)
+    m8 = SMOSolver(SVMConfig(fuse_iters=8, checkpoint_dir=d8,
+                             checkpoint_every=4, **SHRINKY)).fit(X, y)
+    assert m8.stats.iterations == m1.stats.iterations
+    saves1 = sorted(os.listdir(d1))
+    saves8 = sorted(os.listdir(d8))
+    assert saves1 and saves1 == saves8
+
+
+def test_fused_resume_lands_mid_schedule(tmp_path, data):
+    """Interrupt a fuse_iters=8 run mid-epoch-schedule (max_iters lands
+    inside a would-be-fused dispatch) and resume: the continuation must
+    converge on the uninterrupted fused trajectory."""
+    X, y = data
+    full = _fit(X, y, 8)
+    assert full.stats.converged
+    d = str(tmp_path)
+    cut = int(full.stats.iterations * 0.6)
+    m1 = SMOSolver(SVMConfig(fuse_iters=8, checkpoint_dir=d,
+                             checkpoint_every=3, max_iters=cut,
+                             **SHRINKY)).fit(X, y)
+    assert m1.stats.iterations <= cut < full.stats.iterations
+    m2 = SMOSolver(SVMConfig(fuse_iters=8, checkpoint_dir=d,
+                             checkpoint_every=3, resume=True,
+                             **SHRINKY)).fit(X, y)
+    assert m2.stats.converged
+    assert m2.stats.iterations == full.stats.iterations
+    assert m2.stats.shrink_events == full.stats.shrink_events
+    np.testing.assert_allclose(m2.alpha, full.alpha, atol=1e-6)
+
+
+def test_fuse_budget_never_skips_boundary():
+    """Property test: for ANY (fuse_iters, cadence) the fused scheduler
+    produces exactly the oracle's save points — no Alg. 5 checkpoint
+    boundary ever falls strictly inside a dispatch."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=300, deadline=None)
+    @given(fuse=st.integers(1, 64), every=st.integers(1, 16),
+           ckpt=st.integers(0, 10_000), total=st.integers(1, 500))
+    def prop(fuse, every, ckpt, total):
+        b = heuristics.fuse_budget(fuse, ckpt, every)
+        assert 1 <= b <= max(1, fuse)
+        # no boundary strictly inside the dispatch...
+        assert all((ckpt + s) % every != 0 for s in range(1, b))
+        # ...and the budget is maximal: full k, or ends ON a boundary
+        assert b == max(1, fuse) or (ckpt + b) % every == 0
+        # end-to-end: replay a run of `total` segments; the fused save
+        # points must equal the one-segment-per-dispatch oracle's
+        done, saves = 0, []
+        while done < total:
+            segs = min(heuristics.fuse_budget(fuse, done, every),
+                       total - done)         # run may hard-exit early
+            done += segs
+            if done % every == 0:
+                saves.append(done)
+        assert saves == [s for s in range(1, total + 1) if s % every == 0]
+
+    prop()
+    # cadence off -> uncapped
+    assert heuristics.fuse_budget(7, 123, 0) == 7
+    assert heuristics.fuse_budget(0, 0, 5) == 1
+
+
+# ------------------------------------------------------------ device twins --
+def test_bucket_pow2_device_matches_host():
+    import jax.numpy as jnp
+    ns = list(range(0, 300)) + [511, 512, 513, 1023, 1024, 1025,
+                                (1 << 20) - 1, 1 << 20, (1 << 20) + 1]
+    for lo in (1, 8, 24, 64):
+        got = np.asarray(util.bucket_pow2_device(
+            jnp.asarray(ns, jnp.int32), jnp.int32(lo)))
+        want = np.array([util.bucket_pow2(n, lo) for n in ns], np.int32)
+        np.testing.assert_array_equal(got, want, err_msg=f"lo={lo}")
+
+
+def test_ell_shard_extents_dyn_matches_static():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    for p in (1, 2, 4):
+        for _ in range(6):
+            m_per = int(rng.integers(4, 40))
+            m, K = p * m_per, int(rng.integers(1, 9))
+            vals = (rng.random((m, K)).astype(np.float32)
+                    * (rng.random((m, K)) < 0.6))
+            keep = rng.random(m) < 0.5
+            n_act = jnp.int32(int(keep.sum()))
+            want = np.asarray(dataplane.ell_shard_extents(
+                jnp.asarray(vals), jnp.asarray(keep), n_act,
+                p=p, m_per=m_per))
+            got = np.asarray(dataplane.ell_shard_extents_dyn(
+                jnp.asarray(vals), jnp.asarray(keep), n_act, p))
+            np.testing.assert_array_equal(got, want, err_msg=f"p={p}")
