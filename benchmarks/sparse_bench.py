@@ -66,13 +66,30 @@ varies is how many per-dispatch host round-trips (launch + one
 over. us/iter should fall monotonically to the amortization knee, where
 dispatch overhead stops being a measurable share of an iteration; on CPU
 the sync is cheap, so across PCIe/ICI the knee sits at larger k.
+
+Serving sweep (``--serve-out`` -> ``BENCH_serve.json``): the inference
+plane (``core/serve.ServeEngine``) against the seed-era host block loop
+(``decision_function_host``) across batch size x SV count x storage format
+x SV dtype. Reports p50/p99 latency, QPS and us/query for both paths, the
+engine's roofline terms for the hot bucket executable
+(``launch/roofline.py`` pricing), and asserts en passant: engine-vs-host
+score parity, engine wins on us/query at batch >= 64, compacted-vs-full
+score parity, and (in a 4-device subprocess) sharded-vs-single-device
+parity.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
 
-from repro.core import SMOSolver, SVMConfig
+import numpy as np
+
+from repro.core import ServeEngine, SMOSolver, SVMConfig
 from repro.data import make_repeat_heavy, make_sparse
 
 DENSITIES = (0.01, 0.05, 0.25)
@@ -339,6 +356,133 @@ def bench_epoch(sizes=(1536, 3072), d: int = 384, density: float = 0.05,
     return records
 
 
+SERVE_BATCHES = (16, 64, 256, 1024)
+
+
+def _percentiles(fn, repeats: int) -> tuple[float, float]:
+    lat = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        lat.append(time.perf_counter() - t0)
+    lat = np.asarray(lat)
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+def _assert_sharded_parity(seed: int, n: int, d: int, density: float,
+                           eps: float) -> float:
+    """Run the 4-device sharded engine in a subprocess (the parent keeps
+    one device) and return its max abs deviation from the host oracle."""
+    code = f"""
+        import numpy as np
+        from repro.core import ServeEngine, SMOSolver, SVMConfig
+        from repro.data import make_sparse
+        X, y = make_sparse({n}, {d}, {density}, seed={seed}, noise=0.05,
+                           label_noise=0.0, margin=0.5)
+        m = SMOSolver(SVMConfig(C=2.0, sigma2={float(d) / 8.0}, eps={eps},
+                                heuristic="multi5pc", chunk_iters=64,
+                                min_buffer=64)).fit(X, y)
+        rng = np.random.default_rng(0)
+        Z = X[rng.integers(0, len(X), 256)].astype(np.float32)
+        ref = m.decision_function_host(Z)
+        got = ServeEngine(m, shards=4).decision_function(Z)
+        print("MAXDIFF", float(np.abs(got - ref).max()))
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(os.path.dirname(
+                   os.path.dirname(os.path.abspath(__file__))), "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    diff = float(out.stdout.strip().split("MAXDIFF")[-1])
+    assert diff < 1e-3, f"sharded engine diverged: {diff}"
+    return diff
+
+
+def bench_serve(sizes=(1024, 3072), d: int = 384, density: float = 0.05,
+                eps: float = 1e-3, seed: int = 3, batches=SERVE_BATCHES,
+                repeats: int = 20, host_repeats: int = 3) -> list[dict]:
+    """Engine vs host-loop serving latency (see module doc).
+
+    The host path is timed exactly as the seed shipped it — the
+    ``decision_function_host`` block loop re-jits per call — because that
+    call is what the engine replaces as the model's ``decision_function``.
+    """
+    records = []
+    sharded_diff = None
+    for n in sizes:
+        X, y = make_sparse(n, d, density, seed=seed, noise=0.05,
+                           label_noise=0.0, margin=0.5)
+        rng = np.random.default_rng(seed)
+        for fmt in ("dense", "ell"):
+            cfg = SVMConfig(C=2.0, sigma2=float(d) / 8.0, eps=eps,
+                            heuristic="multi5pc", chunk_iters=64,
+                            min_buffer=64, format=fmt)
+            m = SMOSolver(cfg).fit(X, y)
+            mc = m.compact()
+            for dtype in ("float32", "bfloat16"):
+                eng = ServeEngine(m, dtype=dtype)
+                engc = ServeEngine(mc, dtype=dtype)
+                for b in batches:
+                    Z = X[rng.integers(0, n, b)].astype(np.float32)
+                    ref = m.decision_function_host(Z)
+                    got = eng.decision_function(Z)      # warms the bucket
+                    tol = 6e-2 if dtype == "bfloat16" else 1e-3
+                    err = float(np.abs(got - ref).max())
+                    assert err < tol, (fmt, dtype, b, err)
+                    # compacted artifact scores like the full model
+                    errc = float(np.abs(engc.decision_function(Z)
+                                        - got).max())
+                    assert errc < 1e-4, (fmt, dtype, b, errc)
+                    p50, p99 = _percentiles(
+                        lambda: eng.decision_function(Z), repeats)
+                    h50, _ = _percentiles(
+                        lambda: m.decision_function_host(Z), host_repeats)
+                    rf = eng.roofline(eng._bucket_of(b)).row()
+                    rec = {
+                        "n": n, "d": d, "fmt": fmt, "dtype": dtype,
+                        "batch": b, "n_sv": eng.n_sv, "m_pad": eng.m_pad,
+                        "n_sv_compact": engc.n_sv,
+                        "sv_bytes": eng.memory_bytes(),
+                        "p50_us": p50 * 1e6, "p99_us": p99 * 1e6,
+                        "qps": b / p50,
+                        "us_per_query": p50 * 1e6 / b,
+                        "host_us_per_query": h50 * 1e6 / b,
+                        "speedup_vs_host": h50 / p50,
+                        "max_abs_err_vs_host": err,
+                        "roofline": {k: rf[k] for k in
+                                     ("t_compute_s", "t_memory_s",
+                                      "dominant", "useful_ratio")},
+                    }
+                    records.append(rec)
+                    # acceptance: the engine must win at production batches
+                    if b >= 64 and dtype == "float32":
+                        assert rec["speedup_vs_host"] > 1.0, rec
+    sharded_diff = _assert_sharded_parity(seed, sizes[0], d, density, eps)
+    records.append({"check": "sharded_vs_single_device",
+                    "devices": 4, "max_abs_diff": sharded_diff})
+    return records
+
+
+def serve_csv_lines(records: list[dict]) -> list[str]:
+    lines = []
+    for r in records:
+        if "check" in r:
+            lines.append(f"serve/{r['check']},{r['max_abs_diff']:.2e},"
+                         f"devices={r['devices']}")
+            continue
+        lines.append(
+            f"serve/{r['fmt']}/{r['dtype']}/nsv{r['n_sv']}/b{r['batch']},"
+            f"{r['us_per_query']:.2f},"
+            f"host={r['host_us_per_query']:.2f}"
+            f";speedup={r['speedup_vs_host']:.2f}"
+            f";qps={r['qps']:.0f};p99us={r['p99_us']:.0f}"
+            f";dominant={r['roofline']['dominant']}")
+    return lines
+
+
 def epoch_csv_lines(records: list[dict]) -> list[str]:
     lines = []
     for r in records:
@@ -417,11 +561,16 @@ def main(argv=None) -> None:
     ap.add_argument("--epoch-out", default=None,
                     help="run the fused-epoch fuse_iters sweep and write it "
                          "as a JSON artifact (BENCH_epoch.json in CI)")
+    ap.add_argument("--serve-out", default=None,
+                    help="run the serving engine-vs-host-loop sweep and "
+                         "write it as a JSON artifact (BENCH_serve.json "
+                         "in CI)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller problems (CI-budget run)")
     args = ap.parse_args(argv)
     if args.out or not (args.cache_out or args.compact_out
-                        or args.recon_out or args.epoch_out):
+                        or args.recon_out or args.epoch_out
+                        or args.serve_out):
         kw = dict(n=512, d=1024) if args.quick else {}
         records = bench_sparse(quick=args.quick, **kw)
         for line in csv_lines(records):
@@ -468,6 +617,16 @@ def main(argv=None) -> None:
             json.dump({"bench": "fused_epoch", "records": epoch_records},
                       f, indent=1)
         print(f"wrote {args.epoch_out}", flush=True)
+    if args.serve_out:
+        kw = (dict(sizes=(768, 1536), d=256, batches=(16, 64, 256),
+                   repeats=10) if args.quick else {})
+        serve_records = bench_serve(**kw)
+        for line in serve_csv_lines(serve_records):
+            print(line, flush=True)
+        with open(args.serve_out, "w") as f:
+            json.dump({"bench": "serve", "records": serve_records},
+                      f, indent=1)
+        print(f"wrote {args.serve_out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -34,3 +34,21 @@ for heuristic in ("original", "single1000", "multi5pc"):
           f"shrinks={s.shrink_events:3d} recon={s.reconstructions} "
           f"min_active={s.min_active:5d} "
           f"time={s.train_time + s.recon_time:6.2f}s acc={acc:.4f}")
+
+# ---- Serving --------------------------------------------------------------
+# ``model.predict`` above already went through the inference plane: a
+# cached ``core.serve.ServeEngine`` holding the SVs device-resident and
+# scoring pow2-padded query microbatches in one fused dispatch each.
+# Deployment knobs: ``compact()`` dedups/prunes the SV set (score-exact in
+# fp32), bf16 storage halves resident bytes, ``shards=N``/``use_pallas``
+# pick the mesh width and kernel backend, and CSR query batches are
+# accepted directly. ``decision_function_host`` is the host-loop oracle
+# the engine is tested against. Full latency CLI:
+#     python -m repro.launch.serve --svm --dataset a9a --batch 256
+compact = model.compact(dtype="bfloat16")        # deployment artifact
+engine = compact.serve_engine(min_bucket=32)
+scores = engine.decision_function(Xt[:100])
+drift = np.abs(scores - model.decision_function_host(Xt[:100])).max()
+print(f"serving: {engine.describe()['n_sv']} SVs "
+      f"({engine.memory_bytes()} device bytes, bf16), "
+      f"bf16-vs-fp32 score drift {drift:.1e}")

@@ -1,8 +1,9 @@
 """Core: the paper's contribution — parallel SMO with adaptive shrinking."""
 from repro.core.heuristics import TABLE3, ShrinkHeuristic, get as get_heuristic
+from repro.core.serve import ServeEngine
 from repro.core.solver import SVMConfig, SVMModel, SMOSolver, FitStats, train
 
 __all__ = [
-    "TABLE3", "ShrinkHeuristic", "get_heuristic",
+    "TABLE3", "ShrinkHeuristic", "get_heuristic", "ServeEngine",
     "SVMConfig", "SVMModel", "SMOSolver", "FitStats", "train",
 ]

@@ -240,6 +240,15 @@ class RowProvider(Protocol):
     def diag(self, data) -> jax.Array:
         """K(x_i, x_i) for every buffer row — (M,) (wss2 curvature)."""
 
+    def accumulate(self, data, Z: jax.Array, coef: jax.Array) -> jax.Array:
+        """sum_i coef[i] * K(Z_j, buffer_i) — (nZ,) decision partials.
+
+        The serving plane's one hot call (core/serve.py): Pallas backends
+        fuse the coef contraction into the kernel-tile epilogue so the
+        (nZ, M) matrix is never materialized; jnp backends compose
+        ``matrix @ coef`` and are the parity oracle.
+        """
+
 
 @dataclasses.dataclass(frozen=True)
 class _ProviderBase:
@@ -257,6 +266,9 @@ class _ProviderBase:
 
     def gamma_from_rows(self, gamma, rows, coef2) -> jax.Array:
         return gamma + rows @ coef2
+
+    def accumulate(self, data, Z, coef) -> jax.Array:
+        return self.matrix(data, Z) @ coef
 
 
 @dataclasses.dataclass(frozen=True)
@@ -296,6 +308,13 @@ class DensePallasRowProvider(DenseRowProvider):
     def gamma_from_rows(self, gamma, rows, coef2):
         from repro.kernels import ops
         return ops.gamma_from_rows(gamma, rows, coef2)
+
+    def accumulate(self, data, Z, coef):
+        from repro.kernels import ops
+        if self.kernel != "rbf":    # the accumulate kernel is RBF-only
+            return super().accumulate(data, Z, coef)
+        return ops.rbf_accumulate(data.X, data.sq_norms, coef, Z,
+                                  self.inv_2s2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,6 +360,13 @@ class ELLPallasRowProvider(ELLRowProvider):
     def gamma_from_rows(self, gamma, rows, coef2):
         from repro.kernels import ops
         return ops.gamma_from_rows(gamma, rows, coef2)
+
+    def accumulate(self, data, Z, coef):
+        from repro.kernels import ops
+        if self.kernel != "rbf":
+            return super().accumulate(data, Z, coef)
+        return ops.ell_rbf_accumulate(data.vals, data.cols, data.sq_norms,
+                                      coef, Z, self.inv_2s2)
 
 
 def recon_block(provider: "RowProvider", sv_data, Zi: jax.Array,

@@ -1,0 +1,309 @@
+"""Production inference plane: batched, sharded, low-latency SVM scoring.
+
+Training (PRs 1-6) made the epoch cycle device-resident; this module does
+the same for the *serving* side — ROADMAP item 4's "heavy traffic from
+millions of users" path. A :class:`ServeEngine` holds a trained model's
+support-vector set resident on device (dense or block-ELL, optionally
+sharded over a mesh data axis exactly like the training mirror), accepts
+dense or CSR query batches, pads every request to a power-of-two
+microbatch bucket (``core/util.bucket_pow2`` — O(log) executables, not
+one per batch size), and scores each bucket in ONE dispatch through the
+row-provider layer's ``accumulate`` method: f(Z) = K(Z, SV) @ (alpha*y)
+- beta, with the Pallas backend fusing the coef contraction into the
+kernel-tile epilogue so the (B, M) kernel matrix never exists in HBM.
+
+Dispatch timeline for one ``decision_function`` call (batch n, bucket b):
+
+    host                         device (per bucket, ONE dispatch)
+    ----                         ----------------------------------
+    slice/densify queries   -->  [ qn = |z|^2                     ]
+    pad to pow2 bucket b         [ for each SV tile (grid):       ]
+                                 [   K-tile (bm, bq)  (MXU/VPU)   ]
+                                 [   out += coef_tile @ K-tile    ]  } fused
+                                 [ psum over shards (p > 1)       ]
+    scores[s:s+take]        <--  [ out - beta                     ]
+    ... next bucket (same executable whenever the pow2 bucket repeats)
+
+The SV set is padded per shard to a lane multiple with ``coef = 0`` rows —
+an *exact* pad (a zero coefficient contributes exactly 0 whatever the
+padded row content), which is what lets one static shape serve every
+model size in a bucket. bf16 SV storage (``dtype='bfloat16'``, or a
+``model.compact(dtype='bfloat16')`` deployment artifact) halves the
+resident bytes and the HBM stream; values are upcast to f32 on the way
+into the kernel, so only the *storage* rounding (one bf16 quantization of
+the SVs) separates bf16 scores from fp32 scores — the measured
+exactness-vs-latency tradeoff in ``BENCH_serve.json``.
+
+The single-device jnp fp32 engine is the serving parity baseline: it runs
+``provider.matrix(Z) @ coef`` — the same compute
+``SVMModel.decision_function_host`` (the seed-era host block loop, kept
+as the oracle) performs — and ``tests/test_serve.py`` asserts the two
+agree for every (format x backend x sharding) engine configuration.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import dataplane, kernel_fns, util
+from repro.data import sparse as sp
+
+__all__ = ["ServeEngine"]
+
+_LANE = 128          # per-shard SV padding multiple (Pallas block floor)
+
+
+def _csr_dense_block(csr: "sp.CSRMatrix", lo: int, hi: int,
+                     out: np.ndarray) -> None:
+    """Densify CSR rows [lo, hi) into the zeroed prefix of ``out``."""
+    base = int(csr.indptr[lo])
+    idx = np.arange(base, int(csr.indptr[hi]))
+    counts = np.diff(csr.indptr[lo: hi + 1]).astype(np.int64)
+    rows = np.repeat(np.arange(hi - lo), counts)
+    out[rows, csr.indices[idx]] = csr.data[idx]
+
+
+class ServeEngine:
+    """Device-resident scoring engine for a trained :class:`SVMModel`.
+
+    Parameters
+    ----------
+    model : SVMModel (duck-typed: config/beta/sv_coef + sv_x or
+        sv_vals/sv_cols/n_features). ``model.compact()`` artifacts serve
+        through the same engine.
+    use_pallas : score buckets through the fused ``rbf_accumulate``
+        Pallas kernels instead of the jnp ``matrix @ coef`` oracle path.
+    shards : mesh width p; the SV axis is sharded over a 1-D data mesh
+        (each device scores its SV block, one psum joins the partials).
+        1 = single device (default), None = every visible device.
+    dtype : SV value storage — 'float32' (default) or 'bfloat16'
+        (half the resident bytes; upcast to f32 inside the dispatch).
+        None inherits the model's own storage dtype.
+    min_bucket / max_bucket : pow2 microbatch bucket clamp. Requests are
+        chopped to ``max_bucket`` and padded up to ``min_bucket``, so at
+        most log2(max/min)+1 executables exist per engine.
+    """
+
+    def __init__(self, model, *, use_pallas: bool = False,
+                 shards: "int | None" = 1, dtype: "str | None" = None,
+                 min_bucket: int = 64, max_bucket: int = 4096):
+        cfg = model.config
+        if shards is None:
+            shards = len(jax.devices())
+        if min_bucket <= 0 or max_bucket < min_bucket:
+            raise ValueError(f"bad bucket range [{min_bucket}, {max_bucket}]")
+        self.kernel = cfg.kernel
+        self.inv_2s2 = float(cfg.inv_2s2)
+        self.beta = float(model.beta)
+        self.use_pallas = bool(use_pallas)
+        self.shards = int(shards)
+        self.min_bucket = int(min_bucket)
+        self.max_bucket = int(max_bucket)
+        self.fmt = "ell" if getattr(model, "sv_vals", None) is not None \
+            else "dense"
+        vals_dt = (model.sv_vals if self.fmt == "ell" else model.sv_x).dtype
+        if dtype is None:
+            dtype = str(vals_dt)
+        if dtype in ("bf16", "bfloat16"):
+            self.dtype = "bfloat16"
+        elif dtype in ("float32", "fp32", "f32"):
+            self.dtype = "float32"
+        else:
+            raise ValueError(f"unsupported SV storage dtype {dtype!r}")
+        self._provider = kernel_fns.make_provider(
+            self.kernel, self.fmt, self.use_pallas, self.inv_2s2)
+        self._fns: dict[int, object] = {}
+        self._mesh = None
+        if self.shards > 1:
+            from repro.core import parallel
+            self._mesh = parallel.data_mesh(self.shards)
+        self._build(model)
+
+    # -- SV residency ------------------------------------------------------
+
+    def _put(self, arr: np.ndarray, sharded_rows: bool = True):
+        if self._mesh is None:
+            return jnp.asarray(arr)
+        from repro.core.parallel import AXIS
+        spec = P(AXIS, *([None] * (arr.ndim - 1))) if sharded_rows else P()
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self._mesh, spec))
+
+    def _build(self, model) -> None:
+        """Pad the SV set per shard to a lane multiple (coef-0 rows — an
+        exact pad) and place it device-resident, sharded on the SV axis."""
+        p = self.shards
+        coef = np.asarray(model.sv_coef, np.float32).reshape(-1)
+        self.n_sv = int(coef.size)
+        m_per = sp.round_lanes(max(1, -(-self.n_sv // p)), _LANE)
+        m_pad = p * m_per
+        self.m_pad = m_pad
+        store_dt = np.float32 if self.dtype == "float32" else \
+            np.dtype(jnp.bfloat16)
+        rows = np.arange(self.n_sv)
+        coef_p = np.zeros((m_pad,), np.float32)
+        for sl, sub in dataplane.deal(rows, p, m_per):
+            coef_p[sl] = coef[sub]
+        if self.fmt == "dense":
+            sv = np.asarray(model.sv_x)
+            self.n_features = int(sv.shape[1])
+            x_p = np.zeros((m_pad, self.n_features), store_dt)
+            for sl, sub in dataplane.deal(rows, p, m_per):
+                x_p[sl] = sv[sub].astype(store_dt)
+            sq = (x_p.astype(np.float32) ** 2).sum(axis=1)
+            self._sv = (self._put(x_p),)
+            self._K = 0
+        else:
+            vals = np.asarray(model.sv_vals)
+            cols = np.asarray(model.sv_cols, np.int32)
+            self.n_features = int(model.n_features)
+            K = int(vals.shape[1])
+            v_p = np.zeros((m_pad, K), store_dt)
+            c_p = np.zeros((m_pad, K), np.int32)
+            for sl, sub in dataplane.deal(rows, p, m_per):
+                v_p[sl] = vals[sub].astype(store_dt)
+                c_p[sl] = cols[sub]
+            sq = (v_p.astype(np.float32) ** 2).sum(axis=1)
+            self._sv = (self._put(v_p), self._put(c_p))
+            self._K = K
+        self._sq = self._put(sq.astype(np.float32))
+        self._coef = self._put(coef_p)
+
+    def _data(self, *sv_arrays):
+        """Rebuild the provider's device view from (possibly bf16) storage;
+        the f32 upcast happens inside the dispatch."""
+        if self.fmt == "dense":
+            (x,) = sv_arrays[:-1]
+            return dataplane.DenseData(x.astype(jnp.float32), sv_arrays[-1])
+        v, c = sv_arrays[:-1]
+        return dataplane.ELLData(v.astype(jnp.float32), c, sv_arrays[-1],
+                                 self.n_features)
+
+    # -- bucket executables ------------------------------------------------
+
+    def _make_fn(self, b: int):
+        provider = self._provider
+        beta = self.beta
+
+        def score(sv_and_sq, coef, Z):
+            data = self._data(*sv_and_sq)
+            return provider.accumulate(data, Z, coef) - beta
+
+        if self._mesh is None:
+            fn = jax.jit(score)
+        else:
+            from repro.core.parallel import AXIS
+            from repro.launch.mesh import shard_map_compat
+
+            def local(sv_and_sq, coef, Z):
+                data = self._data(*sv_and_sq)
+                part = provider.accumulate(data, Z, coef)
+                return jax.lax.psum(part, AXIS) - beta
+
+            fn = jax.jit(shard_map_compat(
+                local, mesh=self._mesh,
+                in_specs=(tuple(P(AXIS, *([None] * (a.ndim - 1)))
+                                for a in (*self._sv, self._sq)),
+                          P(AXIS), P()),
+                out_specs=P()))
+        args = ((*self._sv, self._sq), self._coef)
+        return lambda Z: fn(*args, Z)
+
+    def _fn(self, b: int):
+        if b not in self._fns:
+            self._fns[b] = self._make_fn(b)
+        return self._fns[b]
+
+    # -- query plane -------------------------------------------------------
+
+    def _bucket_of(self, remaining: int) -> int:
+        return util.bucket_pow2(min(remaining, self.max_bucket),
+                                self.min_bucket, self.max_bucket)
+
+    def decision_function(self, Z) -> np.ndarray:
+        """Scores for a dense (n, d) batch or CSR-like query input.
+
+        The batch is chopped into pow2 buckets (large requests stream
+        ``max_bucket`` chunks; the ragged tail pads up) and each bucket is
+        one device dispatch. CSR queries are densified per bucket on the
+        host — queries travel dense into the kernels in either case, so
+        the ingest format never changes the scores.
+        """
+        csr = sp.as_csr(Z) if sp.is_csr_like(Z) else None
+        if csr is not None:
+            n, d = csr.shape
+        else:
+            Z = np.asarray(Z, np.float32)
+            if Z.ndim == 1:
+                Z = Z[None, :]
+            n, d = Z.shape
+        if d != self.n_features:
+            raise ValueError(f"query dim {d} != model dim {self.n_features}")
+        out = np.empty((n,), np.float32)
+        s = 0
+        while s < n:
+            b = self._bucket_of(n - s)
+            take = min(n - s, b)
+            zb = np.zeros((b, d), np.float32)
+            if csr is not None:
+                _csr_dense_block(csr, s, s + take, zb)
+            else:
+                zb[:take] = Z[s: s + take]
+            out[s: s + take] = np.asarray(self._fn(b)(jnp.asarray(zb)))[:take]
+            s += take
+        return out
+
+    def predict(self, Z) -> np.ndarray:
+        return np.where(self.decision_function(Z) >= 0.0, 1.0,
+                        -1.0).astype(np.float32)
+
+    # -- introspection / pricing ------------------------------------------
+
+    def memory_bytes(self) -> int:
+        """Resident SV bytes (values + cols + sq + coef) across all shards."""
+        total = 0
+        for a in (*self._sv, self._sq, self._coef):
+            total += a.size * a.dtype.itemsize
+        return int(total)
+
+    def describe(self) -> dict:
+        return {
+            "fmt": self.fmt, "dtype": self.dtype, "shards": self.shards,
+            "n_sv": self.n_sv, "m_pad": self.m_pad,
+            "n_features": self.n_features, "use_pallas": self.use_pallas,
+            "buckets": sorted(self._fns), "memory_bytes": self.memory_bytes(),
+        }
+
+    def model_flops(self, b: int) -> float:
+        """Model FLOPs of one bucket dispatch: one kernel-row pass over the
+        padded SV set per query plus the coef FMA epilogue (the same
+        per-row terms ``dataplane.*Data.flops_row_pass`` charges)."""
+        row_pass = 2.0 * self.n_features + 5.0 if self.fmt == "dense" \
+            else 4.0 * self._K + 5.0
+        return float(b) * self.m_pad * (row_pass + 2.0)
+
+    def roofline(self, b: "int | None" = None):
+        """Price one bucket executable against hardware peak via
+        ``launch/roofline.py`` term extraction (compute/HBM seconds per
+        dispatch; ``useful_ratio`` = model FLOPs / HLO FLOPs). Always
+        prices the aggregate single-chip-equivalent program (chips=1) —
+        the jnp score over the full padded SV set — so fp32/bf16 and
+        dense/ELL engines compare on one scale regardless of sharding.
+        """
+        from repro.launch import roofline as rl
+        b = self.max_bucket if b is None else b
+        provider, beta = self._provider, self.beta
+
+        def whole(sv_and_sq, coef, Z):
+            return provider.accumulate(self._data(*sv_and_sq), Z, coef) - beta
+
+        compiled = jax.jit(whole).lower(
+            tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                  for a in (*self._sv, self._sq)),
+            jax.ShapeDtypeStruct(self._coef.shape, self._coef.dtype),
+            jax.ShapeDtypeStruct((b, self.n_features), jnp.float32)).compile()
+        return rl.analyze(compiled, chips=1,
+                          model_flops=self.model_flops(b),
+                          bf16_model=(self.dtype == "bfloat16"))

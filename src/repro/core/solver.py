@@ -135,13 +135,15 @@ class SVMModel:
         over an SV device buffer in its native storage format."""
         cfg = self.config
         if self.sv_vals is not None:
-            vals = jnp.asarray(self.sv_vals)
+            # bf16-compacted models upcast at the device boundary: storage
+            # rounding is the only difference from an fp32 model
+            vals = jnp.asarray(self.sv_vals).astype(jnp.float32)
             data = dataplane.ELLData(vals, jnp.asarray(self.sv_cols),
                                      jnp.sum(vals * vals, axis=-1),
                                      self.n_features)
             fmt = "ell"
         else:
-            svx = jnp.asarray(self.sv_x)
+            svx = jnp.asarray(self.sv_x).astype(jnp.float32)
             data = dataplane.DenseData(svx, jnp.sum(svx * svx, axis=-1))
             fmt = "dense"
         provider = kernel_fns.make_provider(cfg.kernel, fmt,
@@ -151,14 +153,41 @@ class SVMModel:
     def _sv_dense(self) -> np.ndarray:
         """Support vectors as a dense (n_sv, d) block (query side of K)."""
         if self.sv_vals is None:
-            return self.sv_x
+            return np.asarray(self.sv_x, np.float32)
         store = dataplane.ELLStore(self.sv_vals, self.sv_cols,
                                    self.n_features)
         return store.dense_rows(np.arange(self.sv_vals.shape[0]))
 
-    def decision_function(self, Z: np.ndarray, block: int = 8192) -> np.ndarray:
+    def serve_engine(self, **kw) -> "object":
+        """The model's scoring engine (``core.serve.ServeEngine``), built
+        lazily and cached per keyword spec — ``decision_function`` /
+        ``predict`` route through the default spec (single device, model
+        storage dtype, Pallas iff the model was trained with it)."""
+        from repro.core import serve
+        key = tuple(sorted(kw.items()))
+        cache = self.__dict__.setdefault("_engines", {})
+        if key not in cache:
+            kw.setdefault("use_pallas", self.config.use_pallas)
+            cache[key] = serve.ServeEngine(self, **kw)
+        return cache[key]
+
+    def decision_function(self, Z: np.ndarray) -> np.ndarray:
+        """Decision scores through the serving engine: device-resident
+        SVs, pow2 microbatch buckets, fused accumulate dispatches; accepts
+        dense (n, d) or CSR-like queries. ``decision_function_host`` is
+        the seed-era host block loop, kept as the parity oracle."""
+        return self.serve_engine().decision_function(Z)
+
+    def decision_function_host(self, Z: np.ndarray,
+                               block: int = 8192) -> np.ndarray:
+        """Host-loop scoring oracle: materializes K(z_block, SV) through
+        the provider's ``matrix`` and contracts on device, one fixed-size
+        block at a time. Kept as the bit-parity reference the serve plane
+        is tested against (fp32 engines match it to float tolerance; bf16
+        engines to storage-rounding tolerance)."""
+        Z = np.asarray(Z, np.float32)
         out = np.empty((Z.shape[0],), np.float32)
-        coef = jnp.asarray(self.sv_coef)
+        coef = jnp.asarray(self.sv_coef, jnp.float32)
         kf = self._sv_kernel_fn()
         f = jax.jit(lambda z: kf(z) @ coef - self.beta)
         for s in range(0, Z.shape[0], block):
@@ -172,6 +201,52 @@ class SVMModel:
 
     def predict(self, Z: np.ndarray) -> np.ndarray:
         return np.where(self.decision_function(Z) >= 0.0, 1.0, -1.0)
+
+    def compact(self, dedup: bool = True,
+                dtype: "str | None" = None) -> "SVMModel":
+        """Deployment-artifact shrink: drop zero-coef SVs, optionally merge
+        duplicate SV rows (coefs add — exact, the kernel rows are equal),
+        optionally store SV values in bfloat16 (half the resident bytes;
+        scores then differ from fp32 by one storage rounding of the SVs —
+        the tradeoff ``BENCH_serve.json`` measures). Returns a new model
+        scoring identically (fp32) through the same engine/oracle paths.
+        """
+        coef = np.asarray(self.sv_coef, np.float32).copy()
+        if self.sv_vals is not None:
+            rows = np.ascontiguousarray(
+                np.concatenate([np.asarray(self.sv_vals, np.float32),
+                                np.asarray(self.sv_cols, np.float32)],
+                               axis=1))
+        else:
+            rows = np.ascontiguousarray(np.asarray(self.sv_x, np.float32))
+        if dedup and rows.shape[0]:
+            # bit-view uniquing: rows are duplicates only when bitwise
+            # equal, which is exactly when their kernel rows coincide
+            view = rows.view(np.uint32).reshape(rows.shape[0], -1)
+            _, first, inv = np.unique(view, axis=0, return_index=True,
+                                      return_inverse=True)
+            merged = np.zeros((first.size,), np.float32)
+            np.add.at(merged, inv.reshape(-1), coef)
+            keep_rows, coef = np.sort(first), merged[
+                np.argsort(first, kind="stable")]
+        else:
+            keep_rows = np.arange(rows.shape[0])
+        nz = coef != 0.0
+        keep_rows, coef = keep_rows[nz], coef[nz]
+        store_dt = np.float32
+        if dtype in ("bf16", "bfloat16"):
+            store_dt = np.dtype(jnp.bfloat16)
+        elif dtype not in (None, "float32", "fp32", "f32"):
+            raise ValueError(f"unsupported SV storage dtype {dtype!r}")
+        if self.sv_vals is not None:
+            return SVMModel(
+                self.config, None, coef, self.beta, self.alpha, self.stats,
+                sv_vals=np.asarray(self.sv_vals)[keep_rows].astype(store_dt),
+                sv_cols=np.asarray(self.sv_cols, np.int32)[keep_rows],
+                n_features=self.n_features)
+        return SVMModel(self.config,
+                        np.asarray(self.sv_x)[keep_rows].astype(store_dt),
+                        coef, self.beta, self.alpha, self.stats)
 
     def dual_objective(self) -> float:
         """L_D (Eq. 1) over the support set — used by tests/benchmarks."""

@@ -89,6 +89,55 @@ def gamma_from_rows(gamma: jax.Array, rows: jax.Array,
     return gamma + rows @ coef2
 
 
+def _pick_block_q(b: int, d: int, lo: int = 8, hi: int = 128) -> int:
+    """Query-microbatch tile for the accumulate kernels: largest power of
+    two in [lo, hi] dividing b whose dense query tile fits a slice of the
+    VMEM budget (the SV tile is the big tenant). Serve buckets are powers
+    of two (core/serve.py), so this normally returns min(b, hi)."""
+    bq = hi
+    while bq > lo and (b % bq != 0 or bq * max(d, 128) * 4 > _VMEM_BUDGET // 4):
+        bq //= 2
+    return bq if b % bq == 0 else 0
+
+
+def rbf_accumulate(X: jax.Array, sq_norms: jax.Array, coef: jax.Array,
+                   Z: jax.Array, inv_2s2) -> jax.Array:
+    """(B,) fused decision partials sum_i coef[i]*K(Z_j, X_i); Pallas when
+    the SV/query axes divide a block grid, ref oracle otherwise."""
+    m, d = X.shape
+    bm = _pick_block_m(m, d)
+    bq = _pick_block_q(Z.shape[0], d)
+    if bm == 0 or bq == 0:
+        return ref.rbf_accumulate(X, sq_norms, coef, Z, inv_2s2)
+    return _rr.rbf_accumulate(_pad_cols(X), sq_norms, coef, _pad_cols(Z),
+                              jnp.asarray(inv_2s2, jnp.float32),
+                              block_m=bm, block_q=bq,
+                              interpret=_interpret())
+
+
+def ell_rbf_accumulate(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                       coef: jax.Array, Z: jax.Array, inv_2s2) -> jax.Array:
+    """(B,) fused decision partials over block-ELL SVs; the in-kernel query
+    loop unrolls bq gathers, so the query tile is capped low (the grid's
+    outer axis picks up the rest of the microbatch)."""
+    m, K = vals.shape
+    bm = _pick_ell_block_m(m, K)
+    bq = _pick_block_q(Z.shape[0], Z.shape[1], lo=4, hi=8)
+    if bm == 0 or bq == 0:
+        from repro.core import kernel_fns
+        return kernel_fns.ell_cross_kernel("rbf", Z, vals, cols, sq_norms,
+                                           inv_2s2) @ coef
+    return _se_accumulate(vals, cols, sq_norms, coef, Z, inv_2s2, bm, bq)
+
+
+def _se_accumulate(vals, cols, sq_norms, coef, Z, inv_2s2, bm, bq):
+    return _rr.ell_rbf_accumulate(_pad_cols(vals), _pad_cols(cols), sq_norms,
+                                  coef, Z,
+                                  jnp.asarray(inv_2s2, jnp.float32),
+                                  block_m=bm, block_q=bq,
+                                  interpret=_interpret())
+
+
 def _pick_ell_block_m(n: int, K: int = 128) -> int:
     """Largest block (<=512, >=64) dividing n whose (vals, cols) tiles fit
     the VMEM budget at lane budget K. Adaptive-K recompaction makes K a

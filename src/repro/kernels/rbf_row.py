@@ -1,7 +1,9 @@
-"""Pallas TPU kernel: fused two-query RBF kernel rows.
+"""Pallas TPU kernels: fused two-query RBF rows + the serve-time
+RBF-accumulate.
 
-out[i, j] = exp(-(||X_i||^2 - 2 <X_i, z_j> + ||z_j||^2) / (2 sigma^2)),
-j in {up, low} — the per-iteration hot spot of SMO (DESIGN.md §7).
+``rbf_rows2`` — out[i, j] = exp(-(||X_i||^2 - 2 <X_i, z_j> + ||z_j||^2)
+/ (2 sigma^2)), j in {up, low}: the per-iteration hot spot of SMO
+(DESIGN.md §7).
 
 TPU mapping: the contraction is laid out as z2 (2, d) x X_blk^T (d, bm) ->
 (2, bm) so the *lane* dimension is the long sample axis (bm, a multiple of
@@ -11,6 +13,18 @@ norms/γ tiles ride along as (1, bm) row vectors.
 
 Grid: (N / bm,). VMEM per step ~ bm*d*4 bytes for the X tile (+ O(bm)) —
 ops.py picks bm so this fits the ~16 MiB VMEM budget.
+
+``rbf_accumulate`` / ``ell_rbf_accumulate`` — the inference-plane hot
+spot (core/serve.py): decision partials f[j] = sum_i coef_i * K(z_j, x_i)
+over a query microbatch Z (B, d) against the SV set, *without ever
+materializing the (B, M) kernel matrix*. The SV axis rides the grid's
+inner dimension; each step computes one (bm, bq) kernel tile and
+immediately contracts it against the coef tile into the revisited (1, bq)
+output block — the matmul epilogue IS the accumulation, so HBM traffic is
+one pass over the SV tiles + O(B) for the output, never O(B * M). Queries
+sit on the lane axis of the output (bq a multiple of 128 on real TPUs;
+interpret mode tolerates any bq), samples on the lane axis of the kernel
+tile contraction.
 """
 from __future__ import annotations
 
@@ -55,3 +69,125 @@ def rbf_rows2(X: jax.Array, sq_norms: jax.Array, z2: jax.Array,
         interpret=interpret,
     )(X, sq_norms.reshape(1, n), z2, inv_2s2.reshape(1, 1))
     return out
+
+
+def _accum_kernel(x_ref, sq_ref, coef_ref, z_ref, qn_ref, inv_ref, out_ref):
+    """One (SV tile, query tile) step of the fused decision sum.
+
+    x (bm, d) / sq (bm, 1) / coef (1, bm) stream along the inner grid
+    axis; z (bq, d) / qn (1, bq) are pinned per outer step. The kernel
+    tile is laid out (bm, bq) — samples on sublanes, queries on lanes —
+    so the epilogue contraction coef (1, bm) x k (bm, bq) is a skinny MXU
+    matmul straight into the revisited (1, bq) output block.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]                                   # (bm, d)
+    z = z_ref[...]                                   # (bq, d)
+    prods = jax.lax.dot_general(
+        x, z, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (bm, bq)
+    d2 = sq_ref[...] - 2.0 * prods + qn_ref[...]     # (bm,1)+(bm,bq)+(1,bq)
+    k = jnp.exp(-jnp.maximum(d2, 0.0) * inv_ref[0, 0])
+    out_ref[...] += jax.lax.dot_general(
+        coef_ref[...], k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (1, bq)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_q",
+                                             "interpret"))
+def rbf_accumulate(X: jax.Array, sq_norms: jax.Array, coef: jax.Array,
+                   Z: jax.Array, inv_2s2: jax.Array, *, block_m: int = 1024,
+                   block_q: int = 128, interpret: bool = False) -> jax.Array:
+    """out[j] = sum_i coef[i] * K_rbf(Z[j], X[i]) — (B,) decision partials.
+
+    Caller pads M to block_m, B to block_q, d to 128. Padding SV rows must
+    carry coef 0 (then their content is irrelevant); padding queries
+    produce garbage entries the caller truncates.
+    """
+    m, d = X.shape
+    b = Z.shape[0]
+    assert m % block_m == 0 and b % block_q == 0, (m, block_m, b, block_q)
+    qn = jnp.sum(Z * Z, axis=-1)
+    out = pl.pallas_call(
+        _accum_kernel,
+        grid=(b // block_q, m // block_m),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, b), jnp.float32),
+        interpret=interpret,
+    )(X, sq_norms.reshape(m, 1), coef.reshape(1, m), Z, qn.reshape(1, b),
+      inv_2s2.reshape(1, 1))
+    return out.reshape(b)
+
+
+def _ell_accum_kernel(vals_ref, cols_ref, sq_ref, coef_ref, z_ref, qn_ref,
+                      inv_ref, out_ref):
+    """ELL twin of ``_accum_kernel``: the (bm, bq) kernel tile comes from
+    ``bq`` lane-wise gathers of the dense query rows (the validated
+    single-query pattern of sparse_ell.py, unrolled over the static query
+    tile — ops.py keeps bq small for exactly this reason)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...]                             # (bm, K)
+    cols = cols_ref[...]                             # (bm, K) int32
+    z = z_ref[...]                                   # (bq, d)
+    bq = z.shape[0]
+    dots = jnp.stack(
+        [jnp.sum(vals * jnp.take(z[q], cols, axis=0), axis=1)
+         for q in range(bq)], axis=1)                # (bm, bq)
+    d2 = sq_ref[...] - 2.0 * dots + qn_ref[...]      # (bm, bq)
+    k = jnp.exp(-jnp.maximum(d2, 0.0) * inv_ref[0, 0])
+    out_ref[...] += jax.lax.dot_general(
+        coef_ref[...], k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (1, bq)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_q",
+                                             "interpret"))
+def ell_rbf_accumulate(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                       coef: jax.Array, Z: jax.Array, inv_2s2: jax.Array, *,
+                       block_m: int = 512, block_q: int = 8,
+                       interpret: bool = False) -> jax.Array:
+    """out[j] = sum_i coef[i] * K_rbf(Z[j], x_i) over block-ELL SVs — (B,).
+
+    Same padding contract as :func:`rbf_accumulate` (coef 0 on padding SV
+    rows; padding cols are 0, so their gathers stay in bounds).
+    """
+    m, K = vals.shape
+    b, d = Z.shape
+    assert m % block_m == 0 and b % block_q == 0, (m, block_m, b, block_q)
+    qn = jnp.sum(Z * Z, axis=-1)
+    out = pl.pallas_call(
+        _ell_accum_kernel,
+        grid=(b // block_q, m // block_m),
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, b), jnp.float32),
+        interpret=interpret,
+    )(vals, cols, sq_norms.reshape(m, 1), coef.reshape(1, m), Z,
+      qn.reshape(1, b), inv_2s2.reshape(1, 1))
+    return out.reshape(b)

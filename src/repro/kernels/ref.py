@@ -59,6 +59,32 @@ def ell_gamma_update(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
     return gamma + k @ coef2
 
 
+def rbf_accumulate(X: jax.Array, sq_norms: jax.Array, coef: jax.Array,
+                   Z: jax.Array, inv_2s2: float) -> jax.Array:
+    """Fused serve-time decision sum: out[j] = sum_i coef[i] * K(Z[j], X[i]).
+
+    The oracle for the Pallas ``rbf_accumulate`` tile kernel — the (B, M)
+    kernel matrix is never materialized by the kernel, only by this
+    reference. Padding SV rows carry coef 0, so they contribute exactly 0
+    whatever their (X, sq) content.
+    """
+    qn = jnp.sum(Z * Z, axis=-1)
+    d2 = qn[:, None] - 2.0 * (Z @ X.T) + sq_norms[None, :]
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2) @ coef
+
+
+def ell_rbf_accumulate(vals: jax.Array, cols: jax.Array, sq_norms: jax.Array,
+                       coef: jax.Array, Z: jax.Array,
+                       inv_2s2: float) -> jax.Array:
+    """Serve-time decision sum against block-ELL SVs (oracle; materializes
+    the (B, M, K) gather — tests only, the blocked paths never do)."""
+    zg = jnp.take(Z, cols, axis=1)                    # (B, M, K)
+    dots = jnp.einsum("mk,jmk->jm", vals, zg)         # (B, M)
+    qn = jnp.sum(Z * Z, axis=-1)
+    d2 = qn[:, None] - 2.0 * dots + sq_norms[None, :]
+    return jnp.exp(-jnp.maximum(d2, 0.0) * inv_2s2) @ coef
+
+
 def mha(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
         scale: float | None = None) -> jax.Array:
     """Reference attention. q: (B, Lq, H, Dh), k/v: (B, Lk, Hkv, Dh) with

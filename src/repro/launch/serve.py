@@ -1,11 +1,28 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``.
-Thin CLI over the decode/prefill step builders (see examples/serve_lm.py)."""
+"""Unified serving launcher.
+
+    python -m repro.launch.serve --svm --dataset a9a ...   # SVM inference
+    python -m repro.launch.serve --arch <id> ...           # LM decode/prefill
+
+``--svm`` dispatches to :mod:`repro.launch.svm_serve` (the production SVM
+inference plane — ``core/serve.ServeEngine``); everything else falls
+through to the LM serving example, which owns ``--arch`` and friends.
+"""
 import os
 import runpy
 import sys
 
-if __name__ == "__main__":
-    sys.argv[0] = "serve.py"
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--svm" in argv:
+        argv.remove("--svm")
+        from repro.launch import svm_serve
+        return svm_serve.main(argv)
+    sys.argv = ["serve.py"] + argv
     runpy.run_path(os.path.join(os.path.dirname(__file__), "..", "..", "..",
                                 "examples", "serve_lm.py"),
                    run_name="__main__")
+
+
+if __name__ == "__main__":
+    main()

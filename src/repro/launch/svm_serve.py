@@ -1,0 +1,98 @@
+"""SVM serving launcher — train (or compact) a model, stand up the
+inference plane, report latency percentiles.
+
+    python -m repro.launch.svm_serve --dataset a9a [--format ell] \
+        [--use-pallas] [--shards 4] [--compact] [--dtype bfloat16] \
+        [--batch 256] [--repeats 50] [--roofline]
+
+Also reachable as ``python -m repro.launch.serve --svm ...`` (the unified
+serving entry point; LM serving stays behind ``--arch``).
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="a9a")
+    ap.add_argument("--heuristic", default="multi5pc")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--format", default="dense", choices=("dense", "ell"))
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="mesh width for the SV axis (0 = all devices)")
+    ap.add_argument("--compact", action="store_true",
+                    help="serve the deduped/pruned deployment artifact")
+    ap.add_argument("--dtype", default=None,
+                    choices=(None, "float32", "bfloat16"),
+                    help="SV storage dtype on device")
+    ap.add_argument("--min-bucket", type=int, default=64)
+    ap.add_argument("--max-bucket", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=256,
+                    help="query batch size for the latency report")
+    ap.add_argument("--repeats", type=int, default=50)
+    ap.add_argument("--roofline", action="store_true",
+                    help="price the hot bucket executable against peak")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.core import SMOSolver, SVMConfig
+    from repro.data import SPECS, make
+
+    spec = SPECS[args.dataset]
+    X, y, Xt, yt = make(args.dataset, scale=args.scale, seed=0)
+    cfg = SVMConfig(C=spec.C, sigma2=spec.sigma2,
+                    heuristic=args.heuristic, format=args.format,
+                    use_pallas=args.use_pallas)
+    model = SMOSolver(cfg).fit(X, y)
+    if args.compact:
+        model = model.compact(dtype=args.dtype)
+        engine = model.serve_engine(
+            shards=args.shards or None, min_bucket=args.min_bucket,
+            max_bucket=args.max_bucket, use_pallas=args.use_pallas)
+    else:
+        engine = model.serve_engine(
+            shards=args.shards or None, dtype=args.dtype,
+            min_bucket=args.min_bucket, max_bucket=args.max_bucket,
+            use_pallas=args.use_pallas)
+    print(f"engine: {engine.describe()}")
+
+    Zt = Xt if len(Xt) else X
+    rng = np.random.default_rng(0)
+    Z = Zt[rng.integers(0, len(Zt), size=args.batch)]
+    engine.decision_function(Z)                     # warm the bucket
+    lat = []
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        engine.decision_function(Z)
+        lat.append(time.perf_counter() - t0)
+    lat = np.sort(np.asarray(lat))
+    p50 = float(np.percentile(lat, 50))
+    p99 = float(np.percentile(lat, 99))
+    qps = args.batch / p50
+    print(f"batch={args.batch}: p50={p50 * 1e3:.3f}ms p99={p99 * 1e3:.3f}ms "
+          f"qps={qps:,.0f} us/query={p50 / args.batch * 1e6:.2f}")
+    if len(yt):
+        acc = float((np.where(engine.decision_function(Xt) >= 0.0, 1.0, -1.0)
+                     == yt).mean())
+        print(f"test acc: {acc:.4f}")
+    report = {"engine": engine.describe(), "batch": args.batch,
+              "p50_s": p50, "p99_s": p99, "qps": qps}
+    if args.roofline:
+        rf = engine.roofline(engine._bucket_of(args.batch)).row()
+        print(f"roofline: dominant={rf['dominant']} "
+              f"t_compute={rf['t_compute_s']:.2e}s "
+              f"t_memory={rf['t_memory_s']:.2e}s "
+              f"useful_ratio={rf['useful_ratio']:.3f}")
+        report["roofline"] = rf
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+        print(f"wrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -113,3 +113,72 @@ def test_ops_fallback_paths():
     assert out.shape == (100, 2)
     out_lin = ops.kernel_rows2("linear", X, sq, z2, jnp.float32(0.5))
     np.testing.assert_allclose(out_lin, X @ z2.T, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,d,b,bm,bq", [(256, 32, 64, 128, 64),
+                                         (512, 100, 128, 256, 128),
+                                         (1024, 40, 256, 512, 128)])
+def test_rbf_accumulate_sweep(m, d, b, bm, bq):
+    """Fused serve-time decision sum vs the materializing oracle, with
+    coef-0 padding rows asserted to contribute exactly 0."""
+    from repro.kernels.rbf_row import rbf_accumulate
+    r = np.random.default_rng(m + b)
+    X = r.normal(size=(m, d)).astype(np.float32)
+    coef = r.normal(size=(m,)).astype(np.float32)
+    X[-bm // 2:] = r.normal(size=(bm // 2, d)) * 100   # padding-row garbage
+    coef[-bm // 2:] = 0.0                              # ... with coef 0
+    Z = r.normal(size=(b, d)).astype(np.float32)
+    sq = jnp.sum(jnp.asarray(X) ** 2, axis=-1)
+    inv = jnp.float32(1 / 8)
+    got = rbf_accumulate(jnp.asarray(X), sq, jnp.asarray(coef),
+                         jnp.asarray(Z), inv, block_m=bm, block_q=bq,
+                         interpret=True)
+    want = ref.rbf_accumulate(jnp.asarray(X), sq, jnp.asarray(coef),
+                              jnp.asarray(Z), inv)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # zeroing the garbage rows must not change a single bit of the output
+    X2 = X.copy()
+    X2[-bm // 2:] = 0.0
+    sq2 = jnp.sum(jnp.asarray(X2) ** 2, axis=-1)
+    again = rbf_accumulate(jnp.asarray(X2), sq2, jnp.asarray(coef),
+                           jnp.asarray(Z), inv, block_m=bm, block_q=bq,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(again))
+
+
+@pytest.mark.parametrize("m,K,d,b,bm,bq", [(256, 16, 100, 16, 128, 4),
+                                           (512, 64, 300, 32, 256, 8)])
+def test_ell_rbf_accumulate_sweep(m, K, d, b, bm, bq):
+    from repro.kernels.rbf_row import ell_rbf_accumulate
+    r = np.random.default_rng(m + K)
+    cols = r.integers(0, d, size=(m, K)).astype(np.int32)
+    vals = r.normal(size=(m, K)).astype(np.float32)
+    for i in range(m):
+        t = r.integers(0, K)
+        vals[i, t:] = 0.0
+        cols[i, t:] = 0
+    coef = r.normal(size=(m,)).astype(np.float32)
+    coef[-bm // 2:] = 0.0
+    Z = r.normal(size=(b, d)).astype(np.float32)
+    sq = jnp.sum(jnp.asarray(vals) ** 2, axis=-1)
+    inv = jnp.float32(0.2)
+    got = ell_rbf_accumulate(jnp.asarray(vals), jnp.asarray(cols), sq,
+                             jnp.asarray(coef), jnp.asarray(Z), inv,
+                             block_m=bm, block_q=bq, interpret=True)
+    want = ref.ell_rbf_accumulate(jnp.asarray(vals), jnp.asarray(cols), sq,
+                                  jnp.asarray(coef), jnp.asarray(Z), inv)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_accumulate_ops_wrappers():
+    """ops-level entry points: pad to lane multiples, pick blocks, and fall
+    back to the oracle on sizes that fit no grid."""
+    r = np.random.default_rng(5)
+    for m, b in [(256, 64), (300, 37)]:       # second: oracle fallback
+        X = jnp.asarray(r.normal(size=(m, 20)).astype(np.float32))
+        sq = jnp.sum(X * X, axis=-1)
+        coef = jnp.asarray(r.normal(size=(m,)).astype(np.float32))
+        Z = jnp.asarray(r.normal(size=(b, 20)).astype(np.float32))
+        got = ops.rbf_accumulate(X, sq, coef, Z, jnp.float32(0.5))
+        want = ref.rbf_accumulate(X, sq, coef, Z, jnp.float32(0.5))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

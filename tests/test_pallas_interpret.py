@@ -43,6 +43,21 @@ def test_cached_hot_loop_interpret(fmt):
 
 
 @pytest.mark.parametrize("fmt", ["dense", "ell"])
+def test_serve_accumulate_interpret(fmt):
+    """The serve-time fused accumulate kernel bodies (rbf_accumulate /
+    ell_rbf_accumulate) through the full inference plane: a Pallas engine
+    over a Pallas-trained model must match the jnp host oracle."""
+    X, y = _data()
+    m = train(X, y, format=fmt, use_pallas=True, **KW)
+    rng = np.random.default_rng(7)
+    Z = X[rng.integers(0, len(X), 200)].astype(np.float32)
+    ref = m.decision_function_host(Z)
+    eng = m.serve_engine(use_pallas=True)
+    np.testing.assert_allclose(eng.decision_function(Z), ref,
+                               rtol=1e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
 def test_device_pipeline_steps_interpret(fmt):
     """Device compaction and the mirror reconstruction/un-shrink under the
     Pallas hot loop: the pipeline steps themselves are kernel-free jnp

@@ -1,0 +1,206 @@
+"""Inference-plane tests: ``core.serve.ServeEngine`` vs the host scoring
+oracle (``SVMModel.decision_function_host``) across storage formats,
+backends, sharding, query ingest formats, bucket padding, and the
+``compact()`` deployment artifact."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import ServeEngine, SVMConfig, SMOSolver
+from repro.data import sparse as sp
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _problem(fmt, n=300, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = np.where(X[:, 0] + 0.3 * X[:, 1] > 0, 1.0, -1.0).astype(np.float32)
+    m = SMOSolver(SVMConfig(C=1.0, sigma2=1.0, format=fmt)).fit(X, y)
+    Z = (X[rng.integers(0, n, 137)] +
+         0.1 * rng.normal(size=(137, d))).astype(np.float32)
+    return m, Z
+
+
+def _to_csr(Z):
+    indptr = np.zeros(Z.shape[0] + 1, np.int64)
+    data, idx = [], []
+    for i, row in enumerate(Z):
+        nz = np.flatnonzero(row)
+        data.append(row[nz])
+        idx.append(nz)
+        indptr[i + 1] = indptr[i] + nz.size
+    return sp.CSRMatrix(np.concatenate(data).astype(np.float32),
+                        np.concatenate(idx).astype(np.int32), indptr, Z.shape)
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_engine_matches_host_oracle(fmt, use_pallas):
+    m, Z = _problem(fmt)
+    ref = m.decision_function_host(Z)
+    assert np.abs(ref).max() > 0.5          # scores are O(1), not all -beta
+    eng = ServeEngine(m, use_pallas=use_pallas)
+    np.testing.assert_allclose(eng.decision_function(Z), ref,
+                               rtol=1e-4, atol=2e-5)
+    assert eng.describe()["n_sv"] == m.sv_coef.size
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+def test_model_routes_through_engine(fmt):
+    """``decision_function``/``predict`` go through the cached engine and
+    agree with the host oracle; the engine cache is per keyword spec."""
+    m, Z = _problem(fmt)
+    ref = m.decision_function_host(Z)
+    np.testing.assert_allclose(m.decision_function(Z), ref,
+                               rtol=1e-4, atol=2e-5)
+    np.testing.assert_array_equal(m.predict(Z),
+                                  np.where(ref >= 0.0, 1.0, -1.0))
+    assert m.serve_engine() is m.serve_engine()
+    assert m.serve_engine() is not m.serve_engine(min_bucket=32)
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+def test_csr_query_ingest_exact(fmt):
+    """CSR queries densify per bucket on the host — scores must be
+    bit-identical to scoring the same matrix passed dense."""
+    m, Z = _problem(fmt)
+    Zs = Z.copy()
+    Zs[np.abs(Zs) < 0.5] = 0.0
+    eng = ServeEngine(m)
+    np.testing.assert_array_equal(eng.decision_function(_to_csr(Zs)),
+                                  eng.decision_function(Zs))
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+def test_bucket_padding_invariance(fmt):
+    """A query's score must not depend on which pow2 bucket it rides in:
+    per-row kernel math never mixes rows, so one-at-a-time scoring, the
+    whole batch, and a ragged split must agree to float tolerance."""
+    m, Z = _problem(fmt)
+    eng = ServeEngine(m, min_bucket=16, max_bucket=64)
+    whole = eng.decision_function(Z)              # 64-buckets + ragged tail
+    one = np.concatenate([eng.decision_function(Z[i: i + 1])
+                          for i in range(0, 24)])
+    np.testing.assert_allclose(whole[:24], one, rtol=1e-5, atol=1e-6)
+    split = np.concatenate([eng.decision_function(Z[:50]),
+                            eng.decision_function(Z[50:])])
+    np.testing.assert_allclose(whole, split, rtol=1e-5, atol=1e-6)
+    assert set(eng.describe()["buckets"]) <= {16, 32, 64}
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+def test_compact_scores_identical_fp32(fmt):
+    """Dedup (coefs merge over bitwise-equal rows) + zero-coef pruning is
+    score-exact in fp32; constructed duplicates shrink the SV set."""
+    m, Z = _problem(fmt)
+    ref = m.decision_function_host(Z)
+    # graft duplicates: repeat the first 40 SV rows with split coefs
+    if fmt == "dense":
+        m2 = type(m)(m.config, np.concatenate([m.sv_x, m.sv_x[:40]]),
+                     np.concatenate([m.sv_coef, 0 * m.sv_coef[:40]]),
+                     m.beta, m.alpha, m.stats)
+    else:
+        m2 = type(m)(m.config, None,
+                     np.concatenate([m.sv_coef, 0 * m.sv_coef[:40]]),
+                     m.beta, m.alpha, m.stats,
+                     sv_vals=np.concatenate([m.sv_vals, m.sv_vals[:40]]),
+                     sv_cols=np.concatenate([m.sv_cols, m.sv_cols[:40]]),
+                     n_features=m.n_features)
+    mc = m2.compact()
+    assert mc.sv_coef.size <= m.sv_coef.size       # dupes + zero coefs gone
+    assert np.all(mc.sv_coef != 0.0)
+    np.testing.assert_allclose(mc.decision_function(Z), ref,
+                               rtol=1e-4, atol=2e-5)
+    np.testing.assert_allclose(mc.decision_function_host(Z), ref,
+                               rtol=1e-4, atol=2e-5)
+
+
+def test_compact_merges_split_coefs():
+    """Duplicated rows with nonzero split coefficients merge additively."""
+    m, Z = _problem("dense")
+    half = (m.sv_coef / 2).astype(np.float32)
+    m2 = type(m)(m.config, np.concatenate([m.sv_x, m.sv_x]),
+                 np.concatenate([half, half]), m.beta, m.alpha, m.stats)
+    mc = m2.compact()
+    assert mc.sv_coef.size == m.sv_coef.size
+    np.testing.assert_allclose(mc.decision_function(Z),
+                               m.decision_function_host(Z),
+                               rtol=1e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+def test_bf16_storage_tolerance(fmt):
+    """bf16 SV storage: half the resident value bytes, scores within the
+    one-storage-rounding envelope of fp32."""
+    m, Z = _problem(fmt)
+    ref = m.decision_function_host(Z)
+    e32 = ServeEngine(m)
+    e16 = ServeEngine(m, dtype="bfloat16")
+    assert e16.describe()["dtype"] == "bfloat16"
+    got = e16.decision_function(Z)
+    np.testing.assert_allclose(got, ref, rtol=2e-2, atol=3e-2)
+    # value arrays are exactly half the bytes
+    assert np.asarray(e16._sv[0]).nbytes * 2 == np.asarray(e32._sv[0]).nbytes
+    # compact(dtype=...) round-trips through the model API too
+    mb = m.compact(dtype="bfloat16")
+    np.testing.assert_allclose(mb.decision_function(Z), ref,
+                               rtol=2e-2, atol=3e-2)
+    np.testing.assert_allclose(mb.decision_function_host(Z), ref,
+                               rtol=2e-2, atol=3e-2)
+
+
+def test_engine_rejects_bad_specs():
+    m, Z = _problem("dense")
+    with pytest.raises(ValueError):
+        ServeEngine(m, dtype="float16")
+    with pytest.raises(ValueError):
+        ServeEngine(m, min_bucket=0)
+    with pytest.raises(ValueError):
+        ServeEngine(m).decision_function(Z[:, :3])   # wrong feature dim
+
+
+def test_sharded_engine_matches_single_device_4dev():
+    """shard_map engine on 4 forced host devices == single-device scores
+    (psum over SV partials; fp32, so only reduction-order noise)."""
+    code = """
+        import numpy as np
+        from repro.core import ServeEngine, SVMConfig, SMOSolver
+        rng = np.random.default_rng(0)
+        n, d = 300, 6
+        X = rng.normal(size=(n, d)).astype(np.float32)
+        y = np.where(X[:, 0] + 0.3 * X[:, 1] > 0, 1.0,
+                     -1.0).astype(np.float32)
+        Z = (X[rng.integers(0, n, 137)] +
+             0.1 * rng.normal(size=(137, d))).astype(np.float32)
+        for fmt in ("dense", "ell"):
+            m = SMOSolver(SVMConfig(C=1.0, sigma2=1.0, format=fmt)).fit(X, y)
+            ref = m.decision_function_host(Z)
+            for up in (False, True):
+                eng = ServeEngine(m, shards=4, use_pallas=up)
+                assert eng.describe()["shards"] == 4
+                np.testing.assert_allclose(eng.decision_function(Z), ref,
+                                           rtol=1e-4, atol=2e-5)
+        print("OK")
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+def test_roofline_pricing_terms():
+    """Bucket-executable pricing: positive compute/memory terms and a
+    useful_ratio in (0, 1] against the model FLOPs."""
+    m, _ = _problem("dense")
+    rf = ServeEngine(m).roofline(64).row()
+    assert rf["t_compute_s"] > 0 and rf["t_memory_s"] > 0
+    assert 0 < rf["useful_ratio"] <= 1.5      # CPU HLO may fuse below model
