@@ -8,12 +8,58 @@ Prints ``name,us_per_call,derived`` CSV rows.
   roofline   LM arch x shape terms from results/dryrun_all.json (if present)
 
 Full sweep: ``python -m benchmarks.run``; quick subset: ``--quick``.
+
+``--bench-summary BENCH_summary.json`` skips the sweeps and instead merges
+every ``BENCH_*.json`` artifact in the working directory (the per-sweep
+files ``sparse_bench.py`` writes and CI uploads individually) into ONE
+summary artifact: per bench, the record count plus min/max of the headline
+metrics, so a single download answers "did the batched multi win hold, did
+the cache hit, what's the ELL ratio" without opening seven files.
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
+
+# metric keys worth surfacing in the merged artifact; everything else in
+# the per-bench records stays in the per-bench files
+_HEADLINE_KEYS = ("speedup", "speedup_vs_sequential", "hit_rate",
+                  "us_per_iter", "us_per_iter_problem", "us_per_row",
+                  "us_per_point", "bytes_ratio", "iterations")
+
+
+def summarize_benches(out_path: str, pattern: str = "BENCH_*.json") -> dict:
+    """Merge every per-sweep ``BENCH_*.json`` into one summary dict and
+    write it to ``out_path``. Returns the summary."""
+    benches = {}
+    for path in sorted(glob.glob(pattern)):
+        if os.path.abspath(path) == os.path.abspath(out_path):
+            continue
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+        except (OSError, ValueError) as e:
+            benches[os.path.basename(path)] = {"error": str(e)}
+            continue
+        records = [r for r in blob.get("records", [])
+                   if isinstance(r, dict)]
+        head = {}
+        for key in _HEADLINE_KEYS:
+            vals = [r[key] for r in records
+                    if isinstance(r.get(key), (int, float))]
+            if vals:
+                head[key] = {"min": min(vals), "max": max(vals)}
+        benches[blob.get("bench", os.path.basename(path))] = {
+            "file": os.path.basename(path),
+            "n_records": len(records),
+            "headline": head,
+        }
+    summary = {"bench": "summary", "benches": benches}
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=1)
+    return summary
 
 
 def main() -> None:
@@ -21,7 +67,18 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="2 datasets, 4 heuristics, no scaling")
     ap.add_argument("--no-scaling", action="store_true")
+    ap.add_argument("--bench-summary", default=None, metavar="OUT",
+                    help="merge BENCH_*.json artifacts in the working "
+                         "directory into OUT and exit (no sweeps)")
     args = ap.parse_args()
+
+    if args.bench_summary:
+        summary = summarize_benches(args.bench_summary)
+        for name, info in summary["benches"].items():
+            print(f"{name}: {info.get('n_records', '?')} records "
+                  f"from {info.get('file', '?')}", flush=True)
+        print(f"wrote {args.bench_summary}", flush=True)
+        return
 
     from benchmarks import svm_figs
     print("name,us_per_call,derived")

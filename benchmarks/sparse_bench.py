@@ -67,6 +67,16 @@ over. us/iter should fall monotonically to the amortization knee, where
 dispatch overhead stops being a measurable share of an iteration; on CPU
 the sync is cheap, so across PCIe/ICI the knee sits at larger k.
 
+Multi-problem sweep (``--multi-out`` -> ``BENCH_multi.json``): batched
+K-problem training (``core.multi.MultiProblemDriver``, K SMO subproblems
+sharing one device mirror with amortized kernel-row production) against
+K sequential fits, sweeping K in {2, 4, 8, 16} x dense/ELL x row-cache
+on/off on a repeat-heavy C-grid workload. Reports aggregate us per
+iteration*problem and the shared-cache hit rate; asserts en passant the
+bitwise per-problem parity against the sequential oracle, the batched
+throughput win for K >= 4, and that cross-problem row reuse lifts the
+cache hit rate strictly above the single-problem baseline.
+
 Serving sweep (``--serve-out`` -> ``BENCH_serve.json``): the inference
 plane (``core/serve.ServeEngine``) against the seed-era host block loop
 (``decision_function_host``) across batch size x SV count x storage format
@@ -103,6 +113,14 @@ SPECS = (
      "quick": {"n": 640, "d": 3072}},
     {"name": "webspam-like", "n": 2048, "d": 4096, "density": 0.008,
      "quick": {"n": 768, "d": 2048}},
+    # Multi-class OvR workloads (covtype/news20 stand-ins from
+    # data.synthetic.SPECS): K one-vs-rest problems trained as ONE batched
+    # fit through core.multi.MultiProblemDriver — the spec's C/sigma2 ride
+    # in from the DatasetSpec; ``scale`` picks the CI-budget N.
+    {"name": "covtype-like", "spec": "covtype", "n_classes": 7,
+     "scale": 0.0015, "quick": {"scale": 0.0008}},
+    {"name": "news20-like", "spec": "news20", "n_classes": 20,
+     "scale": 0.008, "quick": {"scale": 0.005}},
 )
 
 CONFIGS = (
@@ -152,6 +170,41 @@ def _bench_dataset(X, y, n: int, d: int, heuristic: str, eps: float,
     return records
 
 
+def _bench_multiclass(spec: dict, eps: float, seed: int) -> list[dict]:
+    """One-vs-rest training of a multi-class spec through the batched
+    multi-problem driver, dense vs ELL storage; the summed per-class dual
+    objective is asserted ELL-vs-dense like the binary sweep."""
+    from repro.core.multi import MultiProblemDriver
+    from repro.data import SPECS as DATA_SPECS, make
+    ds = DATA_SPECS[spec["spec"]]
+    X, y, _, _ = make(ds, scale=spec["scale"], seed=seed)
+    n, d = X.shape
+    records, by_fmt = [], {}
+    for fmt in ("dense", "ell"):
+        cfg = SVMConfig(C=ds.C, sigma2=ds.sigma2, eps=eps,
+                        heuristic="multi5pc", chunk_iters=128,
+                        min_buffer=64, format=fmt)
+        mdl = MultiProblemDriver(cfg).fit_ovr(X, y)
+        st = mdl.stats
+        total_it = sum(r["iterations"] for r in st.per_problem)
+        rec = {
+            "spec": spec["name"], "fmt": fmt, "n": n, "d": d,
+            "n_classes": int(spec["n_classes"]),
+            "iterations": total_it,
+            "us_per_iter_problem": (st.train_time * 1e6
+                                    / max(total_it, 1)),
+            "obj": float(sum(m.dual_objective() for m in mdl.models)),
+            "n_sv_union": (int(mdl._union.sv_coef.shape[0])
+                           if mdl._union is not None else 0),
+        }
+        by_fmt[fmt] = rec
+        records.append(rec)
+    rel = (abs(by_fmt["ell"]["obj"] - by_fmt["dense"]["obj"])
+           / max(abs(by_fmt["dense"]["obj"]), 1e-9))
+    assert rel < 1e-2, f"ell/dense OvR objective diverged at {spec}: {rel}"
+    return records
+
+
 def bench_sparse(n: int = 1024, d: int = 2048, densities=DENSITIES,
                  heuristic: str = "single1000", eps: float = 1e-3,
                  seed: int = 0, quick: bool = False) -> list[dict]:
@@ -162,6 +215,9 @@ def bench_sparse(n: int = 1024, d: int = 2048, densities=DENSITIES,
                                   {"density": rho})
     for spec in SPECS:
         dims = {**spec, **spec["quick"]} if quick else spec
+        if spec.get("n_classes", 2) > 2:
+            records += _bench_multiclass(dims, eps, seed)
+            continue
         ns, ds = dims["n"], dims["d"]
         X, y = make_sparse(ns, ds, spec["density"], seed=seed)
         records += _bench_dataset(
@@ -356,6 +412,129 @@ def bench_epoch(sizes=(1536, 3072), d: int = 384, density: float = 0.05,
     return records
 
 
+MULTI_KS = (2, 4, 8, 16)
+
+
+def bench_multi(n: int = 768, d: int = 256, density: float = 0.2,
+                eps: float = 1e-3, seed: int = 5, Ks=MULTI_KS,
+                slots: int = 768) -> list[dict]:
+    """Batched K-problem training vs K sequential fits (see module doc).
+
+    A repeat-heavy workload swept as a C grid: problem k trains at
+    ``CS_ALL[k]`` regardless of which batch it rides in, so ONE
+    sequential 16-fit sweep per format is both the timing baseline and
+    the per-problem parity oracle for every K (a problem's trajectory
+    depends only on (X, y, C), never on its batch-mates — that is the
+    exactness contract the assert pins, bitwise on alpha).
+
+    Timing: the sequential baseline amortizes its one-time compile over
+    the 16-fit sweep (exactly what a real sequential grid run pays); the
+    batched side is fit twice per (K, cache) and the warm second fit
+    reported, since each (K, format, cache) shape is a fresh executable.
+    Reported metric is aggregate us per iteration*problem — total wall
+    time over total per-problem productive iterations.
+
+    Cache-on runs must show cross-problem row reuse: the shared-cache
+    hit rate is asserted strictly above the single-problem (K=1)
+    baseline for K >= 4, and the batched-vs-sequential throughput win is
+    asserted for K >= 4.
+    """
+    from repro.core.multi import MultiProblemDriver
+    X, y = make_repeat_heavy(n, d, density, seed=seed)
+    CS_ALL = np.geomspace(0.5, 8.0, max(Ks))
+    records = []
+
+    def mkcfg(fmt, rc, C=1.0):
+        return SVMConfig(C=C, sigma2=float(d) / 8.0, eps=eps,
+                         heuristic="multi5pc", chunk_iters=128,
+                         fuse_iters=4, min_buffer=64, format=fmt,
+                         row_cache=rc, row_cache_slots=slots)
+
+    for fmt in ("dense", "ell"):
+        # single-problem cache baseline: the hit rate K lanes must beat
+        m1 = SMOSolver(mkcfg(fmt, True)).fit(X, y)
+        base_hit = m1.stats.cache_hit_rate
+        records.append({"fmt": fmt, "K": 1, "cache": True,
+                        "kind": "single_baseline", "hit_rate": base_hit,
+                        "iterations": m1.stats.iterations})
+        # ONE sequential sweep over all 16 C values: oracle + baseline
+        t0 = time.perf_counter()
+        ml = MultiProblemDriver(mkcfg(fmt, False), backend="loop") \
+            .fit_tasks(X, np.broadcast_to(y, (CS_ALL.size, n)).copy(),
+                       C=CS_ALL)
+        t_loop = time.perf_counter() - t0
+        loop_t = np.asarray([m.stats.train_time for m in ml])
+        loop_it = np.asarray([m.stats.iterations for m in ml])
+        records.append({"fmt": fmt, "K": int(CS_ALL.size), "cache": False,
+                        "kind": "sequential_sweep",
+                        "iterations": int(loop_it.sum()),
+                        "wall_s": t_loop,
+                        "us_per_iter_problem": (float(loop_t.sum()) * 1e6
+                                                / max(loop_it.sum(), 1))})
+        for K in Ks:
+            Y = np.broadcast_to(y, (K, n)).copy()
+            seq_us = float(loop_t[:K].sum()) * 1e6 / max(loop_it[:K].sum(), 1)
+            for rc in (False, True):
+                mb = None
+                for _ in range(2):        # second fit = warm executable
+                    mb = MultiProblemDriver(mkcfg(fmt, rc)) \
+                        .fit_tasks(X, Y, C=CS_ALL[:K])
+                st = mb[0].stats
+                tot_it = sum(r["iterations"] for r in st.per_problem)
+                # per-problem parity vs the sequential oracle, bitwise
+                for k in range(K):
+                    assert (st.per_problem[k]["iterations"]
+                            == ml[k].stats.iterations), \
+                        (fmt, K, rc, k, st.per_problem[k],
+                         ml[k].stats.iterations)
+                    assert np.array_equal(mb[k].alpha, ml[k].alpha), \
+                        (fmt, K, rc, k)
+                rec = {
+                    "fmt": fmt, "K": K, "cache": rc, "kind": "batched",
+                    "iterations": tot_it,
+                    "joint_iterations": st.joint_iters,
+                    "us_per_iter_problem": (st.train_time * 1e6
+                                            / max(tot_it, 1)),
+                    "seq_us_per_iter_problem": seq_us,
+                    "speedup_vs_sequential": seq_us / (st.train_time * 1e6
+                                                       / max(tot_it, 1)),
+                    "hit_rate": st.cache_hit_rate,
+                    "cache_hits": st.cache_hits,
+                    "cache_misses": st.cache_misses,
+                    "flops_est": st.flops_est,
+                }
+                records.append(rec)
+                if K >= 4:
+                    assert rec["speedup_vs_sequential"] > 1.0, rec
+                    if rc:
+                        # shared cache: cross-problem reuse must lift the
+                        # hit rate above the single-problem baseline
+                        assert rec["hit_rate"] > base_hit, (rec, base_hit)
+    return records
+
+
+def multi_csv_lines(records: list[dict]) -> list[str]:
+    lines = []
+    for r in records:
+        if r["kind"] == "single_baseline":
+            lines.append(f"multi/{r['fmt']}/K1-baseline,0.0,"
+                         f"hit_rate={r['hit_rate']:.3f}")
+            continue
+        if r["kind"] == "sequential_sweep":
+            lines.append(f"multi/{r['fmt']}/sequential,"
+                         f"{r['us_per_iter_problem']:.1f},"
+                         f"iters={r['iterations']}")
+            continue
+        tag = "on" if r["cache"] else "off"
+        extra = f";hit_rate={r['hit_rate']:.3f}" if r["cache"] else ""
+        lines.append(
+            f"multi/{r['fmt']}/K{r['K']}/cache-{tag},"
+            f"{r['us_per_iter_problem']:.1f},"
+            f"iters={r['iterations']};joint={r['joint_iterations']}"
+            f";speedup={r['speedup_vs_sequential']:.2f}{extra}")
+    return lines
+
+
 SERVE_BATCHES = (16, 64, 256, 1024)
 
 
@@ -532,6 +711,13 @@ def cache_csv_lines(records: list[dict]) -> list[str]:
 def csv_lines(records: list[dict]) -> list[str]:
     lines = []
     for r in records:
+        if "n_classes" in r:
+            lines.append(
+                f"sparse/{r['spec']}/ovr{r['n_classes']}/{r['fmt']},"
+                f"{r['us_per_iter_problem']:.1f},"
+                f"iters={r['iterations']};obj={r['obj']:.4f}"
+                f";n_sv_union={r['n_sv_union']}")
+            continue
         extra = "" if r["fmt"] == "dense" else (
             f";K={r['buffer_K'][0]};K_min={min(r['buffer_K'])}"
             f";mem_ratio={r['mem_ratio']:.3f}")
@@ -565,12 +751,16 @@ def main(argv=None) -> None:
                     help="run the serving engine-vs-host-loop sweep and "
                          "write it as a JSON artifact (BENCH_serve.json "
                          "in CI)")
+    ap.add_argument("--multi-out", default=None,
+                    help="run the batched-vs-sequential multi-problem "
+                         "sweep and write it as a JSON artifact "
+                         "(BENCH_multi.json in CI)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller problems (CI-budget run)")
     args = ap.parse_args(argv)
     if args.out or not (args.cache_out or args.compact_out
                         or args.recon_out or args.epoch_out
-                        or args.serve_out):
+                        or args.serve_out or args.multi_out):
         kw = dict(n=512, d=1024) if args.quick else {}
         records = bench_sparse(quick=args.quick, **kw)
         for line in csv_lines(records):
@@ -627,6 +817,15 @@ def main(argv=None) -> None:
             json.dump({"bench": "serve", "records": serve_records},
                       f, indent=1)
         print(f"wrote {args.serve_out}", flush=True)
+    if args.multi_out:
+        kw = dict(n=512, d=192, slots=512) if args.quick else {}
+        multi_records = bench_multi(**kw)
+        for line in multi_csv_lines(multi_records):
+            print(line, flush=True)
+        with open(args.multi_out, "w") as f:
+            json.dump({"bench": "multi_problem", "records": multi_records},
+                      f, indent=1)
+        print(f"wrote {args.multi_out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -52,3 +52,33 @@ drift = np.abs(scores - model.decision_function_host(Xt[:100])).max()
 print(f"serving: {engine.describe()['n_sv']} SVs "
       f"({engine.memory_bytes()} device bytes, bf16), "
       f"bf16-vs-fp32 score drift {drift:.1e}")
+
+# ---- Multi-class and hyperparameter grids ---------------------------------
+# K related binary problems — one-vs-rest classes, or one C per grid
+# point — share the SAME training set, so MultiProblemDriver trains them
+# as ONE batched device program over one resident mirror: joint
+# iterations retire problems as they converge, kernel rows are produced
+# once and shared through the row cache, and each problem's trajectory
+# stays bitwise identical to training it alone (backend="loop" is that
+# oracle). CLI: ``python -m repro.launch.svm_train --dataset covtype``
+# (OvR) or ``--dataset a7a --grid-c 0.5,2,8`` (C sweep).
+from repro.core import MultiProblemDriver, train_ovr
+
+Xc, yc, Xct, yct = make("covtype", scale=0.0008, seed=0)
+ovr = train_ovr(Xc, yc, C=spec.C, sigma2=16.0, eps=1e-3,
+                heuristic="multi5pc", chunk_iters=128, min_buffer=64,
+                row_cache=True, row_cache_slots=256)
+st = ovr.stats
+print(f"covtype-like OvR: {len(ovr.classes)} classes, "
+      f"iters={st.iterations} (joint {st.joint_iters}), "
+      f"union SVs={st.n_sv}, "
+      f"cache_hit={st.cache_hit_rate:.2f}, "
+      f"acc={(ovr.predict(Xct) == yct).mean():.4f}")
+
+# C-grid sweep on the binary problem above: one fit, one model per C
+cfg = SVMConfig(C=spec.C, sigma2=spec.sigma2, eps=1e-3,
+                heuristic="multi5pc", chunk_iters=128, min_buffer=64)
+for C, m in zip([0.5, 2.0, 8.0],
+                MultiProblemDriver(cfg).fit_grid(X, y, [0.5, 2.0, 8.0])):
+    print(f"  grid C={C:3.1f}: nsv={int((m.alpha > 0).sum())} "
+          f"obj={m.dual_objective():.2f}")

@@ -2,8 +2,11 @@
 from repro.core.heuristics import TABLE3, ShrinkHeuristic, get as get_heuristic
 from repro.core.serve import ServeEngine
 from repro.core.solver import SVMConfig, SVMModel, SMOSolver, FitStats, train
+from repro.core.multi import (MultiProblemDriver, OvRSVMModel, ovr_tasks,
+                              train_ovr)
 
 __all__ = [
     "TABLE3", "ShrinkHeuristic", "get_heuristic", "ServeEngine",
     "SVMConfig", "SVMModel", "SMOSolver", "FitStats", "train",
+    "MultiProblemDriver", "OvRSVMModel", "ovr_tasks", "train_ovr",
 ]

@@ -8,6 +8,19 @@ placement, Alg. 6 reconstruction); the Single/Multi policy logic,
 checkpoint/resume, physical compaction, and stats accounting live here
 and nowhere else.
 
+The PROBLEM axis: everything below is written for ONE binary subproblem
+(one alpha/gamma pair over one buffer). When K related subproblems share
+the training set — one-vs-rest classes, a C grid —
+:class:`repro.core.multi.MultiProblemDriver` batches them onto a leading
+(K,) lane axis over the same resident store instead of looping this
+driver K times: one joint dispatch loop, per-problem convergence and
+retirement inside it, per-problem logical shrinking with union physical
+compaction, and kernel-row production amortized across problems through
+the shared row cache. Per problem the trajectory is bit-identical to
+this driver run alone (``MultiProblemDriver(backend='loop')`` is exactly
+that oracle), so the state machine documented here is also the spec for
+each lane of the batched runner.
+
 Phases (faithful to Alg. 5):
 
   shrink stage    run jitted SMO chunks with in-loop shrinking until
@@ -154,9 +167,31 @@ class FitStats:
                                  # passes + the selection sweep) and cache-
                                  # aware (hits skip the kernel-row pass and
                                  # are billed only the O(M) FMA epilogue)
+    flops_production: float = 0.0   # kernel-row production component of
+                                 # flops_est. Multi-problem rule: a row is
+                                 # billed ONCE per physical production — a
+                                 # cross-problem cache hit produces nothing
+                                 # and is billed nothing here.
+    flops_epilogue: float = 0.0  # O(M) FMA/selection epilogue component of
+                                 # flops_est, billed per problem-iteration:
+                                 # a shared row still feeds K distinct gamma
+                                 # updates, so epilogue scales with sum_k
+                                 # iters_k while production does not.
     cache_hits: int = 0          # kernel rows served from the LRU row cache
+                                 # (aggregate over problems in a batched
+                                 # multi fit; cross-problem reuse counts)
     cache_misses: int = 0        # kernel rows (re)computed by the provider
     cache_hit_rate: float = 0.0  # hits / (hits + misses); 0 when cache off
+    n_problems: int = 1          # problems sharing this fit (K of a batched
+                                 # core.multi fit; 1 for ordinary fits)
+    per_problem: list = dataclasses.field(default_factory=list)
+                                 # one record per problem lane of a multi
+                                 # fit: iterations/converged/stalled/
+                                 # shrink_events/reconstructions/n_sv/...
+    joint_iters: int = 0         # batched while-loop body executions (the
+                                 # stacked row GEMM runs once per joint
+                                 # iteration regardless of how many problem
+                                 # lanes are still live)
     mirror: str = ""             # resolved full-set mirror mode for this fit:
                                  # 'device' (jitted Alg. 6 + device un-shrink)
                                  # or 'host' (streaming paths / fallback)
@@ -714,9 +749,12 @@ class EpochDriver:
                 else:
                     rows_new = 2 * iters_done
                 epilogue = 12.0 if cfg.selection == "wss2" else 4.0
-                stats.flops_est += (rows_new * self.data.flops_row_pass()
-                                    + iters_done * epilogue) \
-                    * float(self.data.m)
+                prod = (rows_new * self.data.flops_row_pass()
+                        * float(self.data.m))
+                epi = iters_done * epilogue * float(self.data.m)
+                stats.flops_production += prod
+                stats.flops_epilogue += epi
+                stats.flops_est += prod + epi
                 if cfg.checkpoint_dir:
                     ckpt_count += int(summ.segs)
                     if ckpt_count % cfg.checkpoint_every == 0:

@@ -1,0 +1,1121 @@
+"""Batched multi-problem SMO training: K binary subproblems over ONE
+resident buffer, with amortized kernel-row production.
+
+The paper's Table 3 grid and every production deployment train *many*
+binary problems — one-vs-rest classes and (C, gamma) hyperparameter
+sweeps — yet kernel rows K(i, .) depend only on X, never on a problem's
+alpha. This module turns K sequential fits into one batched device
+program over a single data buffer:
+
+  * per-problem state is stacked on a leading problem axis — alpha/gamma/
+    active are (K, M), selection scalars are (K,) (:class:`MultiSMOState`);
+  * pair selection, the analytic update, and the shrink rule run as the
+    vectorized ``smo.*_multi`` twins of the scalar machinery — elementwise
+    f32 plus exact-comparison argmin/argmax, so each problem's trajectory
+    is bit-identical to running it alone given the same row bits;
+  * kernel-row production is amortized across problems. Cache OFF: the 2K
+    working-set rows of one joint iteration are produced by ONE stacked
+    (M, 2K) provider GEMM — X is read once per iteration instead of K
+    times, which is where the aggregate us/iter*problem win comes from
+    (row production is memory-bound). Cache ON: each problem's pair goes
+    through ONE shared ``rowcache.RowCache`` keyed by global row id, so a
+    row any problem produced serves every other problem's hit — the
+    cached path reuses the exact per-problem compute islands of the
+    scalar runner and is bit-identical to the ``multi_backend='loop'``
+    oracle per problem;
+  * per-problem convergence masks retire finished problems *inside* the
+    ``lax.while_loop``: a frozen problem's lanes are carried through
+    ``jnp.where`` (never ``lax.cond`` — a cond would copy the (S, M)
+    cache table every iteration) and its idle cache accesses are counter-
+    gated (``live=`` on the accessors), so K problems of different
+    difficulty share one dispatch without distorting the statistics;
+  * shrinking stays per-problem *logical* (the (K, M) active masks);
+    *physical* compaction triggers on the union of live problems'
+    survivors — a row leaves the buffer only when every problem shrank it
+    (the intersection of shrunk sets), so the paper's adaptive-shrinking
+    FLOP win survives without K divergent buffer geometries.
+
+:class:`MultiProblemDriver` owns the host control flow (the Alg. 5 state
+machine per problem lane): per-problem tolerance schedules, gradient
+reconstruction + un-shrink + retirement, union compaction, checkpoint
+save/resume of the (K, n) masters, and per-problem finalize into ordinary
+:class:`repro.core.solver.SVMModel`s. ``multi_backend='loop'`` runs the K
+problems through the ordinary single-problem solver sequentially — the
+parity oracle and the baseline ``BENCH_multi.json`` beats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+import time
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import dataplane, driver, kernel_fns, mirror, rowcache, smo, util
+from repro.core import heuristics as H
+from repro.core.solver import SVMConfig, SVMModel, SMOSolver
+from repro.data import sparse as spfmt
+
+_INT32_MAX = 2**31 - 1   # per-problem shrink-disable sentinel for next_shrink
+
+
+class MultiSMOState(NamedTuple):
+    """K stacked problem states over one shared buffer of M rows."""
+    alpha: jax.Array        # (K, M) f32
+    gamma: jax.Array        # (K, M) f32
+    active: jax.Array       # (K, M) bool — per-problem logical shrink mask
+    beta_up: jax.Array      # (K,) f32
+    beta_low: jax.Array     # (K,) f32
+    i_up: jax.Array         # (K,) i32
+    i_low: jax.Array        # (K,) i32
+    step: jax.Array         # (K,) i32 — per-problem iteration counters
+    next_shrink: jax.Array  # (K,) i32 (INT32_MAX = shrinking disabled)
+    n_shrinks: jax.Array    # (K,) i32
+    converged: jax.Array    # (K,) bool
+    stalled: jax.Array      # (K,) bool
+    live: jax.Array         # (K,) bool — False once the driver retires the
+                            # problem; frozen lanes stop advancing but stay
+                            # resident (jnp.where carries, no cond)
+
+
+class MultiEpochSummary(NamedTuple):
+    """Fixed-size readback of one batched dispatch — (K,) lanes where the
+    single-problem :class:`repro.core.smo.EpochSummary` had scalars."""
+    step: jax.Array          # (K,) i32 per-problem iteration counters
+    segs: jax.Array          # i32 segments actually run
+    joint_iters: jax.Array   # i32 joint while-loop body executions (the
+                             # stacked row GEMM runs once per joint iter —
+                             # what production FLOPs are billed on)
+    n_active: jax.Array      # (K,) i32 per-problem active counts
+    n_active_union: jax.Array  # i32 rows active for >= 1 live problem
+    n_shrinks: jax.Array     # (K,) i32
+    converged: jax.Array     # (K,) bool
+    stalled: jax.Array       # (K,) bool
+    need_compact: jax.Array  # bool — union compaction predicate
+    cache_hits: jax.Array    # i32 (live-gated; 0 when cache off)
+    cache_misses: jax.Array  # i32
+
+
+def init_multi_state(alpha, gamma, active, step, next_shrink, n_shrinks,
+                     live) -> MultiSMOState:
+    """Fresh batched state around (K, M) buffer arrays; selection lanes are
+    (re)established by the runner before its first iteration."""
+    Kp = alpha.shape[0]
+    return MultiSMOState(
+        alpha=alpha, gamma=gamma, active=active,
+        beta_up=jnp.full((Kp,), -1.0, jnp.float32),
+        beta_low=jnp.full((Kp,), 1.0, jnp.float32),
+        i_up=jnp.zeros((Kp,), jnp.int32),
+        i_low=jnp.zeros((Kp,), jnp.int32),
+        step=jnp.asarray(step, jnp.int32),
+        next_shrink=jnp.asarray(next_shrink, jnp.int32),
+        n_shrinks=jnp.asarray(n_shrinks, jnp.int32),
+        converged=jnp.zeros((Kp,), bool),
+        stalled=jnp.zeros((Kp,), bool),
+        live=jnp.asarray(live, bool),
+    )
+
+
+def make_multi_runner(kernel: str, inv_2s2: float, shrink_interval: int,
+                      use_pallas: bool = False, shrink_min_interval: int = 1,
+                      selection: str = "wss1", fmt: str = "dense",
+                      cache_slots: int = 0, cache_policy: str = "lru"):
+    """Build the jitted batched fused-epoch runner::
+
+        state, cache, summary = run_epoch(data, ystk, state, cache,
+                                          thr0, thr1, Cv, tol,
+                                          k, chunk_iters, max_iters,
+                                          compact_lt, mper_lo)
+
+    The problem axis K is a trace dimension (``ystk.shape[0]``), so one
+    runner serves every K; per-problem box constants (``thr0``/``thr1``/
+    ``Cv`` from :func:`smo.box_thresholds`) and tolerances ``tol`` ride as
+    traced (K,) arrays, so a (C, gamma=shared) grid shares one executable.
+
+    Row production per joint iteration:
+
+      * cache off — one stacked (M, 2K) provider ``rows2`` GEMM over the
+        interleaved [up_0, low_0, up_1, low_1, ...] working-set rows,
+        wrapped in the exact barrier/degenerate-cond island structure of
+        ``rowcache.make_accessors`` (at K=1 this IS the scalar runner's
+        compute, bit for bit);
+      * cache on — K per-problem accesses through the ONE shared cache
+        (python-unrolled: K is static at trace time), each the exact
+        scalar compute island, so cached batched trajectories are
+        bit-identical per problem to the sequential-loop oracle while
+        cross-problem reuse multiplies the hit rate.
+
+    Frozen problems (converged/stalled/retired lanes) keep issuing their
+    last row request — the access pattern must stay trace-static — but
+    their state is carried through ``jnp.where`` and their cache counters
+    are gated with ``live=run_k``.
+
+    ``use_pallas`` routes row production through the per-problem unrolled
+    islands even with the cache off (the Pallas rows2 kernels are
+    validated at B=2); the stacked GEMM is a jnp-provider path.
+    """
+    row1 = kernel_fns.get_row(kernel)
+    kself = kernel_fns.self_kernel(kernel)
+    provider = kernel_fns.make_provider(kernel, fmt, use_pallas, inv_2s2)
+    cached = cache_slots > 0
+    stacked = (not cached) and (not use_pallas)
+
+    @functools.partial(jax.jit, donate_argnums=(2, 3))
+    def run_epoch(data, ystk, state: MultiSMOState, cache, thr0, thr1, Cv,
+                  tol, k, chunk_iters, max_iters, compact_lt, mper_lo):
+        Kp = ystk.shape[0]
+        kk = jnp.arange(Kp)
+        m = data.m
+
+        if selection == "wss2":
+            kdiag = provider.diag(data)
+
+        never = tol[0] < 0.0                    # traced False (runtime)
+        get_row1, get_rows2 = rowcache.make_accessors(
+            provider, data, cached, never, cache_policy)
+
+        def rows_dense(idx):                    # (K,) -> (K, d)
+            return jnp.stack([data.dense_row(idx[i]) for i in range(Kp)])
+
+        def kself_v(z):                         # (K, d) -> (K,)
+            return jnp.stack([jnp.asarray(kself(z[i], inv_2s2), jnp.float32)
+                              for i in range(Kp)])
+
+        def stacked_rows(zq, ncols):
+            # The uncached stacked production island — same cond/barrier
+            # structure as the accessors' uncached path (load-bearing for
+            # the K=1 == scalar-runner bitwise contract).
+            zero = jnp.zeros(data.sq_norms.shape + (ncols,), jnp.float32)
+            compute = lambda: lax.optimization_barrier(
+                provider.rows2(data, lax.optimization_barrier(zq)))
+            return lax.cond(never, lambda: zero, compute)
+
+        def run_segment(s: MultiSMOState, c, jiters):
+            b_up, i_up, b_low, i_low = smo.select_pair_multi(
+                s.gamma, s.alpha, ystk, s.active, thr0, thr1)
+            s = s._replace(beta_up=b_up, i_up=i_up, beta_low=b_low,
+                           i_low=i_low, converged=b_up + tol >= b_low,
+                           stalled=jnp.zeros((Kp,), bool))
+            start = s.step
+            lim = jnp.minimum(chunk_iters,
+                              jnp.maximum(1, max_iters - start))    # (K,)
+
+            def running(s):
+                return (s.live & (~s.converged) & (~s.stalled)
+                        & (s.step - start < lim))
+
+            def cond(carry):
+                s, _, _ = carry
+                return jnp.any(running(s))
+
+            def body(carry):
+                s, c, j = carry
+                run = running(s)                                   # (K,)
+                iu = s.i_up
+                x_up = rows_dense(iu)                              # (K, d)
+                y_up = ystk[kk, iu]
+                a_up = s.alpha[kk, iu]
+                k_uu = kself_v(x_up)
+
+                if selection == "wss2":
+                    if cached:
+                        ru = []
+                        for i in range(Kp):
+                            r, c = get_row1(c, data.gids[iu[i]], x_up[i],
+                                            live=run[i])
+                            ru.append(r)
+                        row_up = jnp.stack(ru)                     # (K, M)
+                    elif stacked:
+                        # duplicated queries (row_via_rows2's context-
+                        # stability trick, batched): (2K, d) -> take even
+                        # columns, so per-problem bits match the scalar
+                        # single-row island
+                        rows = stacked_rows(jnp.repeat(x_up, 2, axis=0),
+                                            2 * Kp)
+                        row_up = rows[:, ::2].T
+                    else:
+                        ru = []
+                        for i in range(Kp):
+                            r, c = get_row1(c, None, x_up[i])
+                            ru.append(r)
+                        row_up = jnp.stack(ru)
+                    scores = smo.wss2_scores_multi(
+                        s.gamma, s.alpha, ystk, s.active, thr0, thr1,
+                        s.beta_up, row_up, kdiag, k_uu)
+                    il = jnp.argmax(scores, axis=1).astype(jnp.int32)
+                    g_low = s.gamma[kk, il]
+                else:
+                    il = s.i_low
+                    g_low = s.beta_low
+                x_low = rows_dense(il)
+                y_low = ystk[kk, il]
+                a_low = s.alpha[kk, il]
+
+                if selection == "wss2":
+                    k_ul = row_up[kk, il]
+                else:
+                    # per-problem O(d) scalar islands — identical to the
+                    # scalar runner's barriered row1 subgraph per problem
+                    kul = []
+                    for i in range(Kp):
+                        xu_b, xl_b = lax.optimization_barrier(
+                            (x_up[i], x_low[i]))
+                        kul.append(lax.optimization_barrier(
+                            row1(xl_b[None, :], jnp.sum(xl_b * xl_b)[None],
+                                 xu_b, inv_2s2)[0]))
+                    k_ul = jnp.stack(kul)
+                k_ll = kself_v(x_low)
+
+                # Per-problem unrolled update math, NOT one (K,) vectorized
+                # pair_update: at K >= 4 the vectorized (K,) f32 chain is
+                # contracted into FMAs differently than the scalar runner's
+                # codegen (observed: 1-ulp alpha drift vs the loop oracle
+                # at K=4, none at K <= 3). Unrolled scalar lanes keep the
+                # scalar runner's contraction.
+                ups, lows = [], []
+                for i in range(Kp):
+                    u, l = smo.pair_update_multi(
+                        a_up[i], a_low[i], y_up[i], y_low[i],
+                        s.beta_up[i], g_low[i], k_ul[i], k_uu[i],
+                        k_ll[i], Cv[i])
+                    ups.append(u)
+                    lows.append(l)
+                a_up_new = jnp.stack(ups)
+                a_low_new = jnp.stack(lows)
+                d_up = a_up_new - a_up
+                d_low = a_low_new - a_low
+                stall_new = ((jnp.abs(d_up) < smo._TAU)
+                             & (jnp.abs(d_low) < smo._TAU))
+                stalled = jnp.where(run, stall_new, s.stalled)
+
+                alpha_new = s.alpha.at[kk, iu].set(a_up_new) \
+                                   .at[kk, il].set(a_low_new)
+                alpha = jnp.where(run[:, None], alpha_new, s.alpha)
+
+                coef2 = jnp.stack([y_up * d_up, y_low * d_low], axis=1)
+                if selection == "wss2":
+                    if cached:
+                        rl = []
+                        for i in range(Kp):
+                            r, c = get_row1(c, data.gids[il[i]], x_low[i],
+                                            live=run[i])
+                            rl.append(r)
+                        row_low = jnp.stack(rl)
+                    elif stacked:
+                        rows = stacked_rows(jnp.repeat(x_low, 2, axis=0),
+                                            2 * Kp)
+                        row_low = rows[:, ::2].T
+                    else:
+                        rl = []
+                        for i in range(Kp):
+                            r, c = get_row1(c, None, x_low[i])
+                            rl.append(r)
+                        row_low = jnp.stack(rl)
+                    gamma_new = (s.gamma + coef2[:, :1] * row_up
+                                 + coef2[:, 1:] * row_low)
+                elif cached:
+                    gn = []
+                    for i in range(Kp):
+                        gid2 = jnp.stack([data.gids[iu[i]],
+                                          data.gids[il[i]]])
+                        z2 = jnp.stack([x_up[i], x_low[i]])
+                        rows_i, c = get_rows2(c, gid2, z2, live=run[i])
+                        gn.append(provider.gamma_from_rows(
+                            s.gamma[i], rows_i, coef2[i]))
+                    gamma_new = jnp.stack(gn)
+                elif stacked:
+                    # ONE (M, 2K) GEMM for all K pairs — X read once per
+                    # joint iteration. Interleaved [up_0, low_0, ...] so
+                    # problem i consumes columns (2i, 2i+1) exactly like
+                    # its scalar (M, 2).
+                    z_all = jnp.stack([x_up, x_low], axis=1) \
+                               .reshape(2 * Kp, -1)
+                    rows = stacked_rows(z_all, 2 * Kp)
+                    gamma_new = jnp.stack([
+                        provider.gamma_from_rows(
+                            s.gamma[i], rows[:, 2 * i: 2 * i + 2], coef2[i])
+                        for i in range(Kp)])
+                else:
+                    gn = []
+                    for i in range(Kp):
+                        z2 = jnp.stack([x_up[i], x_low[i]])
+                        rows_i, c = get_rows2(c, None, z2)
+                        gn.append(provider.gamma_from_rows(
+                            s.gamma[i], rows_i, coef2[i]))
+                    gamma_new = jnp.stack(gn)
+                gamma = jnp.where(run[:, None], gamma_new, s.gamma)
+
+                step1 = s.step + run.astype(jnp.int32)
+                if shrink_interval > 0:
+                    do_shrink = run & (step1 >= s.next_shrink)
+                    # the shrink rule lives in a cond branch exactly like
+                    # the scalar runner's: computed in the main region it
+                    # becomes a fusion consumer of the gamma producer, and
+                    # XLA duplicates the FMA epilogue into the consumer
+                    # with context-dependent contraction (observed: 1-ulp
+                    # gamma drift vs the loop oracle the moment shrinking
+                    # was enabled). Branch regions codegen separately, so
+                    # the cond leaves the producer fusion untouched.
+                    active = lax.cond(
+                        jnp.any(do_shrink),
+                        lambda: jnp.where(
+                            do_shrink[:, None],
+                            smo.shrink_rule_multi(
+                                gamma, alpha, ystk, s.active,
+                                s.beta_up, s.beta_low, thr0, thr1),
+                            s.active),
+                        lambda: s.active)
+                else:
+                    do_shrink = jnp.zeros((Kp,), bool)
+                    active = s.active
+                n_active = jnp.sum(active, axis=1)
+                interval = jnp.maximum(
+                    jnp.minimum(jnp.int32(shrink_interval), n_active),
+                    shrink_min_interval)
+                next_shrink = jnp.where(do_shrink, step1 + interval,
+                                        s.next_shrink)
+                n_shrinks = s.n_shrinks + do_shrink.astype(jnp.int32)
+
+                b_up, i_up2, b_low, i_low2 = smo.select_pair_multi(
+                    gamma, alpha, ystk, active, thr0, thr1)
+                converged = jnp.where(run, b_up + tol >= b_low, s.converged)
+                s2 = MultiSMOState(
+                    alpha=alpha, gamma=gamma, active=active,
+                    beta_up=jnp.where(run, b_up, s.beta_up),
+                    beta_low=jnp.where(run, b_low, s.beta_low),
+                    i_up=jnp.where(run, i_up2, s.i_up),
+                    i_low=jnp.where(run, i_low2, s.i_low),
+                    step=step1, next_shrink=next_shrink,
+                    n_shrinks=n_shrinks, converged=converged,
+                    stalled=stalled, live=s.live)
+                return (s2, c, j + 1)
+
+            return lax.while_loop(cond, body, (s, c, jiters))
+
+        def epoch_cond(carry):
+            _, _, segs, _, done, _ = carry
+            return (~done) & (segs < k)
+
+        def epoch_body(carry):
+            s, c, segs, jiters, _, _ = carry
+            s, c, jiters = run_segment(s, c, jiters)
+            runmask = (s.live & (~s.converged) & (~s.stalled)
+                       & (s.step < max_iters))
+            hard = ~jnp.any(runmask)
+            act_live = s.active & s.live[:, None]
+            n_act = jnp.sum(jnp.any(act_live, axis=0)).astype(jnp.int32)
+            if shrink_interval > 0:
+                # union twin of the scalar compaction predicate: compact
+                # only when the rows active for >= 1 live problem (i.e.
+                # keep = union of survivors; drop = intersection of shrunk
+                # sets) fit a genuinely smaller pow2 bucket
+                m_per_new = util.bucket_pow2_device(n_act, mper_lo)
+                need_c = (~hard) & (n_act < compact_lt) & (m_per_new < m)
+            else:
+                need_c = jnp.bool_(False)
+            return (s, c, segs + 1, jiters, hard | need_c, need_c)
+
+        carry0 = (state, cache, jnp.int32(0), jnp.int32(0),
+                  jnp.bool_(False), jnp.bool_(False))
+        s, c, segs, jiters, _, need_c = lax.while_loop(
+            epoch_cond, epoch_body, carry0)
+
+        act_live = s.active & s.live[:, None]
+        summ = MultiEpochSummary(
+            step=s.step, segs=segs, joint_iters=jiters,
+            n_active=jnp.sum(s.active, axis=1).astype(jnp.int32),
+            n_active_union=jnp.sum(jnp.any(act_live, axis=0))
+            .astype(jnp.int32),
+            n_shrinks=s.n_shrinks, converged=s.converged, stalled=s.stalled,
+            need_compact=need_c,
+            cache_hits=c.hits if cached else jnp.int32(0),
+            cache_misses=c.misses if cached else jnp.int32(0))
+        return s, c, summ
+
+    return run_epoch
+
+
+_MULTI_RUNNER_CACHE: dict = {}
+
+
+def _multi_runner(cfg: SVMConfig, interval: int, cache_slots: int):
+    policy = cfg.row_cache_policy if cache_slots else "lru"
+    key = (cfg.kernel, cfg.inv_2s2, interval, cfg.use_pallas, cfg.selection,
+           cfg.format, cache_slots, policy)
+    if key not in _MULTI_RUNNER_CACHE:
+        _MULTI_RUNNER_CACHE[key] = make_multi_runner(
+            cfg.kernel, cfg.inv_2s2, interval, cfg.use_pallas,
+            selection=cfg.selection, fmt=cfg.format, cache_slots=cache_slots,
+            cache_policy=policy)
+    return _MULTI_RUNNER_CACHE[key]
+
+
+def ovr_tasks(y):
+    """One-vs-rest task construction: multi-class labels -> (classes,
+    (K, n) +-1 label matrix), one binary problem per class in sorted class
+    order."""
+    y = np.asarray(y)
+    classes = np.unique(y)
+    Y = np.where(y[None, :] == classes[:, None], 1.0, -1.0).astype(np.float32)
+    return classes, Y
+
+
+@dataclasses.dataclass
+class OvRSVMModel:
+    """One-vs-rest multi-class model: K binary models + argmax voting.
+
+    ``predict`` routes through ONE union serving engine (``_union``): the
+    union support-vector set with a (n_sv, K) coefficient table (0 where a
+    row is not an SV of problem k), so a query batch costs one fused
+    dispatch per bucket instead of K (see ``core.serve.ServeEngine``'s
+    multi-coef path). ``decision_matrix_host`` is the per-model oracle.
+    """
+    classes: np.ndarray
+    models: list
+    stats: driver.FitStats
+    _union: "SVMModel | None" = None     # union-SV model with (n_sv, K)
+                                         # coef table and (K,) beta
+
+    def union_engine(self, **kw):
+        if self._union is None:
+            raise ValueError("model was built without a union SV set")
+        return self._union.serve_engine(**kw)
+
+    def decision_matrix(self, Z) -> np.ndarray:
+        """(B, K) decision scores, one column per class."""
+        if self._union is not None:
+            return np.asarray(self.union_engine().decision_function(Z))
+        return self.decision_matrix_host(Z)
+
+    def decision_matrix_host(self, Z) -> np.ndarray:
+        """Per-model scoring oracle (K engine dispatch chains)."""
+        return np.stack([m.decision_function(Z) for m in self.models],
+                        axis=1)
+
+    def predict(self, Z) -> np.ndarray:
+        return self.classes[np.argmax(self.decision_matrix(Z), axis=1)]
+
+
+class MultiProblemDriver:
+    """K binary SMO problems over one resident store/buffer.
+
+    ``backend='batched'`` runs the fused multi-problem device program
+    (:func:`make_multi_runner`); ``backend='loop'`` trains the K problems
+    sequentially through :class:`SMOSolver` — the parity oracle and the
+    baseline the batched program is benchmarked against.
+
+    Per-problem control flow mirrors ``driver.EpochDriver.fit`` lane-wise:
+    each problem runs at tolerance 20*eps while shrinking, reconstructs
+    its gamma over the full set on convergence (Alg. 6 via the host
+    streaming oracle), un-shrinks and re-optimizes at 2*eps (Single:
+    shrinking disabled via the per-lane ``next_shrink = INT32_MAX``
+    sentinel; Multi: counter re-armed), and retires once Eq. 9 holds over
+    all samples — retirement freezes its lanes inside subsequent
+    dispatches. Physical compaction keeps the union of live problems'
+    active rows.
+
+    Constraints of the batched backend: all problems share one kernel
+    (``sigma2``/``format``/selection are config-wide; use :func:`fit_grid`
+    to partition a (C, sigma2) grid into per-sigma2 batches), and C may
+    vary per problem (traced (K,) box constants).
+    """
+
+    def __init__(self, config: SVMConfig, backend: str = "batched",
+                 parallel: bool = False, mesh=None):
+        if backend not in ("batched", "loop"):
+            raise ValueError(f"unknown multi backend {backend!r} "
+                             "(want 'batched' or 'loop')")
+        self.cfg = config
+        self.backend = backend
+        self.h = H.get(config.heuristic)
+        self.parallel = bool(parallel)
+        self.mesh = mesh
+        if self.parallel:
+            if backend != "batched":
+                raise ValueError("parallel=True requires backend='batched'")
+            if config.selection != "wss1":
+                raise NotImplementedError(
+                    "parallel batched training is wss1-only")
+            if config.row_cache or config.use_pallas:
+                raise NotImplementedError(
+                    "parallel batched training runs cache-off, jnp "
+                    "providers only")
+            if mesh is None:
+                from repro.core import parallel as par
+                self.mesh = par.data_mesh()
+
+    # -- public entry points ----------------------------------------------
+    def fit_tasks(self, X, Y: np.ndarray, C=None) -> list:
+        """Train K binary problems with shared data: ``Y`` is (K, n) in
+        {-1, +1}; ``C`` a scalar or (K,) per-problem box. Returns K
+        :class:`SVMModel`s (aggregate stats attached to each)."""
+        Y = np.ascontiguousarray(Y, np.float32)
+        assert Y.ndim == 2, "Y must be (K, n)"
+        Kp = Y.shape[0]
+        Cs = np.full((Kp,), self.cfg.C, np.float64) if C is None \
+            else np.broadcast_to(np.asarray(C, np.float64), (Kp,)).copy()
+        if self.backend == "loop":
+            return self._fit_loop(X, Y, Cs)
+        return self._fit_batched(X, Y, Cs)
+
+    def fit_ovr(self, X, y: np.ndarray) -> OvRSVMModel:
+        """One-vs-rest multi-class fit: K = n_classes binary problems over
+        one resident store, argmax voting at predict time through the
+        union serving engine."""
+        classes, Y = ovr_tasks(y)
+        models = self.fit_tasks(X, Y)
+        union = _union_model(models)
+        return OvRSVMModel(classes, models, models[0].stats, union)
+
+    def fit_grid(self, X, y: np.ndarray, Cs, sigma2s=None) -> list:
+        """Hyperparameter sweep: one binary problem per grid point. All
+        points sharing a sigma2 run as ONE batched fit (C rides as a
+        traced per-problem array); distinct sigma2 groups run separate
+        batches (the kernel closure is per-runner). Returns models in grid
+        order."""
+        y = np.ascontiguousarray(y, np.float32)
+        Cs = np.asarray(Cs, np.float64).reshape(-1)
+        if sigma2s is None:
+            Y = np.broadcast_to(y, (Cs.size, y.size))
+            return self.fit_tasks(X, Y, C=Cs)
+        sigma2s = np.asarray(sigma2s, np.float64).reshape(-1)
+        assert sigma2s.size == Cs.size, "Cs and sigma2s must align"
+        out: list = [None] * Cs.size
+        for s2 in np.unique(sigma2s):
+            sel = np.flatnonzero(sigma2s == s2)
+            drv = MultiProblemDriver(
+                dataclasses.replace(self.cfg, sigma2=float(s2)),
+                backend=self.backend, parallel=self.parallel,
+                mesh=self.mesh)
+            Y = np.broadcast_to(y, (sel.size, y.size))
+            ms = drv.fit_tasks(X, Y, C=Cs[sel])
+            for j, k in enumerate(sel):
+                out[k] = ms[j]
+        return out
+
+    # -- loop oracle -------------------------------------------------------
+    def _fit_loop(self, X, Y, Cs) -> list:
+        models = []
+        for k in range(Y.shape[0]):
+            ck = dataclasses.replace(self.cfg, C=float(Cs[k]))
+            if ck.checkpoint_dir:
+                ck = dataclasses.replace(
+                    ck, checkpoint_dir=os.path.join(ck.checkpoint_dir,
+                                                    f"p{k}"))
+            models.append(SMOSolver(ck).fit(X, Y[k]))
+        _aggregate_loop_stats(models)
+        return models
+
+    # -- batched backend ---------------------------------------------------
+    def _fit_batched(self, X, Y, Cs) -> list:
+        cfg, h = self.cfg, self.h
+        t0 = time.perf_counter()
+        if not spfmt.is_csr_like(X):
+            X = np.ascontiguousarray(X, np.float32)
+        store = self.store = dataplane.make_store(X, cfg.format, cfg.ell_K,
+                                                  cfg.ell_lane)
+        del X
+        n = store.n
+        Kp = Y.shape[0]
+        assert Y.shape[1] == n
+        for k in range(Kp):
+            assert set(np.unique(Y[k])) <= {-1.0, 1.0}, "labels must be +-1"
+        self.Y = Y
+        self.Cs = Cs
+        thr0, thr1, Cv = smo.box_thresholds(Cs)
+        self._thr = (jnp.asarray(thr0), jnp.asarray(thr1), jnp.asarray(Cv))
+
+        stats = self.stats = driver.FitStats(min_active=n)
+        stats.n_problems = Kp
+        interval = self._interval = h.interval(n)
+        shrink_on = h.policy != "none"
+        tol20 = np.float32(cfg.recon_eps_factor * cfg.eps)
+        tol2 = np.float32(2.0 * cfg.eps)
+
+        # (K, n) host masters + per-problem control flags
+        self.alpha_m = np.zeros((Kp, n), np.float32)
+        self.gamma_m = (-Y).astype(np.float32)
+        self.act_m = np.ones((Kp, n), bool)
+        live = np.ones((Kp,), bool)
+        conv_h = np.zeros((Kp,), bool)
+        stall_h = np.zeros((Kp,), bool)
+        recon_count = np.zeros((Kp,), np.int64)
+        shrink_act = np.full((Kp,), shrink_on)
+        steps = np.zeros((Kp,), np.int64)
+        nshr = np.zeros((Kp,), np.int64)
+        retired = [None] * Kp            # per-problem retirement records
+
+        if cfg.resume and cfg.checkpoint_dir:
+            got = self._load_ckpt(n, Kp)
+            if got is not None:
+                (self.alpha_m, self.gamma_m, self.act_m, live, conv_h,
+                 stall_h, recon_count, shrink_act, steps, nshr) = got
+                stats.reconstructions = int(recon_count.sum())
+
+        cache_slots = (rowcache.bucket_slots(cfg.row_cache_slots)
+                       if cfg.row_cache else 0)
+        if self.parallel:
+            from repro.core import parallel as par
+            runner = par.make_parallel_multi_runner(
+                self.mesh, cfg.kernel, cfg.inv_2s2,
+                interval if shrink_on else 0, fmt=cfg.format,
+                n_features=store.n_features)
+        else:
+            runner = _multi_runner(cfg, interval if shrink_on else 0,
+                                   cache_slots)
+
+        next_shrink = np.where(shrink_act, steps + interval, _INT32_MAX)
+        if shrink_on and live.any() and self.act_m[live].all():
+            rows = np.arange(n)
+        elif shrink_on and live.any():
+            rows = np.flatnonzero(self.act_m[live].any(axis=0))
+        else:
+            rows = np.arange(n)
+        self._build(rows, steps, next_shrink, nshr, live, conv_h, stall_h)
+        self.cache = (rowcache.init_cache(cache_slots, self.data.m)
+                      if cache_slots else None)
+        self._note_buffer()
+
+        miss_seen = 0
+        fuse = max(1, int(cfg.fuse_iters))
+        mper_lo = max(cfg.min_buffer, 8)
+        t_train = 0.0
+        t_recon = 0.0
+
+        while live.any():
+            tol_vec = np.where(shrink_act & (recon_count == 0), tol20,
+                               tol2).astype(np.float32)
+            # parallel mode keeps the buffer full-resident (shrinking is
+            # logical only — see make_parallel_multi_runner)
+            compact_lt = (math.ceil(cfg.compact_ratio * self.data.m)
+                          if shrink_on and not self.parallel else 0)
+            tc = time.perf_counter()
+            steps_before = steps.copy()
+            self.state, self.cache, summ_d = runner(
+                self.data, self.ystk, self.state, self.cache,
+                *self._thr, jnp.asarray(tol_vec),
+                jnp.int32(fuse), jnp.int32(cfg.chunk_iters),
+                jnp.int32(cfg.max_iters), jnp.int32(compact_lt),
+                jnp.int32(mper_lo))
+            summ = jax.device_get(summ_d)
+            dt = time.perf_counter() - tc
+            t_train += dt
+            stats.dispatches += 1
+            stats.dispatch_times.append(dt)
+
+            steps = np.asarray(summ.step, np.int64)
+            conv = np.asarray(summ.converged)
+            stall = np.asarray(summ.stalled)
+            nshr = np.asarray(summ.n_shrinks, np.int64)
+            iters_done = int((steps - steps_before).sum())
+            joint = int(summ.joint_iters)   # per-dispatch (carry resets)
+            stats.joint_iters += joint
+            stats.min_active = min(stats.min_active,
+                                   int(summ.n_active_union))
+            # FLOP accounting, multi-problem form (see FitStats): row
+            # production is billed ONCE per physically produced row — the
+            # miss counter with the cache (cross-problem hits produce
+            # nothing), 2K rows per joint iteration for the stacked GEMM —
+            # while the O(M) FMA epilogue is billed per problem-iteration
+            # (a shared row still feeds K distinct gamma updates).
+            if self.cache is not None:
+                misses_now = int(summ.cache_misses)
+                rows_new = misses_now - miss_seen
+                miss_seen = misses_now
+            else:
+                rows_new = 2 * Kp * joint
+            epilogue = 12.0 if cfg.selection == "wss2" else 4.0
+            prod = rows_new * self.data.flops_row_pass() * float(self.data.m)
+            epi = iters_done * epilogue * float(self.data.m)
+            stats.flops_production += prod
+            stats.flops_epilogue += epi
+            stats.flops_est += prod + epi
+
+            budget = steps >= cfg.max_iters
+            done = live & (conv | stall | budget)
+            # ONE device->master sync per dispatch, BEFORE any host
+            # reconstruction. A later writeback would clobber reconstructed
+            # gamma: logically-shrunk rows are still physically in the
+            # buffer here (unlike the scalar driver, where compaction
+            # removed them), and the device holds their rotten pre-shrink
+            # gamma — copying that back over Alg. 6 output makes an
+            # un-shrunk lane re-converge instantly and spin to
+            # max_reconstructions.
+            if (done.any() or bool(summ.need_compact)
+                    or bool(cfg.checkpoint_dir)):
+                self._writeback()
+            unshrink = []
+            if done.any():
+                for k in np.flatnonzero(done):
+                    k = int(k)
+                    if ((not shrink_act[k]) or not shrink_on
+                            or recon_count[k] >= cfg.max_reconstructions
+                            or budget[k]):
+                        live[k] = False
+                        conv_h[k], stall_h[k] = bool(conv[k]), bool(stall[k])
+                        retired[k] = self._retire_record(
+                            k, steps, nshr, recon_count, conv_h, stall_h)
+                        continue
+                    # gradient reconstruction + Eq. 9 over all samples
+                    tr = time.perf_counter()
+                    stale = np.flatnonzero(~self.act_m[k])
+                    self._reconstruct(k, stale)
+                    t_recon += time.perf_counter() - tr
+                    recon_count[k] += 1
+                    stats.reconstructions += 1
+                    b_up, b_low = driver.betas(
+                        self.gamma_m[k], self.alpha_m[k], Y[k],
+                        float(Cs[k]))
+                    if b_up + 2.0 * cfg.eps >= b_low:
+                        live[k] = False
+                        conv_h[k], stall_h[k] = True, False
+                        retired[k] = self._retire_record(
+                            k, steps, nshr, recon_count, conv_h, stall_h)
+                    else:
+                        unshrink.append(k)
+            if not live.any():
+                break
+
+            if unshrink:
+                # un-shrink: the affected problems re-activate every
+                # sample, which forces the buffer back to the full set
+                # (other problems keep their masks AND their shrink
+                # countdowns). Per-lane policy: Single disables further
+                # shrinking via the INT32_MAX sentinel; Multi re-arms the
+                # counter at the full interval (scalar driver line-for-
+                # line: next_shrink = step_save + interval).
+                next_shrink = np.asarray(self.state.next_shrink, np.int64)
+                for k in unshrink:
+                    self.act_m[k, :] = True
+                    conv_h[k] = False
+                    stall_h[k] = False
+                    if h.policy == "single":
+                        shrink_act[k] = False
+                        next_shrink[k] = _INT32_MAX
+                    else:
+                        next_shrink[k] = steps[k] + interval
+                self._rebuild(np.arange(n), steps, nshr, live, conv_h,
+                              stall_h, next_shrink)
+            elif bool(summ.need_compact):
+                # union compaction: every live shrink-enabled lane
+                # experiences the scalar compaction reset (next_shrink =
+                # step + max(1, min(interval, n_active))); disabled lanes
+                # keep the sentinel
+                next_shrink = np.asarray(self.state.next_shrink, np.int64)
+                per_act = self.act_m.sum(axis=1)
+                reset = live & shrink_act
+                next_shrink = np.where(
+                    reset,
+                    steps + np.maximum(1, np.minimum(interval, per_act)),
+                    next_shrink)
+                keep = np.flatnonzero(self.act_m[live].any(axis=0))
+                t_c = time.perf_counter()
+                self._rebuild(keep, steps, nshr, live, conv_h, stall_h,
+                              next_shrink)
+                stats.compactions += 1
+                stats.compact_time += time.perf_counter() - t_c
+            else:
+                # no geometry change: push the updated retirement flags
+                # into the device lanes, everything else stays resident
+                if done.any():
+                    self.state = self.state._replace(
+                        live=jnp.asarray(live))
+            if cfg.checkpoint_dir:
+                self._save_ckpt(steps, live, conv_h, stall_h, recon_count,
+                                shrink_act, nshr)
+
+        stats.iterations = int(steps.sum())
+        stats.shrink_events = int(nshr.sum())
+        stats.train_time = t_train
+        stats.recon_time = t_recon
+        stats.stalled = bool(stall_h.any())
+        stats.converged = bool(conv_h.all())
+        if self.cache is not None:
+            stats.cache_hits = int(self.cache.hits)
+            stats.cache_misses = int(self.cache.misses)
+            looked = stats.cache_hits + stats.cache_misses
+            stats.cache_hit_rate = (stats.cache_hits / looked
+                                    if looked else 0.0)
+        stats.per_problem = [r if r is not None else
+                             self._retire_record(k, steps, nshr, recon_count,
+                                                 conv_h, stall_h)
+                             for k, r in enumerate(retired)]
+        stats.total_time = time.perf_counter() - t0
+        return self._finalize(stats)
+
+    # -- batched internals -------------------------------------------------
+    def _retire_record(self, k, steps, nshr, recon_count, conv_h, stall_h):
+        return {"problem": int(k), "iterations": int(steps[k]),
+                "converged": bool(conv_h[k]), "stalled": bool(stall_h[k]),
+                "shrink_events": int(nshr[k]),
+                "reconstructions": int(recon_count[k]),
+                "n_sv": int(np.sum(self.alpha_m[k] > 0.0))}
+
+    def _nshards(self) -> int:
+        return int(np.prod(self.mesh.devices.shape)) if self.parallel else 1
+
+    def _puts(self):
+        """(data put, (K, m) stacked put): ``jnp.asarray`` single-device;
+        mesh placement under ``parallel`` — buffer rows sharded, problem
+        lanes replicated (the row axis is the data-parallel axis)."""
+        if not self.parallel:
+            return jnp.asarray, jnp.asarray
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axis = self.mesh.axis_names[0]
+        rows_sh = NamedSharding(self.mesh, P(axis, None))
+        vec_sh = NamedSharding(self.mesh, P(axis))
+        stk_sh = NamedSharding(self.mesh, P(None, axis))
+
+        def put_data(a):
+            a = jnp.asarray(a)
+            return jax.device_put(a, rows_sh if a.ndim == 2 else vec_sh)
+
+        def put_stk(a):
+            return jax.device_put(jnp.asarray(a), stk_sh)
+
+        return put_data, put_stk
+
+    def _build(self, rows, steps, next_shrink, nshr, live, conv, stall):
+        """Host store -> one shared device buffer + stacked (K, M) state."""
+        cfg, store = self.cfg, self.store
+        Kp = self.Y.shape[0]
+        p = self._nshards()
+        m_per = mirror.full_m_per(rows.size, p, cfg.min_buffer)
+        m = m_per * p
+        K_buf = None
+        if store.fmt == "ell":
+            K_buf = (spfmt.bucket_lanes(store.buffer_K(rows), cfg.ell_lane,
+                                        cap=store.K)
+                     if cfg.ell_adaptive else store.K)
+        buf = store.alloc(m, K_buf)
+        sqb = np.zeros((m,), np.float32)
+        idx_buf = np.full((m,), -1, np.int64)
+        ystk = np.ones((Kp, m), np.float32)    # padding: y=+1, alpha=0 -> I1
+        ab = np.zeros((Kp, m), np.float32)
+        gb = np.full((Kp, m), np.inf, np.float32)
+        actb = np.zeros((Kp, m), bool)
+        for sl, sub in dataplane.deal(rows, p, m_per):
+            store.fill(buf, sl, sub)
+            sqb[sl] = store.sq_rows(sub)
+            idx_buf[sl] = sub
+            ystk[:, sl] = self.Y[:, sub]
+            ab[:, sl] = self.alpha_m[:, sub]
+            gb[:, sl] = self.gamma_m[:, sub]
+            actb[:, sl] = self.act_m[:, sub]
+        put_data, put_stk = self._puts()
+        self.data = store.to_device(buf, put_data, gids=idx_buf, sq=sqb)
+        self.ystk = put_stk(ystk)
+        self.idx = idx_buf
+        self.state = init_multi_state(
+            put_stk(ab), put_stk(gb), put_stk(actb),
+            steps, next_shrink, nshr, live)
+        self.state = self.state._replace(
+            converged=jnp.asarray(np.asarray(conv, bool)),
+            stalled=jnp.asarray(np.asarray(stall, bool)))
+
+    def _rebuild(self, rows, steps, nshr, live, conv, stall,
+                 next_shrink):
+        """Buffer rebuild (union compaction or un-shrink growth): rebuild
+        from the masters and carry the row cache across by global id
+        (column re-gather on compaction, wholesale drop on growth —
+        trajectory-neutral either way: cached rows are exact). The caller
+        must have synced device state into the masters ALREADY (the one
+        per-dispatch :meth:`_writeback`); syncing here would overwrite
+        host-reconstructed gamma for logically-shrunk rows that are still
+        physically resident with the device's rotten copies. ``next_shrink``
+        is per-lane: lanes not party to the triggering event keep their
+        device countdown (a lane's shrink schedule must not be perturbed by
+        ANOTHER problem's un-shrink — that was measurably
+        trajectory-divergent vs the loop oracle)."""
+        idx_old = self.idx
+        self._build(rows, steps, next_shrink, nshr, live, conv, stall)
+        self.cache = rowcache.remap_cache(self.cache, idx_old, self.idx)
+        self._note_buffer()
+
+    def _writeback(self):
+        gids = self.idx
+        good = gids >= 0
+        cols = gids[good]
+        self.alpha_m[:, cols] = np.asarray(self.state.alpha)[:, good]
+        self.gamma_m[:, cols] = np.asarray(self.state.gamma)[:, good]
+        self.act_m[:, cols] = np.asarray(self.state.active)[:, good]
+
+    def _reconstruct(self, k: int, stale: np.ndarray):
+        """Alg. 6 for problem k over global rows ``stale`` (host streaming
+        backend — the store never materializes dense X for ELL)."""
+        if stale.size == 0:
+            return
+        cfg = self.cfg
+        sv_rows = np.flatnonzero(self.alpha_m[k] > 0.0)
+        if sv_rows.size == 0:
+            self.gamma_m[k, stale] = (-self.Y[k, stale]).astype(np.float32)
+            return
+        from repro.core import reconstruct
+        self.gamma_m[k, stale] = reconstruct.reconstruct_gamma_store(
+            cfg.kernel, self.store, self.Y[k], self.alpha_m[k], stale,
+            cfg.inv_2s2, row_block=cfg.recon_block, sv_block=cfg.recon_block,
+            ell_adaptive=cfg.ell_adaptive)
+
+    def _note_buffer(self):
+        self.stats.buffer_sizes.append(self.data.m)
+        if isinstance(self.data, dataplane.ELLData):
+            self.stats.buffer_K.append(self.data.K)
+
+    # -- checkpointing -----------------------------------------------------
+    def _ckpt_path(self) -> str:
+        return os.path.join(self.cfg.checkpoint_dir, "multi_masters.npz")
+
+    def _save_ckpt(self, steps, live, conv, stall, recon_count, shrink_act,
+                   nshr):
+        os.makedirs(self.cfg.checkpoint_dir, exist_ok=True)
+        tmp = self._ckpt_path() + ".tmp.npz"
+        np.savez(tmp, alpha=self.alpha_m, gamma=self.gamma_m,
+                 active=self.act_m.astype(np.int8),
+                 live=live.astype(np.int8), converged=conv.astype(np.int8),
+                 stalled=stall.astype(np.int8), recon_count=recon_count,
+                 shrink_act=shrink_act.astype(np.int8), step=steps,
+                 n_shrinks=nshr)
+        os.replace(tmp, self._ckpt_path())
+
+    def _load_ckpt(self, n: int, Kp: int):
+        path = self._ckpt_path()
+        if not os.path.exists(path):
+            return None
+        z = np.load(path)
+        if z["alpha"].shape != (Kp, n):
+            raise ValueError(
+                f"checkpoint shape {z['alpha'].shape} does not match the "
+                f"requested (K, n) = {(Kp, n)}")
+        return (z["alpha"].astype(np.float32),
+                z["gamma"].astype(np.float32),
+                z["active"].astype(bool), z["live"].astype(bool),
+                z["converged"].astype(bool), z["stalled"].astype(bool),
+                z["recon_count"].astype(np.int64),
+                z["shrink_act"].astype(bool), z["step"].astype(np.int64),
+                z["n_shrinks"].astype(np.int64))
+
+    # -- finalize ----------------------------------------------------------
+    def _finalize(self, stats) -> list:
+        cfg, store, Y, Cs = self.cfg, self.store, self.Y, self.Cs
+        models = []
+        for k in range(Y.shape[0]):
+            alpha = self.alpha_m[k]
+            gamma = self.gamma_m[k]
+            Ck = float(Cs[k])
+            b_up, b_low = driver.betas(gamma, alpha, Y[k], Ck)
+            bnd = Ck * smo._BND
+            i0 = (alpha > bnd) & (alpha < Ck - bnd)
+            beta = (float(gamma[i0].mean()) if i0.any()
+                    else float((b_low + b_up) / 2))
+            sv = np.flatnonzero(alpha > 0)
+            coef = (alpha[sv] * Y[k, sv]).astype(np.float32)
+            cfg_k = dataclasses.replace(cfg, C=Ck)
+            rec = stats.per_problem[k]
+            rec["final_gap"] = float(b_low - b_up)
+            rec["beta"] = beta
+            rec["n_bound_sv"] = int(np.sum(alpha >= Ck))
+            if store.fmt == "ell":
+                sv_vals, sv_cols = store.ell_rows(sv)
+                models.append(SVMModel(cfg_k, None, coef, beta, alpha,
+                                       stats, sv_vals=sv_vals,
+                                       sv_cols=sv_cols,
+                                       n_features=store.n_features))
+            else:
+                models.append(SVMModel(cfg_k, store.X[sv].copy(), coef,
+                                       beta, alpha, stats))
+        stats.n_sv = int(sum(r["n_sv"] for r in stats.per_problem))
+        stats.n_bound_sv = int(sum(r["n_bound_sv"]
+                                   for r in stats.per_problem))
+        stats.final_gap = float(max(r["final_gap"]
+                                    for r in stats.per_problem))
+        stats.mirror = "host"
+        return models
+
+
+def _aggregate_loop_stats(models: list) -> None:
+    """Fold per-model FitStats of a sequential-loop fit into an aggregate
+    view matching the batched backend's (attached to every model as
+    ``per_problem`` on the FIRST model's stats, which callers treat as the
+    run summary)."""
+    if not models:
+        return
+    agg = models[0].stats
+    agg.n_problems = len(models)
+    agg.per_problem = [
+        {"problem": k, "iterations": m.stats.iterations,
+         "converged": m.stats.converged, "stalled": m.stats.stalled,
+         "shrink_events": m.stats.shrink_events,
+         "reconstructions": m.stats.reconstructions,
+         "n_sv": m.stats.n_sv, "final_gap": m.stats.final_gap,
+         "beta": m.beta}
+        for k, m in enumerate(models)]
+
+
+def _union_model(models: list) -> "SVMModel | None":
+    """Union SV set + (n_sv_union, K) coefficient table + (K,) beta — the
+    one-engine OvR serving artifact. Rows are keyed by global sample id
+    (every model's ``alpha`` is the full (n,) master), coef is 0 where a
+    row is not an SV of problem k, which pads exactly (a zero coefficient
+    contributes nothing to any score)."""
+    if not models:
+        return None
+    Kp = len(models)
+    n = models[0].alpha.shape[0]
+    union = np.flatnonzero(
+        np.any(np.stack([m.alpha > 0.0 for m in models]), axis=0))
+    if union.size == 0:
+        return None
+    coef = np.zeros((union.size, Kp), np.float32)
+    for k, mdl in enumerate(models):
+        a = mdl.alpha[union]
+        # recover y on the union rows from each model's own SV coef sign;
+        # rows that are not SVs of problem k keep coef 0
+        pos = np.flatnonzero(mdl.alpha > 0.0)
+        yk = np.zeros((n,), np.float32)
+        yk[pos] = np.sign(mdl.sv_coef)
+        coef[:, k] = a * yk[union]
+    beta = np.asarray([m.beta for m in models], np.float32)
+    m0 = models[0]
+    # SV rows in the store's native format, scattered once into the union
+    # layout (each model's SV block lands at its rows' union positions)
+    if m0.sv_vals is not None:
+        return _union_from_ell(models, union, coef, beta)
+    sv_x = np.zeros((union.size, m0.sv_x.shape[1]), np.float32)
+    for k, mdl in enumerate(models):
+        pos = np.flatnonzero(mdl.alpha > 0.0)
+        sel = np.searchsorted(union, pos)
+        sv_x[sel] = mdl.sv_x
+    return SVMModel(m0.config, sv_x, coef, beta, m0.alpha, m0.stats)
+
+
+def _union_from_ell(models: list, union, coef, beta) -> "SVMModel | None":
+    """ELL-format union model: scatter each model's (n_sv, K) SV payload
+    into the union layout at the max lane budget."""
+    m0 = models[0]
+    Kl = max(int(m.sv_vals.shape[1]) if m.sv_vals.size else 0
+             for m in models)
+    Kl = max(Kl, 1)
+    vals = np.zeros((union.size, Kl), np.float32)
+    cols = np.zeros((union.size, Kl), np.int32)
+    for mdl in models:
+        pos = np.flatnonzero(mdl.alpha > 0.0)
+        sel = np.searchsorted(union, pos)
+        k = mdl.sv_vals.shape[1]
+        vals[sel, :k] = mdl.sv_vals
+        cols[sel, :k] = mdl.sv_cols
+    return SVMModel(m0.config, None, coef, beta, m0.alpha, m0.stats,
+                    sv_vals=vals, sv_cols=cols, n_features=m0.n_features)
+
+
+def train_ovr(X, y, **kw) -> OvRSVMModel:
+    """Convenience wrapper: one-vs-rest multi-class training over one
+    resident store. ``backend`` (default 'batched') selects the fused
+    multi-problem program or the sequential loop oracle."""
+    backend = kw.pop("backend", "batched")
+    return MultiProblemDriver(SVMConfig(**kw), backend=backend).fit_ovr(X, y)

@@ -422,6 +422,286 @@ def make_parallel_chunk_runner(mesh: Mesh, kernel: str, C: float,
     return run_epoch
 
 
+def make_parallel_multi_runner(mesh: Mesh, kernel: str, inv_2s2: float,
+                               shrink_interval: int, axis: str = AXIS,
+                               fmt: str = "dense", n_features: int = 0,
+                               shrink_min_interval: int = 1):
+    """shard_map twin of :func:`repro.core.multi.make_multi_runner`: K
+    problems batched on a leading lane axis, data sharded over the mesh,
+    problems replicated. The per-iteration communication stays the paper's
+    two-collective budget *independent of K*: the per-problem candidate
+    payloads [beta_up, beta_low, alpha_up, y_up, alpha_low, y_low, x_up_row,
+    x_low_row] are coalesced into ONE stacked ``lax.all_gather`` of
+    (K, 6 + 2d) floats — K MPI_Bcasts fused into one collective — plus one
+    (K,) psum of local active counts for the shrink interval clamp.
+
+    Scope (the driver enforces): wss1 selection, cache off, dense/ELL, no
+    Pallas. Shrinking is per-problem *logical* only — ``need_compact`` is
+    pinned False, the buffer stays full-resident (the single-host batched
+    runner owns the union-compaction geometry; here every shard keeps its
+    block and the (K,) active counts only drive the shrink cadence).
+
+    Per-problem update math is python-unrolled onto scalar lanes exactly
+    like the single-host batched runner (a (K,) vectorized f32 chain is
+    FMA-contracted differently at K >= 4 — see make_multi_runner), and the
+    shard-local gamma sweep is the stacked (m_local, 2K) provider GEMM in
+    the same barrier/degenerate-cond island. For ``fmt='dense'`` this
+    makes the sharded trajectory BITWISE equal to the single-host batched
+    driver, per problem. For ``fmt='ell'`` the guarantee is weaker —
+    deterministic per executable, but up to ~1 ulp/update vs single-host:
+    the fusion pass may split the sealed O(d) row islands' reductions
+    differently in the shard-local vs full-buffer modules, which changes
+    their contraction (see test_parallel_multi_batched_equals_single_host
+    for the pinned contract).
+
+    Returns ``run_epoch`` with the single-host batched signature
+    (``cache`` must be None; ``compact_lt``/``mper_lo`` are accepted and
+    ignored).
+    """
+    from repro.core import multi as multi_mod
+
+    row1 = kernel_fns.get_row(kernel)
+    kself = kernel_fns.self_kernel(kernel)
+    provider = kernel_fns.make_provider(kernel, fmt, False, inv_2s2)
+    n_data = 3 if fmt == "ell" else 2
+    p = mesh.shape[axis]
+
+    def local_chunk(*args):
+        if fmt == "ell":
+            vals_l, cols_l, sq_l = args[:3]
+            ldata = dataplane.ELLData(vals_l, cols_l, sq_l, n_features)
+            d = n_features
+        else:
+            X_l, sq_l = args[:2]
+            ldata = dataplane.DenseData(X_l, sq_l)
+            d = X_l.shape[1]
+        (ystk_l, alpha_l, gamma_l, active_l, step0, next_shrink0,
+         n_shrinks0, live, thr0, thr1, Cv, tol, k, chunk_iters,
+         max_iters) = args[n_data:]
+        Kp = ystk_l.shape[0]
+        kk = jnp.arange(Kp)
+        me = lax.axis_index(axis)
+        never = tol[0] < 0.0                     # traced False (runtime)
+
+        def rows_dense(idx):                     # (K,) local -> (K, d)
+            return jnp.stack([ldata.dense_row(idx[i]) for i in range(Kp)])
+
+        def kself_v(z):                          # (K, d) -> (K,)
+            return jnp.stack([jnp.asarray(kself(z[i], inv_2s2), jnp.float32)
+                              for i in range(Kp)])
+
+        def stacked_rows(zq, ncols):
+            # same production island as the single-host stacked GEMM — the
+            # shard's rows of K(X, Z) are row-independent dots, so each
+            # block matches the single-host bits for those rows
+            zero = jnp.zeros(sq_l.shape + (ncols,), jnp.float32)
+            compute = lambda: lax.optimization_barrier(
+                provider.rows2(ldata, lax.optimization_barrier(zq)))
+            return lax.cond(never, lambda: zero, compute)
+
+        def gather_select(gamma_l, alpha_l, active_l):
+            """Local per-problem Eq. 8 + ONE stacked candidate exchange.
+            Returns replicated per-problem winners."""
+            b_up_l, j_up, b_low_l, j_low = smo.select_pair_multi(
+                gamma_l, alpha_l, ystk_l, active_l, thr0, thr1)
+            pay = jnp.concatenate([
+                jnp.stack([b_up_l, b_low_l, alpha_l[kk, j_up],
+                           ystk_l[kk, j_up], alpha_l[kk, j_low],
+                           ystk_l[kk, j_low]], axis=1),      # (K, 6)
+                rows_dense(j_up), rows_dense(j_low)], axis=1)
+            pays = lax.all_gather(pay, axis)                 # (p, K, 6+2d)
+            k_up = jnp.argmin(pays[:, :, 0], axis=0)         # (K,)
+            k_low = jnp.argmax(pays[:, :, 1], axis=0)
+            return dict(
+                beta_up=pays[k_up, kk, 0], beta_low=pays[k_low, kk, 1],
+                a_up=pays[k_up, kk, 2], y_up=pays[k_up, kk, 3],
+                a_low=pays[k_low, kk, 4], y_low=pays[k_low, kk, 5],
+                x_up=pays[k_up, kk, 6: 6 + d],
+                x_low=pays[k_low, kk, 6 + d:],
+                k_up=k_up, k_low=k_low, j_up=j_up, j_low=j_low)
+
+        def run_segment(alpha_l, gamma_l, active_l, step, next_shrink,
+                        n_shrinks, conv_in, stall_in, jiters):
+            sel0 = gather_select(gamma_l, alpha_l, active_l)
+            conv0 = sel0["beta_up"] + tol >= sel0["beta_low"]
+            start = step
+            lim = jnp.minimum(chunk_iters,
+                              jnp.maximum(1, max_iters - start))   # (K,)
+
+            def running(step, conv, stalled):
+                return (live & (~conv) & (~stalled) & (step - start < lim))
+
+            def cond(carry):
+                (_, _, _, _, step, _, _, conv, stalled, _) = carry
+                return jnp.any(running(step, conv, stalled))
+
+            def body(carry):
+                (alpha_l, gamma_l, active_l, sel, step, next_shrink,
+                 n_shrinks, conv, stalled, j) = carry
+                run = running(step, conv, stalled)             # (K,)
+                x_up, x_low = sel["x_up"], sel["x_low"]
+                k_uu = kself_v(x_up)
+                k_ll = kself_v(x_low)
+                # per-problem O(d) scalar islands (see make_multi_runner)
+                kul = []
+                for i in range(Kp):
+                    xu_b, xl_b = lax.optimization_barrier(
+                        (x_up[i], x_low[i]))
+                    kul.append(lax.optimization_barrier(
+                        row1(xl_b[None, :], jnp.sum(xl_b * xl_b)[None],
+                             xu_b, inv_2s2)[0]))
+                k_ul = jnp.stack(kul)
+                ups, lows = [], []
+                for i in range(Kp):
+                    u, l = smo.pair_update_multi(
+                        sel["a_up"][i], sel["a_low"][i], sel["y_up"][i],
+                        sel["y_low"][i], sel["beta_up"][i],
+                        sel["beta_low"][i], k_ul[i], k_uu[i], k_ll[i],
+                        Cv[i])
+                    ups.append(u)
+                    lows.append(l)
+                a_up_new = jnp.stack(ups)
+                a_low_new = jnp.stack(lows)
+                d_up = a_up_new - sel["a_up"]
+                d_low = a_low_new - sel["a_low"]
+                stall_new = ((jnp.abs(d_up) < smo._TAU)
+                             & (jnp.abs(d_low) < smo._TAU))
+                stalled = jnp.where(run, stall_new, stalled)
+
+                # owner shards write the new alphas into their block; the
+                # up write lands before the low write (j_up == j_low ties
+                # resolve exactly like the scalar .at chain)
+                up_here = run & (me == sel["k_up"])
+                alpha_l = alpha_l.at[kk, sel["j_up"]].set(
+                    jnp.where(up_here, a_up_new,
+                              alpha_l[kk, sel["j_up"]]))
+                low_here = run & (me == sel["k_low"])
+                alpha_l = alpha_l.at[kk, sel["j_low"]].set(
+                    jnp.where(low_here, a_low_new,
+                              alpha_l[kk, sel["j_low"]]))
+
+                coef2 = jnp.stack([sel["y_up"] * d_up,
+                                   sel["y_low"] * d_low], axis=1)
+                z_all = jnp.stack([x_up, x_low], axis=1).reshape(2 * Kp, -1)
+                rows = stacked_rows(z_all, 2 * Kp)         # (m_l, 2K)
+                gamma_new = jnp.stack([
+                    provider.gamma_from_rows(
+                        gamma_l[i], rows[:, 2 * i: 2 * i + 2], coef2[i])
+                    for i in range(Kp)])
+                gamma_l = jnp.where(run[:, None], gamma_new, gamma_l)
+
+                step1 = step + run.astype(jnp.int32)
+                if shrink_interval > 0:
+                    do_shrink = run & (step1 >= next_shrink)
+                    active_l = lax.cond(
+                        jnp.any(do_shrink),
+                        lambda: jnp.where(
+                            do_shrink[:, None],
+                            smo.shrink_rule_multi(
+                                gamma_l, alpha_l, ystk_l, active_l,
+                                sel["beta_up"], sel["beta_low"],
+                                thr0, thr1),
+                            active_l),
+                        lambda: active_l)
+                else:
+                    do_shrink = jnp.zeros((Kp,), bool)
+                # Alg. 4 line 12, K lanes in one psum
+                n_active = lax.psum(
+                    jnp.sum(active_l.astype(jnp.int32), axis=1), axis)
+                interval = jnp.maximum(
+                    jnp.minimum(jnp.int32(shrink_interval), n_active),
+                    shrink_min_interval)
+                next_shrink = jnp.where(do_shrink, step1 + interval,
+                                        next_shrink)
+                n_shrinks = n_shrinks + do_shrink.astype(jnp.int32)
+
+                sel2 = gather_select(gamma_l, alpha_l, active_l)
+                sel2 = {key: jnp.where(
+                            run.reshape((Kp,) + (1,) * (v.ndim - 1)), v,
+                            sel[key])
+                        for key, v in sel2.items()}
+                conv = jnp.where(run,
+                                 sel2["beta_up"] + tol >= sel2["beta_low"],
+                                 conv)
+                return (alpha_l, gamma_l, active_l, sel2, step1,
+                        next_shrink, n_shrinks, conv, stalled, j + 1)
+
+            carry = (alpha_l, gamma_l, active_l, sel0, step, next_shrink,
+                     n_shrinks, conv0, jnp.zeros((Kp,), bool), jiters)
+            (alpha_l, gamma_l, active_l, sel, step, next_shrink, n_shrinks,
+             conv, stalled, jiters) = lax.while_loop(cond, body, carry)
+            return (alpha_l, gamma_l, active_l, sel["beta_up"],
+                    sel["beta_low"], step, next_shrink, n_shrinks, conv,
+                    stalled, jiters)
+
+        def epoch_cond(carry):
+            segs, done = carry[11], carry[12]
+            return (~done) & (segs < k)
+
+        def epoch_body(carry):
+            (alpha_l, gamma_l, active_l, _, _, step, next_shrink, n_shrinks,
+             conv, stalled, jiters, segs, _) = carry
+            (alpha_l, gamma_l, active_l, b_up, b_low, step, next_shrink,
+             n_shrinks, conv, stalled, jiters) = run_segment(
+                alpha_l, gamma_l, active_l, step, next_shrink, n_shrinks,
+                conv, stalled, jiters)
+            runmask = live & (~conv) & (~stalled) & (step < max_iters)
+            hard = ~jnp.any(runmask)
+            return (alpha_l, gamma_l, active_l, b_up, b_low, step,
+                    next_shrink, n_shrinks, conv, stalled, jiters,
+                    segs + 1, hard)
+
+        carry0 = (alpha_l, gamma_l, active_l,
+                  jnp.full((Kp,), -1.0, jnp.float32),
+                  jnp.full((Kp,), 1.0, jnp.float32),
+                  step0, next_shrink0, n_shrinks0,
+                  jnp.zeros((Kp,), bool), jnp.zeros((Kp,), bool),
+                  jnp.int32(0), jnp.int32(0), jnp.bool_(False))
+        (alpha_l, gamma_l, active_l, b_up, b_low, step, next_shrink,
+         n_shrinks, conv, stalled, jiters, segs, _) = lax.while_loop(
+            epoch_cond, epoch_body, carry0)
+        n_act = lax.psum(jnp.sum(active_l.astype(jnp.int32), axis=1), axis)
+        act_live = active_l & live[:, None]
+        n_union = lax.psum(
+            jnp.sum(jnp.any(act_live, axis=0)).astype(jnp.int32), axis)
+        return (alpha_l, gamma_l, active_l, b_up, b_low, step, next_shrink,
+                n_shrinks, conv, stalled, segs, jiters, n_act, n_union)
+
+    sharded2 = P(None, axis)             # (K, m) problem-stacked buffers
+    rep = P()
+    data_specs = ((P(axis, None), P(axis, None), P(axis)) if fmt == "ell"
+                  else (P(axis, None), P(axis)))
+    in_specs = data_specs + (sharded2,) * 4 + (rep,) * 11
+    out_specs = (sharded2, sharded2, sharded2) + (rep,) * 11
+    mapped = shard_map_compat(local_chunk, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
+    epoch = jax.jit(mapped)
+
+    def run_epoch(data, ystk, state, cache, thr0, thr1, Cv, tol, k,
+                  chunk_iters, max_iters, compact_lt, mper_lo):
+        assert cache is None, "parallel batched runner is cache-off"
+        dargs = ((data.vals, data.cols, data.sq_norms) if fmt == "ell"
+                 else (data.X, data.sq_norms))
+        out = epoch(*dargs, ystk, state.alpha, state.gamma, state.active,
+                    state.step, state.next_shrink, state.n_shrinks,
+                    state.live, thr0, thr1, Cv, tol, jnp.int32(k),
+                    jnp.int32(chunk_iters), jnp.int32(max_iters))
+        (alpha, gamma, active, b_up, b_low, step, next_shrink, n_shrinks,
+         conv, stalled, segs, jiters, n_act, n_union) = out
+        summ = multi_mod.MultiEpochSummary(
+            step=step, segs=segs, joint_iters=jiters, n_active=n_act,
+            n_active_union=n_union, n_shrinks=n_shrinks, converged=conv,
+            stalled=stalled, need_compact=jnp.bool_(False),
+            cache_hits=jnp.int32(0), cache_misses=jnp.int32(0))
+        return state._replace(
+            alpha=alpha, gamma=gamma, active=active, beta_up=b_up,
+            beta_low=b_low, step=step, next_shrink=next_shrink,
+            n_shrinks=n_shrinks, converged=conv, stalled=stalled), \
+            None, summ
+
+    return run_epoch
+
+
 def make_ring_reconstructor(mesh: Mesh, kernel: str, inv_2s2: float,
                             axis: str = AXIS, row_block: int = 4096,
                             fmt: str = "dense", n_features: int = 0):

@@ -185,22 +185,32 @@ def _write(c: RowCache, gid, present, slot_e, row,
 
 
 def get_row(cache: RowCache, gid: jax.Array, compute: Callable[[], jax.Array],
-            policy: str = "lru"):
+            policy: str = "lru", live=None):
     """One row by global id: cached value on hit, ``compute()`` on miss.
     ``compute`` must be shard-local (it runs inside ``lax.cond``, where a
-    collective would not be legal). Returns (row, cache)."""
+    collective would not be legal). Returns (row, cache).
+
+    ``live`` (optional traced bool) gates the hit/miss *counters* only: the
+    batched multi-problem runner keeps retired problems issuing their last
+    row request every iteration (so the access pattern stays trace-static —
+    a ``lax.cond`` around the access would copy the (S, M) value table, see
+    above) but must not let those idle repeats pollute the statistics the
+    driver bills FLOPs from. Values/evictions are unaffected: an idle
+    repeat re-serves (and re-inserts) bit-identical rows."""
     cache = cache._replace(tick=cache.tick + 1)
     slot, hit = _find(cache.tags, gid)
     got = cache.vals[slot]                              # O(M), pre-cond
     row = lax.cond(hit, lambda: got, compute)
     cache, _ = _write(cache, gid, hit, slot, row, policy)
+    w = jnp.int32(1) if live is None else live.astype(jnp.int32)
     return row, cache._replace(
-        hits=cache.hits + hit.astype(jnp.int32),
-        misses=cache.misses + (~hit).astype(jnp.int32))
+        hits=cache.hits + hit.astype(jnp.int32) * w,
+        misses=cache.misses + (~hit).astype(jnp.int32) * w)
 
 
 def get_pair(cache: RowCache, gid2: jax.Array,
-             compute2: Callable[[], jax.Array], policy: str = "lru"):
+             compute2: Callable[[], jax.Array], policy: str = "lru",
+             live=None):
     """The fused two-row access of Eq. 6: returns ((M, 2) rows, cache).
 
     Pairwise hit policy: the value table is consulted only when *both*
@@ -210,6 +220,8 @@ def get_pair(cache: RowCache, gid2: jax.Array,
     were produced by different iterations. This keeps cache-on bit-exact
     against cache-off while still amortizing the dominant pair-repeat
     pattern of late-stage SMO.
+
+    ``live`` gates the hit/miss counters exactly as in :func:`get_row`.
     """
     cache = cache._replace(tick=cache.tick + 1)
     s0, h0 = _find(cache.tags, gid2[0])
@@ -222,7 +234,7 @@ def get_pair(cache: RowCache, gid2: jax.Array,
     # insert colliding with s1's stamp) resolves to the right slot
     s1b, h1b = _find(cache.tags, gid2[1])
     cache, _ = _write(cache, gid2[1], h1b, s1b, rows[:, 1], policy)
-    two = jnp.int32(2)
+    two = jnp.int32(2) if live is None else 2 * live.astype(jnp.int32)
     return rows, cache._replace(
         hits=cache.hits + jnp.where(both, two, 0),
         misses=cache.misses + jnp.where(both, 0, two))
@@ -248,9 +260,11 @@ def make_accessors(provider, data, cached: bool, never: jax.Array,
     shard-local view under shard_map) the accessors close over. Returns
     ``(get_row1(cache, gid, z), get_rows2(cache, gid2, z2))``, each giving
     ``(rows, cache)``; pass ``gid``/``gid2`` = None when ``cached`` is
-    False.
+    False. The optional ``live`` keyword of each accessor gates the cache
+    counters (see :func:`get_row`); the single-problem runners leave it
+    None.
     """
-    def get_row1(c, gid, z):
+    def get_row1(c, gid, z, live=None):
         # Single rows go through the duplicated-query rows2 GEMM
         # (kernel_fns.row_via_rows2) rather than provider.row: the GEMV is
         # not context-stable on XLA CPU, the GEMM is — which is what lets
@@ -258,15 +272,15 @@ def make_accessors(provider, data, cached: bool, never: jax.Array,
         # an in-loop miss would produce (see warm_vals).
         compute = lambda: kernel_fns.row_via_rows2(provider, data, z)
         if cached:
-            return get_row(c, gid, compute, policy)
+            return get_row(c, gid, compute, policy, live=live)
         zero = jnp.zeros_like(data.sq_norms)
         return lax.cond(never, lambda: zero, compute), c
 
-    def get_rows2(c, gid2, z2):
+    def get_rows2(c, gid2, z2, live=None):
         compute = lambda: lax.optimization_barrier(
             provider.rows2(data, lax.optimization_barrier(z2)))
         if cached:
-            return get_pair(c, gid2, compute, policy)
+            return get_pair(c, gid2, compute, policy, live=live)
         zero = jnp.zeros(data.sq_norms.shape + (2,), jnp.float32)
         return lax.cond(never, lambda: zero, compute), c
 

@@ -96,7 +96,14 @@ class ServeEngine:
             raise ValueError(f"bad bucket range [{min_bucket}, {max_bucket}]")
         self.kernel = cfg.kernel
         self.inv_2s2 = float(cfg.inv_2s2)
-        self.beta = float(model.beta)
+        # (K,) beta + (n_sv, K) coef = multi-problem union engine (one-vs-
+        # rest / grid): one resident union SV set scores K problems per
+        # dispatch — f(Z) is (B, K) instead of (B,).
+        beta = np.asarray(model.beta, np.float32).reshape(-1)
+        self.multi = beta.size > 1 or \
+            np.asarray(model.sv_coef).ndim == 2
+        self.n_out = beta.size
+        self.beta = beta if self.multi else float(beta[0])
         self.use_pallas = bool(use_pallas)
         self.shards = int(shards)
         self.min_bucket = int(min_bucket)
@@ -135,15 +142,21 @@ class ServeEngine:
         """Pad the SV set per shard to a lane multiple (coef-0 rows — an
         exact pad) and place it device-resident, sharded on the SV axis."""
         p = self.shards
-        coef = np.asarray(model.sv_coef, np.float32).reshape(-1)
-        self.n_sv = int(coef.size)
+        coef = np.asarray(model.sv_coef, np.float32)
+        if self.multi:
+            coef = coef.reshape(coef.shape[0], -1)      # (n_sv, K)
+            assert coef.shape[1] == self.n_out, "coef/beta K mismatch"
+        else:
+            coef = coef.reshape(-1)
+        self.n_sv = int(coef.shape[0])
         m_per = sp.round_lanes(max(1, -(-self.n_sv // p)), _LANE)
         m_pad = p * m_per
         self.m_pad = m_pad
         store_dt = np.float32 if self.dtype == "float32" else \
             np.dtype(jnp.bfloat16)
         rows = np.arange(self.n_sv)
-        coef_p = np.zeros((m_pad,), np.float32)
+        coef_p = np.zeros((m_pad, self.n_out) if self.multi else (m_pad,),
+                          np.float32)
         for sl, sub in dataplane.deal(rows, p, m_per):
             coef_p[sl] = coef[sub]
         if self.fmt == "dense":
@@ -186,10 +199,24 @@ class ServeEngine:
     def _make_fn(self, b: int):
         provider = self._provider
         beta = self.beta
+        n_out = self.n_out
+
+        if self.multi and self.use_pallas:
+            # the fused Pallas accumulate kernels contract ONE coef column;
+            # K columns unroll inside the same jitted program — still one
+            # host dispatch per bucket, K kernel launches over a resident
+            # SV set that is read from HBM per launch
+            def _acc(data, Z, coef):
+                return jnp.stack([provider.accumulate(data, Z, coef[:, j])
+                                  for j in range(n_out)], axis=1)
+        else:
+            # jnp providers: matrix(Z) @ coef is (B, K) for a (M, K) table
+            # in the SAME kernel-matrix pass a (M,) coef takes
+            _acc = provider.accumulate
 
         def score(sv_and_sq, coef, Z):
             data = self._data(*sv_and_sq)
-            return provider.accumulate(data, Z, coef) - beta
+            return _acc(data, Z, coef) - beta
 
         if self._mesh is None:
             fn = jax.jit(score)
@@ -199,14 +226,14 @@ class ServeEngine:
 
             def local(sv_and_sq, coef, Z):
                 data = self._data(*sv_and_sq)
-                part = provider.accumulate(data, Z, coef)
+                part = _acc(data, Z, coef)
                 return jax.lax.psum(part, AXIS) - beta
 
             fn = jax.jit(shard_map_compat(
                 local, mesh=self._mesh,
                 in_specs=(tuple(P(AXIS, *([None] * (a.ndim - 1)))
                                 for a in (*self._sv, self._sq)),
-                          P(AXIS), P()),
+                          P(AXIS, None) if self.multi else P(AXIS), P()),
                 out_specs=P()))
         args = ((*self._sv, self._sq), self._coef)
         return lambda Z: fn(*args, Z)
@@ -241,7 +268,7 @@ class ServeEngine:
             n, d = Z.shape
         if d != self.n_features:
             raise ValueError(f"query dim {d} != model dim {self.n_features}")
-        out = np.empty((n,), np.float32)
+        out = np.empty((n, self.n_out) if self.multi else (n,), np.float32)
         s = 0
         while s < n:
             b = self._bucket_of(n - s)
@@ -256,6 +283,10 @@ class ServeEngine:
         return out
 
     def predict(self, Z) -> np.ndarray:
+        if self.multi:
+            raise ValueError(
+                "multi-coef engine scores K problems; vote at the model "
+                "level (OvRSVMModel.predict argmaxes decision_function)")
         return np.where(self.decision_function(Z) >= 0.0, 1.0,
                         -1.0).astype(np.float32)
 
@@ -271,6 +302,7 @@ class ServeEngine:
     def describe(self) -> dict:
         return {
             "fmt": self.fmt, "dtype": self.dtype, "shards": self.shards,
+            "n_out": self.n_out,
             "n_sv": self.n_sv, "m_pad": self.m_pad,
             "n_features": self.n_features, "use_pallas": self.use_pallas,
             "buckets": sorted(self._fns), "memory_bytes": self.memory_bytes(),
@@ -282,7 +314,7 @@ class ServeEngine:
         per-row terms ``dataplane.*Data.flops_row_pass`` charges)."""
         row_pass = 2.0 * self.n_features + 5.0 if self.fmt == "dense" \
             else 4.0 * self._K + 5.0
-        return float(b) * self.m_pad * (row_pass + 2.0)
+        return float(b) * self.m_pad * (row_pass + 2.0 * self.n_out)
 
     def roofline(self, b: "int | None" = None):
         """Price one bucket executable against hardware peak via

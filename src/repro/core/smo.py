@@ -155,7 +155,22 @@ def shrink_rule(gamma: jax.Array, alpha: jax.Array, y: jax.Array,
 
 def pair_update(alpha_up, alpha_low, y_up, y_low, g_up, g_low, k_ul, k_uu, k_ll, C):
     """Analytic two-variable solve, Eq. 11/12, with joint L/H clipping that
-    preserves sum(alpha*y) exactly and keeps both alphas in [0, C]."""
+    preserves sum(alpha*y) exactly and keeps both alphas in [0, C].
+
+    The whole solve is ONE barriered scalar island: the chain
+    ``alpha_low - y_low * (g_up - g_low) / rho`` is FMA-contractable, and
+    XLA's contraction choice depends on the surrounding program — the
+    shard-local parallel executable and the full-buffer single-host
+    executable were observed to disagree by 1 ulp on a single update
+    (which a later selection can amplify into a different trajectory).
+    Isolating the subgraph pins one contraction for every runner that
+    inlines this solve.
+    """
+    args = tuple(jnp.asarray(a, jnp.float32)
+                 for a in (alpha_up, alpha_low, y_up, y_low, g_up, g_low,
+                           k_ul, k_uu, k_ll, C))
+    (alpha_up, alpha_low, y_up, y_low, g_up, g_low, k_ul, k_uu, k_ll,
+     C) = lax.optimization_barrier(args)
     rho = 2.0 * k_ul - k_uu - k_ll          # Eq. 12 (== -eta, negative for PD)
     rho = jnp.minimum(rho, -_TAU)
     a_low_unc = alpha_low - y_low * (g_up - g_low) / rho
@@ -169,7 +184,7 @@ def pair_update(alpha_up, alpha_low, y_up, y_low, g_up, g_low, k_ul, k_uu, k_ll,
     a_low_new = jnp.clip(a_low_unc, lo, hi)
     a_up_new = alpha_up + s * (alpha_low - a_low_new)
     a_up_new = jnp.clip(a_up_new, 0.0, C)   # exact box (guards fp drift)
-    return a_up_new, a_low_new
+    return lax.optimization_barrier((a_up_new, a_low_new))
 
 
 def wss2_scores(gamma, alpha, y, active, C, g_up, row_up, kdiag, k_uu):
@@ -185,6 +200,91 @@ def wss2_scores(gamma, alpha, y, active, C, g_up, row_up, kdiag, k_uu):
     in_low = active & (interior | (pos & at_c) | (~pos & at_zero))
     b = gamma - g_up
     a = jnp.maximum(k_uu + kdiag - 2.0 * row_up, _TAU)
+    return jnp.where(in_low & (b > 0), b * b / a, -_INF)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-problem twins (leading problem axis K).
+#
+# The functions below are elementwise/per-row twins of the scalar working-set
+# machinery above, generalized to K concurrent binary problems stacked on a
+# leading axis: state arrays are (K, M), per-problem scalars are (K,). They
+# are consumed by the fused multi-problem runner in ``repro.core.multi``.
+#
+# Exactness: every operation is either elementwise f32 (bit-deterministic,
+# identical to its scalar twin) or an exact-comparison argmin/argmax with
+# first-index tie-break — so given bit-identical inputs per problem, each
+# problem's selection/update/shrink is bit-identical to running the scalar
+# functions on that problem alone. Per-problem box constants C_k arrive as
+# host-precomputed f32 arrays (``box_thresholds``) that reproduce the scalar
+# closures' weak-type promotion bits: the scalar path computes ``C * _BND``
+# in f64 (python floats) and rounds ONCE to f32 at the compare.
+# ---------------------------------------------------------------------------
+
+def box_thresholds(Cs):
+    """Host helper: per-problem (K,) f32 box constants (thr0, thr1, Cv) with
+    thr0 = f32(C*_BND), thr1 = f32(C*(1-_BND)), Cv = f32(C) — each product
+    computed in f64 and rounded once, matching the scalar closures."""
+    import numpy as np
+    Cs = np.asarray(Cs, np.float64)
+    return (np.asarray(Cs * _BND, np.float32),
+            np.asarray(Cs * (1.0 - _BND), np.float32),
+            np.asarray(Cs, np.float32))
+
+
+def _index_sets_multi(alpha, y, active, thr0, thr1):
+    pos = y > 0
+    at_zero = alpha <= thr0[:, None]
+    at_c = alpha >= thr1[:, None]
+    interior = (~at_zero) & (~at_c)                     # I0
+    in_up = active & (interior | (pos & at_zero) | (~pos & at_c))
+    in_low = active & (interior | (pos & at_c) | (~pos & at_zero))
+    return in_up, in_low
+
+
+def select_pair_multi(gamma, alpha, y, active, thr0, thr1):
+    """Eq. 8 over K problems at once: (K,M) state -> per-problem
+    (beta_up, i_up, beta_low, i_low), each (K,). Same deterministic
+    lowest-index tie-break as :func:`select_pair`."""
+    in_up, in_low = _index_sets_multi(alpha, y, active, thr0, thr1)
+    g_up = jnp.where(in_up, gamma, _INF)
+    g_low = jnp.where(in_low, gamma, -_INF)
+    i_up = jnp.argmin(g_up, axis=1).astype(jnp.int32)
+    i_low = jnp.argmax(g_low, axis=1).astype(jnp.int32)
+    kk = jnp.arange(gamma.shape[0])
+    return g_up[kk, i_up], i_up, g_low[kk, i_low], i_low
+
+
+def shrink_rule_multi(gamma, alpha, y, active, beta_up, beta_low, thr0, thr1):
+    """Eq. 10 over K problems: per-problem logical shrink masks."""
+    pos = y > 0
+    at_zero = alpha <= thr0[:, None]
+    at_c = alpha >= thr1[:, None]
+    i12 = (pos & at_zero) | (~pos & at_c)
+    i34 = (pos & at_c) | (~pos & at_zero)
+    drop = ((i34 & (gamma < beta_up[:, None]))
+            | (i12 & (gamma > beta_low[:, None])))
+    return active & ~drop
+
+
+def pair_update_multi(alpha_up, alpha_low, y_up, y_low, g_up, g_low,
+                      k_ul, k_uu, k_ll, Cv):
+    """Eq. 11/12 per problem lane; one per-lane scalar call per problem
+    (the multi runners python-unroll over lanes). Delegates to
+    :func:`pair_update` so every runner — scalar, parallel, batched
+    single-host, batched sharded — inlines the SAME barriered island and
+    XLA cannot contract the solve differently per executable."""
+    return pair_update(alpha_up, alpha_low, y_up, y_low, g_up, g_low,
+                       k_ul, k_uu, k_ll, Cv)
+
+
+def wss2_scores_multi(gamma, alpha, y, active, thr0, thr1,
+                      g_up, rows_up, kdiag, k_uu):
+    """Second-order i_low scores for K problems: (K,M) state + per-problem
+    i_up rows ``rows_up`` (K,M) -> (K,M) score table (argmax per row)."""
+    _, in_low = _index_sets_multi(alpha, y, active, thr0, thr1)
+    b = gamma - g_up[:, None]
+    a = jnp.maximum(k_uu[:, None] + kdiag[None, :] - 2.0 * rows_up, _TAU)
     return jnp.where(in_low & (b > 0), b * b / a, -_INF)
 
 

@@ -186,10 +186,12 @@ class SVMModel:
         is tested against (fp32 engines match it to float tolerance; bf16
         engines to storage-rounding tolerance)."""
         Z = np.asarray(Z, np.float32)
-        out = np.empty((Z.shape[0],), np.float32)
         coef = jnp.asarray(self.sv_coef, jnp.float32)
+        beta = jnp.asarray(self.beta, jnp.float32)
+        # (n_sv, K) coef table (multi-problem union model) -> (n, K) scores
+        out = np.empty((Z.shape[0],) + tuple(coef.shape[1:]), np.float32)
         kf = self._sv_kernel_fn()
-        f = jax.jit(lambda z: kf(z) @ coef - self.beta)
+        f = jax.jit(lambda z: kf(z) @ coef - beta)
         for s in range(0, Z.shape[0], block):
             zb = Z[s: s + block]
             pad = block - zb.shape[0]

@@ -24,13 +24,15 @@ class DatasetSpec:
     n_train: int
     n_test: int
     d: int
-    kind: Literal["dense_clusters", "sparse_binary", "image_like"]
+    kind: Literal["dense_clusters", "sparse_binary", "image_like",
+                  "forest_like", "text_topics"]
     C: float
     sigma2: float
     density: float = 1.0     # fraction of nonzero features
     separation: float = 2.0  # inter-class margin in units of cluster sigma
     label_noise: float = 0.02
     n_clusters: int = 4      # per class, for multi-modal structure
+    n_classes: int = 2       # >2 -> integer labels in {0..K-1} (OvR specs)
 
 
 # Table 2 of the paper, with measured densities of the public originals.
@@ -49,6 +51,18 @@ SPECS: dict[str, DatasetSpec] = {s.name: s for s in [
                 density=0.04, separation=1.8, label_noise=0.03),
     DatasetSpec("ijcnn", 49990, 91701, 22, "dense_clusters", C=0.5, sigma2=1,
                 density=1.0, separation=1.0, label_noise=0.08, n_clusters=6),
+    # Multi-class OvR workloads (batched multi-problem driver): integer
+    # labels in {0..n_classes-1}, matched to the public originals on
+    # (N, d, K, density, class balance).
+    DatasetSpec("covtype", 522910, 58102, 54, "forest_like", C=10, sigma2=16,
+                density=1.0, separation=1.3, label_noise=0.0, n_clusters=3,
+                n_classes=7),
+    # news20's vocabulary (62061 terms) is scaled to a CI-budget d at the
+    # REAL ~80 nonzero terms/doc (0.0013 * 62061): nnz/row is what drives
+    # ELL lane budgets and kernel-row cost, not the raw vocabulary width.
+    DatasetSpec("news20", 15935, 3993, 8192, "text_topics", C=4, sigma2=64,
+                density=0.0098, separation=3.0, label_noise=0.0,
+                n_classes=20),
 ]}
 
 
@@ -103,13 +117,63 @@ def _sparse_binary(rng, n, spec: DatasetSpec):
     return X, y.astype(np.float32)
 
 
+def _forest_like(rng, n, spec: DatasetSpec):
+    """covtype statistics: dense continuous cartographic features, K
+    imbalanced classes (two dominant cover types, geometric tail), each a
+    mixture of terrain blobs ordered along an elevation-like direction;
+    a block of quantized soil/wilderness indicator columns."""
+    K = spec.n_classes
+    pri = 0.55 ** np.arange(K)
+    pri /= pri.sum()
+    u = rng.normal(size=spec.d)
+    u /= np.linalg.norm(u)
+    centers = rng.normal(size=(K, spec.n_clusters, spec.d))
+    centers += spec.separation * np.linspace(-1.0, 1.0, K)[:, None, None] * u
+    y = rng.choice(K, size=n, p=pri)
+    comp = rng.integers(0, spec.n_clusters, size=n)
+    X = centers[y, comp] + rng.normal(size=(n, spec.d))
+    nq = max(2, spec.d // 10)
+    X[:, -nq:] = (X[:, -nq:] > 0.5).astype(np.float64)
+    return X.astype(np.float32), y.astype(np.int32)
+
+
+def _text_topics(rng, n, spec: DatasetSpec):
+    """news20 statistics: K topical classes over a large vocabulary. Each
+    document draws ~density*d distinct terms from its class topic mixed
+    with a Zipf background (Gumbel top-k, vectorized), tf-idf-ish positive
+    magnitudes, rows l2-normalized."""
+    K = spec.n_classes
+    nnz = max(4, int(round(spec.density * spec.d)))
+    bg = 1.0 / np.arange(1, spec.d + 1)
+    topic = np.zeros((K, spec.d))
+    for k in range(K):
+        cols = rng.choice(spec.d, size=min(spec.d, max(nnz * 4, 16)),
+                          replace=False)
+        topic[k, cols] = rng.random(cols.size) * spec.separation * bg.mean()
+    y = rng.integers(0, K, size=n)
+    w = bg[None, :] + topic[y] * spec.d
+    g = -np.log(-np.log(rng.random((n, spec.d)) + 1e-12) + 1e-12)
+    keys = np.log(w) + g
+    cols = np.argpartition(-keys, nnz - 1, axis=1)[:, :nnz]
+    vals = np.exp(0.4 * rng.normal(size=(n, nnz))).astype(np.float32)
+    X = np.zeros((n, spec.d), np.float32)
+    X[np.arange(n)[:, None], cols] = vals
+    X /= np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-6)
+    return X, y.astype(np.int32)
+
+
 _GEN = {"dense_clusters": _dense_clusters, "image_like": _image_like,
-        "sparse_binary": _sparse_binary}
+        "sparse_binary": _sparse_binary, "forest_like": _forest_like,
+        "text_topics": _text_topics}
 
 
 def make(spec: "DatasetSpec | str", scale: float = 1.0, seed: int = 0):
     """Returns (X_train, y_train, X_test, y_test). ``scale`` shrinks N
-    (CPU-friendly benchmark sizes) without changing d or statistics."""
+    (CPU-friendly benchmark sizes) without changing d or statistics.
+    Binary specs label with float32 +-1; multi-class specs
+    (``spec.n_classes > 2`` — the covtype/news20 stand-ins) label with
+    int32 class ids, the input of one-vs-rest training
+    (``core.multi.train_ovr``)."""
     if isinstance(spec, str):
         spec = SPECS[spec]
     # crc32, not hash(): str hashing is salted per process, which made the
@@ -119,9 +183,12 @@ def make(spec: "DatasetSpec | str", scale: float = 1.0, seed: int = 0):
     n_tr = max(64, int(spec.n_train * scale))
     n_te = int(spec.n_test * scale)
     X, y = _GEN[spec.kind](rng, n_tr + max(n_te, 0), spec)
-    # balance check: ensure both classes present
-    if np.all(y[:n_tr] == y[0]):
-        y[: n_tr // 2] = -y[0]
+    # balance check: ensure at least two classes present
+    if np.unique(y[:n_tr]).size < 2:
+        if spec.n_classes > 2:
+            y[: n_tr // 2] = (y[0] + 1) % spec.n_classes
+        else:
+            y[: n_tr // 2] = -y[0]
     return X[:n_tr], y[:n_tr], X[n_tr:], y[n_tr:]
 
 

@@ -2,6 +2,12 @@
 
     python -m repro.launch.svm_train --dataset a9a --heuristic multi5pc \
         [--scale 0.05] [--ckpt-dir ckpt/ --resume] [--parallel]
+
+Multi-class datasets (``covtype``, ``news20``) train one-vs-rest: K
+binary problems as ONE batched fit over a shared device mirror
+(``core.multi.MultiProblemDriver``; ``--multi-backend loop`` is the
+sequential parity oracle). ``--grid-c`` sweeps a C grid the same way on a
+binary dataset — one problem per grid point, C traced per problem.
 """
 import argparse
 
@@ -49,6 +55,16 @@ def main():
     ap.add_argument("--mirror-budget-bytes", type=int, default=None,
                     help="per-device byte cap for the mirror (default: "
                          "a fraction of reported device memory)")
+    ap.add_argument("--multi-backend", default="batched",
+                    choices=("batched", "loop"),
+                    help="multi-problem training (multi-class datasets, "
+                         "--grid-c): one fused K-problem device program "
+                         "('batched') or K sequential fits ('loop', the "
+                         "parity oracle)")
+    ap.add_argument("--grid-c", default=None,
+                    help="comma-separated C values: hyperparameter sweep "
+                         "on a binary dataset, one problem per value "
+                         "batched over the shared store")
     args = ap.parse_args()
 
     from repro.core import SMOSolver, SVMConfig
@@ -67,6 +83,38 @@ def main():
                     compact_backend=args.compact_backend,
                     mirror=args.mirror,
                     mirror_budget_bytes=args.mirror_budget_bytes)
+    if spec.n_classes > 2 or args.grid_c:
+        from repro.core import MultiProblemDriver
+        drv = MultiProblemDriver(cfg, backend=args.multi_backend,
+                                 parallel=args.parallel)
+        if args.grid_c:
+            assert spec.n_classes == 2, "--grid-c needs a binary dataset"
+            Cs = [float(c) for c in args.grid_c.split(",")]
+            models = drv.fit_grid(X, y, Cs)
+            for k, (C, m) in enumerate(zip(Cs, models)):
+                # batched: all models share ONE stats with a K-entry
+                # per_problem table; loop oracle: each model carries its
+                # own scalar stats
+                rec = next((r for r in m.stats.per_problem
+                            if r["problem"] == k),
+                           {"iterations": m.stats.iterations,
+                            "n_sv": m.stats.n_sv})
+                print(f"{args.dataset}/C={C:g}: "
+                      f"iters={rec['iterations']} nsv={rec['n_sv']} "
+                      f"obj={m.dual_objective():.4f}")
+            return
+        mdl = drv.fit_ovr(X, y)
+        st = mdl.stats
+        train = sum({id(m.stats): m.stats.train_time
+                     for m in mdl.models}.values())
+        tot = sum(r["iterations"] for r in st.per_problem)
+        cache = (f" cache_hit={st.cache_hit_rate:.2f}"
+                 if args.row_cache else "")
+        print(f"{args.dataset}/ovr{len(mdl.classes)}/{args.multi_backend}: "
+              f"iters={tot} nsv={st.n_sv} train={train:.2f}s{cache}")
+        if len(yt):
+            print(f"test acc: {(mdl.predict(Xt) == yt).mean():.4f}")
+        return
     if args.parallel:
         from repro.core.parallel import ParallelSMOSolver
         solver = ParallelSMOSolver(cfg)

@@ -1,0 +1,221 @@
+"""Batched multi-problem training (core/multi.py).
+
+Parity: a problem's trajectory depends only on (X, y, C) — never on its
+batch-mates, the batch width K, the row cache, or dispatch fusion — so
+every batched configuration is compared BITWISE against the sequential
+loop oracle (``multi_backend='loop'``), per problem. One sequential sweep
+over the 8-point C grid serves as the oracle for every K (grids are
+nested prefixes of ``CS``).
+
+Accounting: the multi-problem FLOP split is pinned — kernel-row
+production is billed once per physically produced row (cross-problem
+cache hits produce nothing), the O(M) FMA epilogue once per
+problem-iteration (a shared row still feeds K gamma updates).
+
+Plus: (K, n) master checkpoint save -> resume mid-sweep, OvR union-engine
+serving vs the per-model oracle, and a hypothesis property test that OvR
+binarization + argmax voting is invariant under class-order permutation.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (MultiProblemDriver, SMOSolver, SVMConfig,
+                        ovr_tasks, train_ovr)
+
+N, D = 384, 24
+CS = np.geomspace(0.5, 8.0, 8)
+
+
+def cfg(fmt="dense", sel="wss1", rc=False, fuse=1, **kw):
+    kw = {"C": 1.0, "sigma2": 4.0, "eps": 1e-3, "heuristic": "multi5pc",
+          "chunk_iters": 64, "min_buffer": 64, "row_cache_slots": 128,
+          **kw}
+    return SVMConfig(fuse_iters=fuse, format=fmt, selection=sel,
+                     row_cache=rc, **kw)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    X[rng.random(X.shape) < 0.5] = 0.0
+    w = rng.normal(size=D)
+    s = X @ w + 0.4 * rng.normal(size=N)
+    y = np.where(s > np.median(s), 1.0, -1.0).astype(np.float32)
+    return X, y
+
+
+@pytest.fixture(scope="module")
+def mdata():
+    """3-class OvR dataset (integer labels)."""
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(180, 12)).astype(np.float32)
+    w = rng.normal(size=(12, 3))
+    y = np.argmax(X @ w + 0.5 * rng.normal(size=(180, 3)), axis=1)
+    return X, y.astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def oracle(data):
+    """Sequential loop-oracle models for every (fmt, sel) over the full
+    8-point C grid; problem k of any batched K-fit compares to entry k."""
+    X, y = data
+    out = {}
+    for fmt in ("dense", "ell"):
+        for sel in ("wss1", "wss2"):
+            out[(fmt, sel)] = MultiProblemDriver(
+                cfg(fmt, sel), backend="loop").fit_tasks(
+                    X, np.broadcast_to(y, (CS.size, N)).copy(), C=CS)
+    return out
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+@pytest.mark.parametrize("sel", ["wss1", "wss2"])
+@pytest.mark.parametrize("K", [1, 3, 8])
+@pytest.mark.parametrize("rc,fuse", [(False, 1), (True, 1), (False, 8),
+                                     (True, 8)])
+def test_batched_equals_loop_oracle(data, oracle, fmt, sel, K, rc, fuse):
+    X, y = data
+    ms = oracle[(fmt, sel)]
+    mb = MultiProblemDriver(cfg(fmt, sel, rc=rc, fuse=fuse)).fit_tasks(
+        X, np.broadcast_to(y, (K, N)).copy(), C=CS[:K])
+    st = mb[0].stats
+    assert st.n_problems == K
+    for k in range(K):
+        # trajectory invariants: iterations, reconstructions, alpha
+        # (bitwise), beta. Shrink-event COUNTS are deliberately not
+        # compared: the batch compacts on the UNION of live problems'
+        # active rows, so a lane's shrink countdown can be re-armed at a
+        # different step than its solo run's own compaction would — an
+        # extra Eq. 10 application that deactivates nothing new and
+        # leaves the trajectory bit-identical.
+        assert (st.per_problem[k]["iterations"]
+                == ms[k].stats.iterations), (k, st.per_problem[k])
+        assert (st.per_problem[k]["reconstructions"]
+                == ms[k].stats.reconstructions), (k, st.per_problem[k])
+        assert np.array_equal(mb[k].alpha, ms[k].alpha), k
+        assert mb[k].beta == pytest.approx(ms[k].beta, abs=1e-6), k
+
+
+def test_flop_accounting_production_once_epilogue_k_times(data):
+    """Two IDENTICAL problems batched with the shared cache: every row
+    the second lane asks for is the first lane's row, so production FLOPs
+    must come in strictly under 2x the single-problem fit while the FMA
+    epilogue is billed exactly per problem-iteration."""
+    X, y = data
+    base = cfg(rc=True, heuristic="original")   # no shrink: m constant
+    m1 = MultiProblemDriver(base).fit_tasks(
+        X, np.broadcast_to(y, (1, N)).copy())
+    m2 = MultiProblemDriver(base).fit_tasks(
+        X, np.broadcast_to(y, (2, N)).copy())
+    s1, s2 = m1[0].stats, m2[0].stats
+    it1 = s1.per_problem[0]["iterations"]
+    assert [r["iterations"] for r in s2.per_problem] == [it1, it1]
+    # the split is exhaustive (fp association across dispatches aside)
+    assert s2.flops_est == pytest.approx(
+        s2.flops_production + s2.flops_epilogue, rel=1e-12)
+    # epilogue: per problem-iteration -> exactly doubles
+    assert s2.flops_epilogue == 2 * s1.flops_epilogue
+    # production: per physically produced row -> cross-problem hits are
+    # free, strictly less than two independent fits pay
+    assert s2.flops_production < 2 * s1.flops_production
+    assert s2.cache_hit_rate > s1.cache_hit_rate
+    # cache-off production for the same trajectory bills 2K rows per
+    # joint iteration — an upper bound the cached run must undercut
+    m2off = MultiProblemDriver(
+        dataclasses.replace(base, row_cache=False)).fit_tasks(
+            X, np.broadcast_to(y, (2, N)).copy())
+    s2off = m2off[0].stats
+    assert s2off.flops_epilogue == s2.flops_epilogue
+    assert s2.flops_production < s2off.flops_production
+
+
+def test_ckpt_save_resume_mid_sweep(tmp_path, data):
+    X, y = data
+    Y = np.broadcast_to(y, (3, N)).copy()
+    Cs = np.asarray([0.5, 2.0, 8.0])
+    full = MultiProblemDriver(cfg()).fit_tasks(X, Y, C=Cs)
+    cut = max(r["iterations"]
+              for r in full[0].stats.per_problem) // 2
+    d = str(tmp_path)
+    MultiProblemDriver(
+        dataclasses.replace(cfg(), checkpoint_dir=d,
+                            max_iters=cut)).fit_tasks(X, Y, C=Cs)
+    assert os.path.exists(os.path.join(d, "multi_masters.npz"))
+    m2 = MultiProblemDriver(
+        dataclasses.replace(cfg(), checkpoint_dir=d,
+                            resume=True)).fit_tasks(X, Y, C=Cs)
+    st = m2[0].stats
+    assert st.converged
+    for k in range(3):
+        np.testing.assert_allclose(m2[k].alpha, full[k].alpha, atol=1e-6)
+        ref = full[k].dual_objective()
+        assert abs(m2[k].dual_objective() - ref) / abs(ref) < 1e-3
+    # a checkpoint is bound to its (K, n): resuming a different sweep
+    # shape must refuse, not silently mis-map problems
+    with pytest.raises(ValueError):
+        MultiProblemDriver(
+            dataclasses.replace(cfg(), checkpoint_dir=d,
+                                resume=True)).fit_tasks(
+                                    X, Y[:2], C=Cs[:2])
+
+
+@pytest.mark.parametrize("fmt", ["dense", "ell"])
+def test_ovr_union_engine_matches_per_model_oracle(mdata, fmt):
+    X, y = mdata
+    mdl = MultiProblemDriver(cfg(fmt)).fit_ovr(X, y)
+    assert mdl._union is not None
+    eng = mdl.union_engine()
+    assert eng.n_out == len(mdl.classes) == 3
+    got = np.asarray(eng.decision_function(X))
+    ref = mdl.decision_matrix_host(X)
+    assert got.shape == ref.shape == (len(X), 3)
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+    pred = mdl.predict(X)
+    assert pred.shape == (len(X),)
+    assert set(np.unique(pred)) <= set(mdl.classes.tolist())
+    assert (pred == np.asarray(mdl.classes)[np.argmax(ref, axis=1)]).all()
+
+
+def test_train_ovr_wrapper_and_grid(mdata):
+    X, y = mdata
+    mdl = train_ovr(X, y, C=1.0, sigma2=4.0, eps=1e-3,
+                    heuristic="multi5pc", chunk_iters=64, min_buffer=64)
+    assert (mdl.predict(X) == y).mean() > 0.8
+    classes, Y = ovr_tasks(y)
+    assert classes.tolist() == [0, 1, 2] and Y.shape == (3, len(X))
+    # grid with mixed sigma2 groups trains per-sigma2 batches, returns in
+    # grid order with per-point C
+    models = MultiProblemDriver(cfg()).fit_grid(
+        X[:120], np.where(y[:120] == 0, 1.0, -1.0).astype(np.float32),
+        Cs=[0.5, 4.0, 0.5, 4.0], sigma2s=[4.0, 4.0, 8.0, 8.0])
+    assert len(models) == 4
+    assert [m.config.C for m in models] == [0.5, 4.0, 0.5, 4.0]
+    assert [m.config.sigma2 for m in models] == [4.0, 4.0, 8.0, 8.0]
+
+
+def test_ovr_vote_permutation_invariant(mdata):
+    """OvR binarization + argmax voting must not depend on class order:
+    relabeling classes through any permutation permutes the predicted
+    labels through the same map."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    X, y = mdata
+    base = train_ovr(X, y, C=1.0, sigma2=4.0, eps=1e-3,
+                     heuristic="multi5pc", chunk_iters=64, min_buffer=64)
+    pred0 = base.predict(X)
+
+    @given(perm=st.permutations(range(3)))
+    @settings(max_examples=5, deadline=None)
+    def check(perm):
+        p = np.asarray(perm)
+        mdl = train_ovr(X, p[y], C=1.0, sigma2=4.0, eps=1e-3,
+                        heuristic="multi5pc", chunk_iters=64,
+                        min_buffer=64)
+        assert np.array_equal(mdl.predict(X), p[pred0])
+
+    check()
