@@ -86,6 +86,14 @@ engine's roofline terms for the hot bucket executable
 score parity, engine wins on us/query at batch >= 64, compacted-vs-full
 score parity, and (in a 4-device subprocess) sharded-vs-single-device
 parity.
+
+Elastic sweep (``--elastic-out`` -> ``BENCH_elastic.json``): the
+checkpoint plane — atomic save and checksum-verified restore latency of
+the epoch driver's step-dir payload vs n (each timed save overwrites the
+last, so the rename-aside publish path is what is measured), plus (in a
+4-device subprocess) ``elastic.rescale`` latency restoring one saved
+step onto 1/2/4-device meshes, i.e. the checkpoint -> new-topology path
+a rescaled resume pays before its first dispatch.
 """
 from __future__ import annotations
 
@@ -645,6 +653,120 @@ def bench_serve(sizes=(1024, 3072), d: int = 384, density: float = 0.05,
     return records
 
 
+def _bench_rescale(n: int, repeats: int) -> list[dict]:
+    """Elastic-rescale latency in a 4-device subprocess: one saved step
+    restored through ``elastic.rescale`` onto 1/2/4-device data meshes
+    (host restore + checksum verify + device_put under the new
+    NamedShardings — the full checkpoint -> new-mesh path)."""
+    code = f"""
+        import json, os, tempfile, time
+        import numpy as np, jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.ckpt import checkpoint as ck
+        from repro.core.parallel import AXIS, data_mesh
+        from repro.launch import elastic
+        n = {n}
+        rng = np.random.default_rng(0)
+        group = {{"alpha": rng.random(n).astype(np.float32),
+                  "gamma": rng.random(n).astype(np.float32),
+                  "active": (rng.random(n) < 0.5).astype(np.int8),
+                  "in_buffer": np.ones(n, np.int8)}}
+        like = {{k: np.zeros_like(v) for k, v in group.items()}}
+        base = tempfile.mkdtemp()
+        ck.save(os.path.join(base, "step_9"), 9, {{"svm": group}})
+        recs = []
+        for p in (1, 2, 4):
+            sh = NamedSharding(data_mesh(p), P(AXIS))
+            shs = {{"svm": {{k: sh for k in like}}}}
+            lat = []
+            for _ in range({repeats}):
+                t0 = time.perf_counter()
+                out, step = elastic.rescale(base, {{"svm": like}}, shs)
+                jax.block_until_ready(out["svm"]["alpha"])
+                lat.append(time.perf_counter() - t0)
+            assert step == 9
+            np.testing.assert_array_equal(
+                np.asarray(out["svm"]["alpha"]), group["alpha"])
+            recs.append({{"check": "rescale", "devices": p, "n": n,
+                          "rescale_ms":
+                              float(np.percentile(lat, 50)) * 1e3}})
+        print("RESCALE" + json.dumps(recs))
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(os.path.dirname(
+                   os.path.dirname(os.path.abspath(__file__))), "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().split("RESCALE")[-1])
+
+
+def bench_elastic(sizes=(1 << 14, 1 << 17), repeats: int = 5,
+                  rescale_devices: bool = True) -> list[dict]:
+    """Checkpoint-plane latency (see module doc): atomic save and
+    verified restore of the epoch driver's step-dir payload — the (n,)
+    f32 alpha/gamma masters plus the int8 active/membership masks — as a
+    function of n, then the 4-device ``elastic.rescale`` sweep. Each
+    timed save overwrites the previous one, so the atomic
+    rename-aside-and-publish path is what is measured; restore pays the
+    file- and per-array checksum verification, which is the price of
+    never resuming from garbage. Round-trip bit-equality is asserted en
+    passant."""
+    import shutil
+    import tempfile
+    from repro.ckpt import checkpoint as ck
+    records = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        group = {"alpha": rng.random(n).astype(np.float32),
+                 "gamma": rng.random(n).astype(np.float32),
+                 "active": (rng.random(n) < 0.5).astype(np.int8),
+                 "in_buffer": np.ones(n, np.int8)}
+        like = {k: np.zeros_like(v) for k, v in group.items()}
+        payload = sum(v.nbytes for v in group.values())
+        tmp = tempfile.mkdtemp()
+        try:
+            d = os.path.join(tmp, "step_1")
+            s50, s99 = _percentiles(
+                lambda: ck.save(d, 1, {"svm": group}), repeats)
+            assert ck.step_complete(d)
+            out = {}
+            r50, r99 = _percentiles(
+                lambda: out.update(ck.restore(d, "svm", like)), repeats)
+            for k in group:
+                np.testing.assert_array_equal(np.asarray(out[k]), group[k])
+        finally:
+            shutil.rmtree(tmp)
+        records.append({
+            "n": n, "payload_bytes": payload,
+            "save_ms": s50 * 1e3, "save_p99_ms": s99 * 1e3,
+            "restore_ms": r50 * 1e3, "restore_p99_ms": r99 * 1e3,
+            "save_mb_s": payload / max(s50, 1e-9) / 2**20,
+            "restore_mb_s": payload / max(r50, 1e-9) / 2**20,
+        })
+    if rescale_devices:
+        records.extend(_bench_rescale(sizes[-1], repeats))
+    return records
+
+
+def elastic_csv_lines(records: list[dict]) -> list[str]:
+    lines = []
+    for r in records:
+        if r.get("check") == "rescale":
+            lines.append(f"elastic/rescale/p{r['devices']}/n{r['n']},"
+                         f"{r['rescale_ms']:.2f},ms_per_restore")
+            continue
+        lines.append(
+            f"elastic/ckpt/n{r['n']},{r['save_ms']:.2f},"
+            f"restore_ms={r['restore_ms']:.2f}"
+            f";save_mb_s={r['save_mb_s']:.0f}"
+            f";restore_mb_s={r['restore_mb_s']:.0f}"
+            f";p99_save_ms={r['save_p99_ms']:.2f}")
+    return lines
+
+
 def serve_csv_lines(records: list[dict]) -> list[str]:
     lines = []
     for r in records:
@@ -755,12 +877,17 @@ def main(argv=None) -> None:
                     help="run the batched-vs-sequential multi-problem "
                          "sweep and write it as a JSON artifact "
                          "(BENCH_multi.json in CI)")
+    ap.add_argument("--elastic-out", default=None,
+                    help="run the checkpoint save/restore + elastic "
+                         "rescale latency sweep and write it as a JSON "
+                         "artifact (BENCH_elastic.json in CI)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller problems (CI-budget run)")
     args = ap.parse_args(argv)
     if args.out or not (args.cache_out or args.compact_out
                         or args.recon_out or args.epoch_out
-                        or args.serve_out or args.multi_out):
+                        or args.serve_out or args.multi_out
+                        or args.elastic_out):
         kw = dict(n=512, d=1024) if args.quick else {}
         records = bench_sparse(quick=args.quick, **kw)
         for line in csv_lines(records):
@@ -826,6 +953,16 @@ def main(argv=None) -> None:
             json.dump({"bench": "multi_problem", "records": multi_records},
                       f, indent=1)
         print(f"wrote {args.multi_out}", flush=True)
+    if args.elastic_out:
+        kw = (dict(sizes=(1 << 13, 1 << 15), repeats=3) if args.quick
+              else {})
+        elastic_records = bench_elastic(**kw)
+        for line in elastic_csv_lines(elastic_records):
+            print(line, flush=True)
+        with open(args.elastic_out, "w") as f:
+            json.dump({"bench": "elastic", "records": elastic_records},
+                      f, indent=1)
+        print(f"wrote {args.elastic_out}", flush=True)
 
 
 if __name__ == "__main__":

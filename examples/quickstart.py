@@ -82,3 +82,40 @@ for C, m in zip([0.5, 2.0, 8.0],
                 MultiProblemDriver(cfg).fit_grid(X, y, [0.5, 2.0, 8.0])):
     print(f"  grid C={C:3.1f}: nsv={int((m.alpha > 0).sum())} "
           f"obj={m.dual_objective():.2f}")
+
+# ---- Kill it and resume on a different device count -----------------------
+# Checkpoints are crash-atomic (write to a temp dir, publish by rename,
+# content checksums — a torn or corrupt save is skipped at resume) and
+# MESH-PORTABLE: a step dir holds only the (n,) host masters plus the
+# active/membership masks, never a layout, so a fit saved under N devices
+# resumes under M by re-dealing the same row set. Resuming on the SAME
+# device count replays the killed run bitwise; a different count changes
+# shard shapes (a different XLA executable), which keeps iterations and
+# objective equal and alpha within ~1 ulp. The injected kill below is a
+# stand-in for SIGKILL/preemption at a dispatch boundary; from a shell:
+#     python -m repro.launch.svm_train --dataset a9a --devices 4 \
+#         --ckpt-dir ckpt/ --chaos kill@12      # killed mid-schedule
+#     python -m repro.launch.svm_train --dataset a9a --devices 2 \
+#         --ckpt-dir ckpt/ --resume --watchdog-threshold 3.0
+# (--watchdog-threshold arms the straggler watchdog: a dispatch slower
+# than 3x the running median forces a checkpoint at that boundary and
+# halves the fused-dispatch budget, so a preempted host loses nothing.)
+import dataclasses
+import tempfile
+
+from repro.launch import chaos
+
+ckdir = tempfile.mkdtemp()
+cfg = SVMConfig(C=spec.C, sigma2=spec.sigma2, eps=1e-3,
+                heuristic="multi5pc", chunk_iters=256,
+                checkpoint_dir=ckdir, checkpoint_every=2)
+try:
+    with chaos.inject(chaos.FaultPlan(kill_at_dispatch=3)):
+        ParallelSMOSolver(cfg).fit(X, y)
+except chaos.InjectedKill:
+    pass                                  # "crashed" at dispatch 3
+resumed = ParallelSMOSolver(
+    dataclasses.replace(cfg, resume=True)).fit(X, y)
+s = resumed.stats
+print(f"killed at dispatch 3, resumed from step {s.resumed_from}: "
+      f"iters={s.iterations} obj={resumed.dual_objective():.2f}")

@@ -1,12 +1,29 @@
 """Checkpointing with elastic restore (DESIGN.md §6).
 
 Format: one .npz per top-level state group (params / opt / extra) +
-manifest.json (tree structure, shapes, dtypes, step, sha256 per file).
-Save gathers to host (works from any sharding); restore device_puts onto
-whatever mesh/sharding the *restarted* job uses — elastic rescale (N pods ->
-M pods, or a different mesh shape entirely) is therefore the same code path
-as plain restart. Async saves run on a daemon thread with an atomic
-rename-into-place so a crash mid-save never corrupts the latest checkpoint.
+manifest.json (tree structure, shapes, dtypes, step, sha256 per file AND
+per array). Save gathers to host (works from any sharding); restore
+device_puts onto whatever mesh/sharding the *restarted* job uses —
+elastic rescale (N pods -> M pods, or a different mesh shape entirely) is
+therefore the same code path as plain restart. Async saves run on a
+daemon thread with an atomic rename-into-place so a crash mid-save never
+corrupts the latest checkpoint.
+
+Crash-safety contract
+---------------------
+A step directory is COMPLETE iff its manifest parses and every group
+file it names exists with the recorded file-level sha256. Saves build
+the whole step in a temp dir (manifest written last) and publish it with
+``os.replace`` — a crash mid-save leaves a stray temp dir, never a torn
+step. Overwriting an existing step renames the old dir aside first (no
+rmtree-then-rename window where a half-deleted dir looks live); the only
+crash window loses that ONE step cleanly, and readers fall back.
+``latest_step`` ignores directories whose manifest is missing or
+unparseable; ``complete_steps``/``step_complete`` add the content check
+(file checksums) so resume can walk newest -> oldest past torn or
+corrupted saves instead of crashing or silently loading garbage.
+``with_retries`` is the bounded retry-with-backoff wrapper train drivers
+put around checkpoint I/O (transient FS errors on shared storage).
 
 SVM runs checkpoint (alpha, gamma, active, step) the same way — the epoch
 driver (``repro.core.driver``) syncs its device-resident alpha/gamma
@@ -15,7 +32,10 @@ rows were dropped by device-side physical compaction (their drop-time
 values live in the masters, not in the buffer), and an SMO optimization
 restarts mid-training with bitwise-identical trajectory (the chunk runner
 is deterministic given state; the row cache is deliberately not saved —
-it is exact, so rebuilding it empty is trajectory-neutral).
+it is exact, so rebuilding it empty is trajectory-neutral). Because the
+saved arrays are host (n,) masters — never device buffers — a checkpoint
+carries NO trace of the mesh it was saved under: restore re-deals the
+balanced buffer layout for whatever device count the restarted job has.
 """
 from __future__ import annotations
 
@@ -25,7 +45,9 @@ import os
 import shutil
 import tempfile
 import threading
-from typing import Any, Optional
+import time
+import warnings
+from typing import Any, Callable, Optional
 
 import numpy as np
 import jax
@@ -52,13 +74,43 @@ def _sha(path: str) -> str:
     return h.hexdigest()
 
 
+def array_sha(arr: np.ndarray) -> str:
+    """Content checksum of ONE array: dtype + shape + C-order bytes, so a
+    reshaped or recast array never collides with the original."""
+    a = np.ascontiguousarray(arr)
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def with_retries(fn: Callable[[], Any], attempts: int = 3,
+                 backoff: float = 0.05,
+                 what: str = "checkpoint I/O") -> Any:
+    """Bounded retry with exponential backoff for checkpoint I/O. Retries
+    OSError/IOError only (transient FS faults); corruption and shape
+    errors propagate immediately — retrying cannot fix those. Returns
+    ``(result, retries_used)``."""
+    last = None
+    for i in range(max(1, attempts)):
+        try:
+            return fn(), i
+        except OSError as e:        # noqa: PERF203 — the retry IS the point
+            last = e
+            if i + 1 < attempts:
+                time.sleep(backoff * (2 ** i))
+    raise IOError(f"{what} failed after {attempts} attempts") from last
+
+
 def save(directory: str, step: int, groups: dict[str, Any],
          extra: Optional[dict] = None, async_: bool = False):
     """groups: e.g. {'params': params, 'opt': opt_state}. Blocking unless
     ``async_`` (daemon thread; join via returned handle)."""
     def _do():
-        tmp = tempfile.mkdtemp(dir=os.path.dirname(
-            os.path.abspath(directory)) or ".")
+        parent = os.path.dirname(os.path.abspath(directory)) or "."
+        os.makedirs(parent, exist_ok=True)
+        tmp = tempfile.mkdtemp(dir=parent)
         manifest = {"step": int(step), "groups": {}, "extra": extra or {}}
         for name, tree in groups.items():
             flat, _ = _flatten(tree)
@@ -67,12 +119,25 @@ def save(directory: str, step: int, groups: dict[str, Any],
             manifest["groups"][name] = {
                 "file": f"{name}.npz", "sha256": _sha(fn),
                 "keys": sorted(flat.keys()),
+                # per-array content checksums: restore verifies each array
+                # it actually loads, so a bit flip inside a zip member is
+                # caught even when the file-level sha was skipped
+                "array_sha256": {k: array_sha(v) for k, v in flat.items()},
             }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
         if os.path.isdir(directory):
-            shutil.rmtree(directory)
-        os.replace(tmp, directory)
+            # rename the old step aside BEFORE publishing the new one:
+            # os.replace cannot atomically swap non-empty dirs, and the old
+            # rmtree-then-rename left a window where a crash exposed a
+            # half-deleted directory as the "latest" checkpoint
+            trash = tempfile.mkdtemp(dir=parent)
+            old = os.path.join(trash, "old")
+            os.replace(directory, old)
+            os.replace(tmp, directory)
+            shutil.rmtree(trash, ignore_errors=True)
+        else:
+            os.replace(tmp, directory)
 
     if async_:
         t = threading.Thread(target=_do, daemon=True)
@@ -102,6 +167,7 @@ def restore(directory: str, name: str, like: Any, shardings: Any = None,
             raise IOError(f"checkpoint corruption: {fn}: {got[:12]} != "
                           f"{info['sha256'][:12]}")
     data = np.load(fn)
+    arr_sha = info.get("array_sha256", {})
     leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     flat_sh = (jax.tree_util.tree_leaves(shardings)
@@ -112,19 +178,63 @@ def restore(directory: str, name: str, like: Any, shardings: Any = None,
         arr = data[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        if verify and key in arr_sha and array_sha(arr) != arr_sha[key]:
+            raise IOError(f"checkpoint corruption: {fn}:{key} content "
+                          "checksum mismatch")
         arr = arr.astype(leaf.dtype)
         out.append(jax.device_put(arr, sh) if sh is not None else
                    jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def latest_step(base: str) -> Optional[int]:
-    """Scan ``base`` for step_XXXX directories; return the newest step."""
+def step_complete(directory: str) -> bool:
+    """True iff the step dir is a COMPLETE save: manifest parses and every
+    group file exists with its recorded file-level sha256. This is the
+    cheap(ish) gate resume uses to skip torn/corrupt steps; per-array
+    checksums are re-verified at restore() time for the arrays loaded."""
+    try:
+        man = load_manifest(directory)
+        for info in man["groups"].values():
+            fn = os.path.join(directory, info["file"])
+            if _sha(fn) != info["sha256"]:
+                return False
+    except (OSError, ValueError, KeyError):
+        return False
+    return True
+
+
+def _step_dirs(base: str) -> list[tuple[int, str]]:
+    out = []
     if not os.path.isdir(base):
-        return None
-    steps = []
+        return out
     for d in os.listdir(base):
-        if d.startswith("step_") and os.path.exists(
-                os.path.join(base, d, "manifest.json")):
-            steps.append(int(d.split("_")[1]))
+        if d.startswith("step_"):
+            try:
+                out.append((int(d.split("_")[1]), os.path.join(base, d)))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
+def complete_steps(base: str) -> list[int]:
+    """All COMPLETE steps under ``base``, ascending. Torn saves (missing /
+    unparseable manifest) and corrupt ones (file checksum mismatch) are
+    skipped — resume walks this list from the back."""
+    return [s for s, d in _step_dirs(base) if step_complete(d)]
+
+
+def latest_step(base: str) -> Optional[int]:
+    """Scan ``base`` for step_XXXX directories; return the newest step
+    whose manifest parses (torn saves — no/invalid manifest — are
+    ignored). Content checksums are NOT verified here; use
+    ``complete_steps`` / ``step_complete`` when corruption fallback
+    matters."""
+    steps = []
+    for s, d in _step_dirs(base):
+        try:
+            load_manifest(d)
+        except (OSError, ValueError):
+            warnings.warn(f"skipping torn checkpoint dir {d}")
+            continue
+        steps.append(s)
     return max(steps) if steps else None

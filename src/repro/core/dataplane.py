@@ -477,7 +477,10 @@ def compact_plan(keep: jax.Array, n_active: jax.Array, p: int, m_per: int):
     the static output shape ``p * m_per``). Survivors are enumerated in
     buffer-position order and dealt to ``p`` contiguous shards of
     ``base + (q < extra)`` rows — the exact layout the host rebuild
-    produces, so the two paths are interchangeable mid-run.
+    produces, so the two paths are interchangeable mid-run. This is also
+    the machinery mesh-portable checkpoint restore rides: the layout is a
+    pure function of (surviving rows, p), so re-dealing a saved run onto
+    a different device count is the same plan with a different p.
 
     Returns ``(src, valid)``: ``src`` (p*m_per,) old buffer positions to
     gather (arbitrary on padding rows), ``valid`` (p*m_per,) False on the

@@ -102,7 +102,31 @@ will not fit). With the mirror active, reconstruction is one jitted
 (n,) gamma needed by the host-side Eq. 9 check cross the link), and
 every buffer (re)build — initial, resume subset, un-shrink growth — is
 a device gather from the mirror + the alpha/gamma masters
-(``_grow_step``). The host-streaming reconstruction
+(``_grow_step``).
+
+Fault tolerance and elasticity
+------------------------------
+The save boundary IS the dispatch boundary IS the restore boundary:
+
+    dispatch ─▶ summary ─▶ [checkpoint?] ─▶ dispatch ─▶ ...
+                               │ atomic step_{N}/ (host (n,) masters
+                               ▼  + active/membership masks + config
+                          crash/rescale   meta — no mesh/layout state)
+                               │ resume: newest COMPLETE step
+                               ▼  (torn/corrupt dirs skipped)
+                re-deal the saved row set for the CURRENT device
+                count, rebuild the cache empty, re-enter mid-schedule
+
+so a run killed at ANY point loses at most the dispatches since the
+last save, and a checkpoint saved under N devices restores onto M: the
+balanced buffer layout, ELL lane budgets and mirror geometry are pure
+functions of (row set, p) recomputed at build time, never part of
+the checkpoint (see the recovery diagram at the fault-tolerance section
+below, ``launch/elastic.py`` for the watchdog/rescale utilities, and
+``launch/chaos.py`` for the fault-injection hooks this loop honors at
+its dispatch/save boundaries). ``SVMConfig(watchdog_threshold=...)``
+arms a straggler watchdog over the per-dispatch wall times; a flagged
+dispatch forces a checkpoint and halves the fused segment budget. The host-streaming reconstruction
 (``reconstruct.reconstruct_gamma_store`` / the parallel ring fed from
 host-built arrays) and host store rebuilds survive under
 ``mirror='host'`` as the parity oracle, bit-identical by the same
@@ -129,6 +153,7 @@ from jax import lax
 
 from repro.core import dataplane, heuristics, mirror, rowcache, smo
 from repro.data import sparse as spfmt
+from repro.launch import chaos
 
 
 @dataclasses.dataclass
@@ -195,6 +220,15 @@ class FitStats:
     mirror: str = ""             # resolved full-set mirror mode for this fit:
                                  # 'device' (jitted Alg. 6 + device un-shrink)
                                  # or 'host' (streaming paths / fallback)
+    straggle_events: int = 0     # dispatches the StragglerWatchdog flagged
+                                 # (each forced a checkpoint and halved the
+                                 # fused segment budget)
+    ckpt_retries: int = 0        # transient-I/O retries spent on checkpoint
+                                 # writes (bounded by cfg.ckpt_retries)
+    resumed_from: int = -1       # checkpoint step this fit restored from;
+                                 # -1 = fresh start. A resume that fell
+                                 # back past torn/corrupt saves reports the
+                                 # step it actually loaded.
 
 
 class CompactShardings(NamedTuple):
@@ -341,6 +375,8 @@ class EpochDriver:
         self.idx: Optional[np.ndarray] = None   # host mirror of data.gids;
                                                 # None = stale (device compact
                                                 # since last materialization)
+        self._saves = 0                         # checkpoint-save boundary
+                                                # counter (chaos hook key)
 
     # -- buffer plumbing ---------------------------------------------------
     def _make_buffer(self, y, alpha, gamma, idx):
@@ -578,26 +614,130 @@ class EpochDriver:
         self._note_buffer()
 
     # -- fault tolerance ---------------------------------------------------
-    def _save_ckpt(self, act_full: np.ndarray, meta: dict):
+    # Recovery path (save boundary == dispatch boundary == restore
+    # boundary):
+    #
+    #   dispatch #i ──▶ EpochSummary ──▶ [cadence or straggle?]
+    #        ▲                               │ yes: _writeback() masters,
+    #        │                               ▼      atomic step_{N} save
+    #        │                     checkpoint_dir/step_{N}/ (host (n,)
+    #        │                     alpha/gamma/active/in_buffer + meta;
+    #        │                     NO mesh or layout state — buffers are
+    #        │                     rebuilt, not saved)
+    #        │   crash / rescale ──▶ restart with resume=True
+    #        │                               │ newest COMPLETE step
+    #        │                               ▼ (torn/corrupt skipped)
+    #        └── _build_buffer(in_buffer rows): re-deal the balanced
+    #            layout for the CURRENT device count p', restore per-row
+    #            active flags, recompute ELL lane budgets, rebuild the
+    #            row cache empty, re-enter the fused loop mid-schedule at
+    #            the saved step.
+    #
+    # Mesh portability falls out of what is (not) saved: checkpoints hold
+    # only global (n,) masters + the active and buffer-membership masks,
+    # and every buffer build is already a pure function of (row set, p) —
+    # dataplane's balanced contiguous layout, mirror.full_m_per's one
+    # rounding rule, and the adaptive ELL lane budget are all recomputed
+    # for the new p. A fit saved under N devices therefore restores onto
+    # M devices by the SAME code path as a plain restart. Restoring the
+    # saved MEMBERSHIP (not just the active set) means a same-mesh resume
+    # rebuilds the saved run's exact buffer geometry — same executable,
+    # bitwise continuation; a different device count changes shard shapes
+    # and so drifts by ulps across executables (iterations and objective
+    # still match — the PR-8 cross-executable contract).
+    def _ckpt_meta(self, n: int) -> dict:
+        """Config fingerprint saved with (and validated against) every
+        checkpoint. Deliberately EXCLUDES the device count and any buffer
+        geometry — those are free to change across restore — and eps/
+        iteration budgets, which a resume may legitimately retune."""
+        cfg = self.cfg
+        return {"n": int(n), "format": cfg.format, "C": float(cfg.C),
+                "sigma2": float(cfg.sigma2), "selection": cfg.selection,
+                "heuristic": self.h.name}
+
+    def _validate_meta(self, meta: dict, n: int, d: str):
+        for k, v in self._ckpt_meta(n).items():
+            if k in meta and meta[k] != v:
+                raise ValueError(
+                    f"checkpoint {d} was saved with {k}={meta[k]!r} but "
+                    f"this fit has {k}={v!r} — refusing to resume a "
+                    "different problem/configuration")
+
+    def _save_ckpt(self, act_full: np.ndarray, in_buf: np.ndarray,
+                   meta: dict):
         from repro.ckpt import checkpoint as ck
+        chaos.on_save(self._saves)
+        self._saves += 1
+        meta = dict(meta, **self._ckpt_meta(self.alpha.size))
         d = os.path.join(self.cfg.checkpoint_dir, f"step_{meta['step']}")
-        ck.save(d, meta["step"],
+        _, retries = ck.with_retries(
+            lambda: ck.save(
+                d, meta["step"],
                 {"svm": {"alpha": self.alpha, "gamma": self.gamma,
-                         "active": act_full.astype(np.int8)}},
-                extra=meta)
+                         "active": act_full.astype(np.int8),
+                         "in_buffer": in_buf.astype(np.int8)}},
+                extra=meta),
+            attempts=max(1, self.cfg.ckpt_retries),
+            what=f"checkpoint save {d}")
+        self.stats.ckpt_retries += retries
 
     def _load_ckpt(self, n: int):
+        """Restore the newest COMPLETE checkpoint, walking past torn or
+        corrupt step dirs (a config/shape mismatch raises instead — that
+        is a caller error, not a disk fault)."""
         from repro.ckpt import checkpoint as ck
-        step = ck.latest_step(self.cfg.checkpoint_dir)
-        if step is None:
-            return None
-        d = os.path.join(self.cfg.checkpoint_dir, f"step_{step}")
+        base = self.cfg.checkpoint_dir
         like = {"alpha": np.zeros(n, np.float32),
                 "gamma": np.zeros(n, np.float32),
-                "active": np.zeros(n, np.int8)}
-        g = ck.restore(d, "svm", like)
-        man = ck.load_manifest(d)
-        return ({k: np.array(v) for k, v in g.items()}, man["extra"])
+                "active": np.zeros(n, np.int8),
+                "in_buffer": np.zeros(n, np.int8)}
+        for step in reversed(ck.complete_steps(base)):
+            d = os.path.join(base, f"step_{step}")
+            try:
+                man = ck.load_manifest(d)
+            except (OSError, ValueError):
+                continue
+            meta = man.get("extra", {})
+            self._validate_meta(meta, n, d)
+            try:
+                g = ck.restore(d, "svm", like)
+            except (IOError, KeyError) as e:
+                warnings.warn(f"skipping corrupt checkpoint {d}: {e}")
+                continue
+            self.stats.resumed_from = int(step)
+            return ({k: np.array(v) for k, v in g.items()}, meta)
+        return None
+
+    def _checkpoint_now(self, n: int, step_host: int, nshr: int,
+                        recon_count: int, shrink_on: bool):
+        """Sync masters to host and write one atomic step dir at the
+        CURRENT dispatch boundary — the cadence path and the watchdog's
+        forced save share this exactly.
+
+        Besides the masters + active mask, the save records buffer
+        MEMBERSHIP (`in_buffer`: which global rows the buffer currently
+        holds — active plus shrunk-but-not-yet-compacted). Membership is
+        an (n,) mask, not a layout: restore re-deals exactly this row
+        set for the *current* device count, which reproduces the saved
+        run's buffer geometry bit-for-bit on the same mesh (same rows ->
+        same ``full_m_per`` -> same executable) while remaining
+        mesh-portable (a different p just deals the same set p ways)."""
+        self._writeback()
+        idx = self._host_idx()
+        valid = idx >= 0
+        act_full = np.zeros((n,), bool)
+        act_full[idx[valid & np.asarray(self.state.active)]] = True
+        in_buf = np.zeros((n,), bool)
+        in_buf[idx[valid]] = True
+        self._save_ckpt(act_full, in_buf, {
+            "step": step_host,
+            "shrink_events": nshr,
+            "recon_count": recon_count,
+            "shrink_on": shrink_on,
+            # the shrink schedule is anchored at the last shrink/compact
+            # event, not at this boundary — save the anchor so a resumed
+            # run shrinks at the same iterations the killed run would have
+            "next_shrink": int(jax.device_get(self.state.next_shrink))})
 
     # -- main --------------------------------------------------------------
     def fit(self, X, y: np.ndarray):
@@ -640,17 +780,19 @@ class EpochDriver:
         t_train = 0.0
         t_recon = 0.0
         stalled = False
-        step0, nshr0, act_full0 = 0, 0, None
+        step0, nshr0, act_full0, ns0 = 0, 0, None, None
         if cfg.resume and cfg.checkpoint_dir:
             got = self._load_ckpt(n)
             if got is not None:
                 g, meta = got
                 self.alpha, self.gamma = g["alpha"], g["gamma"]
                 act_full0 = g["active"].astype(bool)
+                in_buf0 = g["in_buffer"].astype(bool)
                 step0 = int(meta["step"])
                 nshr0 = int(meta.get("shrink_events", 0))
                 recon_count = int(meta.get("recon_count", 0))
                 shrink_on = bool(meta.get("shrink_on", shrink_on))
+                ns0 = meta.get("next_shrink")
                 stats.reconstructions = recon_count
 
         # Build the runner only after a possible restore: a Single-policy
@@ -680,17 +822,46 @@ class EpochDriver:
                                         # same global order
 
         if act_full0 is not None and shrink_on:
-            rows = np.flatnonzero(act_full0)
+            # rebuild the SAVED buffer membership (active plus shrunk-but-
+            # not-yet-compacted rows), not just the active set: on the same
+            # mesh the re-deal then reproduces the saved run's buffer
+            # geometry exactly (same rows -> same full_m_per -> same
+            # executable), and on a different mesh it is the same set dealt
+            # p' ways
+            rows = np.flatnonzero(in_buf0)
         else:
             rows = np.arange(n)
         self.data, self.yb, self.state, self.idx = self._build_buffer(rows)
+        if act_full0 is not None and shrink_on:
+            # restore each buffer row's logical active flag from the saved
+            # mask — a fresh build marks every valid row active, which
+            # would resurrect rows the saved run had already shrunk
+            ib = self.idx
+            actb = np.where(ib >= 0, act_full0[np.maximum(ib, 0)], False)
+            self.state = self.state._replace(active=sv._put(actb))
         self._note_buffer()
         self.state = self.state._replace(step=jnp.int32(step0),
                                          n_shrinks=jnp.int32(nshr0))
         if run_interval > 0:
-            self.state = self.state._replace(
-                next_shrink=jnp.int32(step0 + run_interval))
+            # resume: restore the saved shrink-schedule anchor so shrink
+            # events land at the same iterations as the uninterrupted run
+            # (the schedule is anchored at the last shrink/compact event,
+            # not at the checkpoint boundary); fresh start: first shrink
+            # one interval in
+            ns = step0 + run_interval if ns0 is None else int(ns0)
+            self.state = self.state._replace(next_shrink=jnp.int32(ns))
         ckpt_count = 0
+        # straggler watchdog (off unless watchdog_threshold > 0): watches
+        # the per-dispatch wall times the stats already record; a flagged
+        # dispatch forces a checkpoint at this boundary (the elastic
+        # restart path can take over at zero lost work) and halves the
+        # fused segment budget so the NEXT slow dispatch wastes less
+        watchdog = None
+        if cfg.watchdog_threshold > 0:
+            from repro.launch.elastic import StragglerWatchdog
+            watchdog = StragglerWatchdog(
+                threshold=cfg.watchdog_threshold,
+                window=cfg.watchdog_window, warmup=cfg.watchdog_warmup)
         # LRU/SLRU kernel-row cache (None when off). Never checkpointed:
         # cached rows are exact, so rebuilding it empty on resume is
         # trajectory-neutral. miss_seen tracks the cumulative miss counter
@@ -710,7 +881,14 @@ class EpochDriver:
             # and syncs ONE EpochSummary; every decision below reads
             # summary fields — state/cache stay on device untouched.
             while True:
+                if watchdog is not None:
+                    watchdog.start_step()
                 tc = time.perf_counter()
+                # the chaos hook sits INSIDE the timed region: an injected
+                # delay inflates this dispatch's wall time exactly like a
+                # real straggler would, so the watchdog sees it; a kill
+                # fires before the runner launches (boundary semantics)
+                chaos.on_dispatch(stats.dispatches)
                 step_before = step_host
                 # clip the segment budget to the checkpoint cadence so a
                 # fused run saves at exactly the oracle's iteration counts
@@ -755,19 +933,16 @@ class EpochDriver:
                 stats.flops_production += prod
                 stats.flops_epilogue += epi
                 stats.flops_est += prod + epi
+                straggled = (watchdog is not None and watchdog.end_step())
+                if straggled:
+                    stats.straggle_events += 1
+                    fuse = max(1, fuse // 2)
                 if cfg.checkpoint_dir:
                     ckpt_count += int(summ.segs)
-                    if ckpt_count % cfg.checkpoint_every == 0:
-                        self._writeback()
-                        idx = self._host_idx()
-                        act_full = np.zeros((n,), bool)
-                        act_full[idx[(idx >= 0)
-                                     & np.asarray(self.state.active)]] = True
-                        self._save_ckpt(act_full, {
-                            "step": step_host,
-                            "shrink_events": int(summ.n_shrinks),
-                            "recon_count": recon_count,
-                            "shrink_on": shrink_on})
+                    if ckpt_count % cfg.checkpoint_every == 0 or straggled:
+                        self._checkpoint_now(n, step_host,
+                                             int(summ.n_shrinks),
+                                             recon_count, shrink_on)
                 if bool(summ.converged) or bool(summ.stalled) \
                         or step_host >= cfg.max_iters:
                     break

@@ -85,7 +85,10 @@ class Mirror:
 def full_m_per(count: int, p: int, min_buffer: int) -> int:
     """Per-shard slot count for a ``count``-row buffer — the ONE rounding
     rule (`driver._make_buffer`, compaction scheduling, and the mirror all
-    use it, so mirror geometry == host-rebuild geometry)."""
+    use it, so mirror geometry == host-rebuild geometry). Because it is a
+    pure function of (count, p), buffer/mirror geometry is NEVER part of
+    a checkpoint: an elastic restore onto a different device count just
+    recomputes it for the new p (see the recovery diagram in driver)."""
     return util.bucket_pow2(-(-count // p), max(min_buffer // p, 8))
 
 

@@ -47,9 +47,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import math
 import os
 import time
+import warnings
 from typing import NamedTuple, Optional
 
 import numpy as np
@@ -536,6 +538,8 @@ class MultiProblemDriver:
         self.h = H.get(config.heuristic)
         self.parallel = bool(parallel)
         self.mesh = mesh
+        self._saves = 0          # checkpoint-save boundary counter (keys
+                                 # the launch.chaos on_save hook)
         if self.parallel:
             if backend != "batched":
                 raise ValueError("parallel=True requires backend='batched'")
@@ -968,37 +972,116 @@ class MultiProblemDriver:
             self.stats.buffer_K.append(self.data.K)
 
     # -- checkpointing -----------------------------------------------------
+    # The (K, n) masters travel as ONE self-validating .npz: the payload
+    # arrays' content checksum and the config fingerprint (K, n, format)
+    # ride INSIDE the file, so a checkpoint never depends on sidecar
+    # coherence. Saves are atomic (tmp + os.replace) and rotate the
+    # previous file to multi_masters.prev.npz first, so resume always has
+    # one known-good generation to fall back to when the newest save is
+    # torn or corrupted. Like the scalar driver's checkpoints, the file
+    # holds only host masters — no mesh or buffer state — so it restores
+    # onto any device count.
+    _CKPT_KEYS = ("alpha", "gamma", "active", "live", "converged",
+                  "stalled", "recon_count", "shrink_act", "step",
+                  "n_shrinks")
+
     def _ckpt_path(self) -> str:
         return os.path.join(self.cfg.checkpoint_dir, "multi_masters.npz")
 
+    def _ckpt_prev_path(self) -> str:
+        return os.path.join(self.cfg.checkpoint_dir,
+                            "multi_masters.prev.npz")
+
+    @classmethod
+    def _ckpt_checksum(cls, payload: dict) -> str:
+        from repro.ckpt import checkpoint as ck
+        joined = "\n".join(f"{k}:{ck.array_sha(payload[k])}"
+                           for k in cls._CKPT_KEYS)
+        return hashlib.sha256(joined.encode()).hexdigest()
+
     def _save_ckpt(self, steps, live, conv, stall, recon_count, shrink_act,
                    nshr):
-        os.makedirs(self.cfg.checkpoint_dir, exist_ok=True)
-        tmp = self._ckpt_path() + ".tmp.npz"
-        np.savez(tmp, alpha=self.alpha_m, gamma=self.gamma_m,
-                 active=self.act_m.astype(np.int8),
-                 live=live.astype(np.int8), converged=conv.astype(np.int8),
-                 stalled=stall.astype(np.int8), recon_count=recon_count,
-                 shrink_act=shrink_act.astype(np.int8), step=steps,
-                 n_shrinks=nshr)
-        os.replace(tmp, self._ckpt_path())
+        from repro.ckpt import checkpoint as ck
+        from repro.launch import chaos
+        chaos.on_save(self._saves)
+        self._saves += 1
+        payload = dict(alpha=self.alpha_m, gamma=self.gamma_m,
+                       active=self.act_m.astype(np.int8),
+                       live=live.astype(np.int8),
+                       converged=conv.astype(np.int8),
+                       stalled=stall.astype(np.int8),
+                       recon_count=recon_count,
+                       shrink_act=shrink_act.astype(np.int8), step=steps,
+                       n_shrinks=nshr)
+        meta = dict(checksum=np.str_(self._ckpt_checksum(payload)),
+                    format=np.str_(self.cfg.format))
+        path, prev = self._ckpt_path(), self._ckpt_prev_path()
+
+        def _write():
+            os.makedirs(self.cfg.checkpoint_dir, exist_ok=True)
+            tmp = path + ".tmp.npz"
+            np.savez(tmp, **payload, **meta)
+            if os.path.exists(path):
+                os.replace(path, prev)
+            os.replace(tmp, path)
+
+        _, retries = ck.with_retries(_write,
+                                     attempts=max(1, self.cfg.ckpt_retries),
+                                     what=f"checkpoint save {path}")
+        self.stats.ckpt_retries += retries
+
+    def _read_ckpt(self, path: str, n: int, Kp: int):
+        """Load + validate ONE checkpoint generation. IOError = corrupt
+        (caller falls back); ValueError = config mismatch (caller error,
+        never silently remapped)."""
+        try:
+            with np.load(path) as z:
+                data = {k: np.array(z[k]) for k in z.files}
+        except Exception as e:          # torn zip / short read / bad CRC
+            raise IOError(f"unreadable checkpoint {path}: {e}") from e
+        missing = [k for k in self._CKPT_KEYS if k not in data]
+        if missing:
+            raise IOError(f"checkpoint {path} is missing {missing}")
+        if "checksum" in data and (
+                str(data["checksum"]) != self._ckpt_checksum(data)):
+            raise IOError(f"checkpoint {path} content checksum mismatch")
+        if data["alpha"].shape != (Kp, n):
+            raise ValueError(
+                f"checkpoint shape {data['alpha'].shape} does not match "
+                f"the requested (K, n) = {(Kp, n)}")
+        if "format" in data and str(data["format"]) != self.cfg.format:
+            raise ValueError(
+                f"checkpoint {path} was saved with "
+                f"format={str(data['format'])!r} but this fit has "
+                f"format={self.cfg.format!r}")
+        return (data["alpha"].astype(np.float32),
+                data["gamma"].astype(np.float32),
+                data["active"].astype(bool), data["live"].astype(bool),
+                data["converged"].astype(bool),
+                data["stalled"].astype(bool),
+                data["recon_count"].astype(np.int64),
+                data["shrink_act"].astype(bool),
+                data["step"].astype(np.int64),
+                data["n_shrinks"].astype(np.int64))
 
     def _load_ckpt(self, n: int, Kp: int):
-        path = self._ckpt_path()
-        if not os.path.exists(path):
-            return None
-        z = np.load(path)
-        if z["alpha"].shape != (Kp, n):
-            raise ValueError(
-                f"checkpoint shape {z['alpha'].shape} does not match the "
-                f"requested (K, n) = {(Kp, n)}")
-        return (z["alpha"].astype(np.float32),
-                z["gamma"].astype(np.float32),
-                z["active"].astype(bool), z["live"].astype(bool),
-                z["converged"].astype(bool), z["stalled"].astype(bool),
-                z["recon_count"].astype(np.int64),
-                z["shrink_act"].astype(bool), z["step"].astype(np.int64),
-                z["n_shrinks"].astype(np.int64))
+        """Newest-first resume with one-generation fallback: a torn or
+        corrupted multi_masters.npz falls back to the rotated .prev
+        generation; only when every generation is unreadable does resume
+        start fresh (with a warning)."""
+        tried = False
+        for path in (self._ckpt_path(), self._ckpt_prev_path()):
+            if not os.path.exists(path):
+                continue
+            tried = True
+            try:
+                return self._read_ckpt(path, n, Kp)
+            except IOError as e:
+                warnings.warn(f"skipping corrupt checkpoint: {e}")
+        if tried:
+            warnings.warn("no readable multi-problem checkpoint "
+                          "generation; starting fresh")
+        return None
 
     # -- finalize ----------------------------------------------------------
     def _finalize(self, stats) -> list:

@@ -836,8 +836,16 @@ class ParallelSMOSolver(solver.SMOSolver):
     exist once, in the driver."""
 
     def __init__(self, config: solver.SVMConfig, mesh: Optional[Mesh] = None,
-                 axis: str = AXIS):
+                 axis: str = AXIS, devices: Optional[int] = None):
+        """``devices``: train on the first N visible devices (an elastic
+        rescale target — resuming a checkpoint here re-deals buffers and
+        mirror shards for THIS mesh regardless of the mesh it was saved
+        under). Mutually exclusive with an explicit ``mesh``."""
         super().__init__(config)
+        if devices is not None and mesh is not None:
+            raise ValueError("pass either mesh or devices, not both")
+        if devices is not None:
+            mesh = data_mesh(devices, axis=axis)
         self.mesh = mesh if mesh is not None else data_mesh(axis=axis)
         self.axis = axis if mesh is None else self.mesh.axis_names[0]
         self._sharding = NamedSharding(self.mesh, P(self.axis))

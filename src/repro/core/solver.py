@@ -112,6 +112,20 @@ class SVMConfig:
                                     # budget to this cadence, so save
                                     # points match the fuse_iters=1 oracle
     resume: bool = False            # restore from checkpoint_dir if present
+                                    # (newest COMPLETE step; torn/corrupt
+                                    # saves are skipped — see repro.ckpt)
+    ckpt_retries: int = 3           # bounded retry-with-backoff attempts
+                                    # around checkpoint writes (transient
+                                    # FS faults); corruption never retries
+    watchdog_threshold: float = 0.0  # straggler watchdog: flag a dispatch
+                                    # slower than threshold x the running
+                                    # median dispatch time (0 = off). The
+                                    # on_straggle policy forces a
+                                    # checkpoint at the dispatch boundary
+                                    # and halves the fused segment budget
+                                    # (bounded blast radius per dispatch)
+    watchdog_window: int = 32       # dispatches in the median window
+    watchdog_warmup: int = 3        # dispatches before the watchdog arms
 
     @property
     def inv_2s2(self) -> float:

@@ -1,0 +1,171 @@
+"""Fault injection for the SVM epoch cycle — the chaos harness.
+
+The epoch driver (``repro.core.driver``) calls two process-local hooks at
+its two fault boundaries:
+
+  * ``on_dispatch(i)``   immediately BEFORE fused-epoch dispatch #i
+                         (0-based) is launched;
+  * ``on_save(k)``       immediately BEFORE checkpoint save #k (0-based)
+                         is written.
+
+Both are no-ops (one attribute read) unless a :class:`FaultPlan` is
+installed, so the production hot loop pays nothing. An installed plan can
+
+  * KILL the fit at a chosen dispatch or save boundary (raises
+    :class:`InjectedKill` — the process-crash stand-in the chaos tests
+    catch or let the subprocess die on);
+  * DELAY chosen dispatches by a fixed sleep (a straggling shard, as seen
+    from the host: the dispatch wall time inflates, which is exactly the
+    signal ``launch.elastic.StragglerWatchdog`` watches).
+
+Because the driver's save boundary IS its dispatch boundary (see the
+recovery-path diagram in ``repro.core.driver``), killing at either
+boundary leaves only complete, checksummed step directories behind —
+resume picks up the newest one and replays the identical trajectory.
+
+On-disk corruption is injected separately (no hook needed — it models a
+fault AFTER the fit died): :func:`corrupt_step` truncates or bit-flips a
+step's group file, or tears its manifest, and the checkpoint layer's
+``complete_steps`` walk must skip it.
+
+CLI: ``--chaos kill@3`` / ``kill-save@2`` / ``delay@5:0.25`` on
+``repro.launch.svm_train`` (see :func:`parse_spec`).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import time
+from typing import Optional
+
+
+class InjectedKill(RuntimeError):
+    """The injected process death. Raised from a fault boundary; tests
+    either catch it (in-process chaos) or let the subprocess exit."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """What to inject, keyed by 0-based boundary counters."""
+    kill_at_dispatch: Optional[int] = None   # raise before dispatch #i
+    kill_at_save: Optional[int] = None       # raise before save #k
+    delay_dispatch: Optional[int] = None     # sleep before dispatch #i ...
+    delay_seconds: float = 0.0               # ... for this long
+    delay_every: bool = False                # delay EVERY dispatch >= index
+
+    dispatches: int = 0                      # boundary counters (observed)
+    saves: int = 0
+
+
+_PLAN: Optional[FaultPlan] = None
+
+
+def install(plan: Optional[FaultPlan]) -> None:
+    """Install (or, with None, clear) the process-local fault plan."""
+    global _PLAN
+    _PLAN = plan
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Scoped install: ``with chaos.inject(FaultPlan(kill_at_dispatch=3)):``"""
+    install(plan)
+    try:
+        yield plan
+    finally:
+        install(None)
+
+
+def on_dispatch(i: int) -> None:
+    """Driver hook: called before fused-epoch dispatch #i launches."""
+    p = _PLAN
+    if p is None:
+        return
+    p.dispatches = i + 1
+    if p.delay_dispatch is not None and (
+            i == p.delay_dispatch
+            or (p.delay_every and i >= p.delay_dispatch)):
+        time.sleep(p.delay_seconds)
+    if p.kill_at_dispatch is not None and i >= p.kill_at_dispatch:
+        raise InjectedKill(f"injected kill at dispatch {i}")
+
+
+def on_save(k: int) -> None:
+    """Driver hook: called before checkpoint save #k is written."""
+    p = _PLAN
+    if p is None:
+        return
+    p.saves = k + 1
+    if p.kill_at_save is not None and k >= p.kill_at_save:
+        raise InjectedKill(f"injected kill at save {k}")
+
+
+# -- on-disk corruption (post-mortem faults) --------------------------------
+def truncate_file(path: str, keep: int = 64) -> None:
+    """Truncate ``path`` to its first ``keep`` bytes (a torn write)."""
+    with open(path, "r+b") as f:
+        f.truncate(keep)
+
+
+def flip_byte(path: str, offset: int = -1) -> None:
+    """XOR one byte of ``path`` (silent media corruption). ``offset`` may
+    be negative (from the end); default flips the last byte."""
+    size = os.path.getsize(path)
+    pos = offset % size
+    with open(path, "r+b") as f:
+        f.seek(pos)
+        b = f.read(1)
+        f.seek(pos)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def corrupt_step(ckpt_dir: str, step: Optional[int] = None,
+                 mode: str = "truncate") -> str:
+    """Corrupt ONE step directory under ``ckpt_dir`` (default: the
+    newest): 'truncate' / 'flip' hit the first group .npz, 'manifest'
+    tears the manifest itself. Returns the corrupted step dir."""
+    from repro.ckpt import checkpoint as ck
+    if step is None:
+        step = ck.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    if mode == "manifest":
+        truncate_file(os.path.join(d, "manifest.json"), keep=8)
+        return d
+    man = ck.load_manifest(d)
+    fn = os.path.join(d, next(iter(man["groups"].values()))["file"])
+    if mode == "truncate":
+        truncate_file(fn)
+    elif mode == "flip":
+        flip_byte(fn)
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r} "
+                         "(want 'truncate' | 'flip' | 'manifest')")
+    return d
+
+
+# -- CLI spec ----------------------------------------------------------------
+def parse_spec(spec: str) -> FaultPlan:
+    """Parse a ``--chaos`` spec:
+
+      kill@I          kill before dispatch I
+      kill-save@K     kill before checkpoint save K
+      delay@I:S       sleep S seconds before dispatch I
+      delay-all@I:S   sleep S seconds before every dispatch >= I
+    """
+    kind, _, rest = spec.partition("@")
+    if not rest:
+        raise ValueError(f"bad --chaos spec {spec!r} (want KIND@N[:SECS])")
+    if kind == "kill":
+        return FaultPlan(kill_at_dispatch=int(rest))
+    if kind == "kill-save":
+        return FaultPlan(kill_at_save=int(rest))
+    if kind in ("delay", "delay-all"):
+        idx, _, secs = rest.partition(":")
+        return FaultPlan(delay_dispatch=int(idx),
+                         delay_seconds=float(secs or 0.1),
+                         delay_every=kind == "delay-all")
+    raise ValueError(f"unknown --chaos kind {kind!r} "
+                     "(want kill | kill-save | delay | delay-all)")

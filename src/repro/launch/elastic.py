@@ -12,6 +12,22 @@ robust step-time estimate and invokes a callback (checkpoint + alert in
 train drivers) when a step exceeds ``threshold``x the running median —
 on a real deployment the callback triggers the preemption/replace path,
 here it checkpoints so the elastic restart path takes over.
+
+Recovery path (save boundary == dispatch boundary == restore boundary),
+shared by the LM trainer and the SVM epoch driver
+(``SVMConfig(watchdog_threshold=...)`` wires this watchdog around the
+fused-epoch dispatches; ``repro.core.driver`` has the SVM-side view):
+
+    start_step ─▶ dispatch ─▶ end_step ─┬─ ok ───────▶ next dispatch
+                                        └─ straggle ─▶ on_straggle:
+                                              force an atomic checkpoint
+                                              at THIS dispatch boundary
+                                              (+ shrink the per-dispatch
+                                              budget), so the elastic
+                                              restart below loses nothing
+    crash / preemption / rescale ─▶ rescale(): restore the newest
+    COMPLETE step onto the CURRENT mesh — checkpoints hold host arrays
+    only, so N -> M devices is the same code path as a plain restart.
 """
 from __future__ import annotations
 
@@ -27,8 +43,13 @@ def rescale(ckpt_base: str, like_trees: dict, shardings: dict,
     """Restore the latest (or given) step onto the CURRENT mesh/shardings.
 
     like_trees/shardings: {'params': ..., 'opt': ...} pytrees (shapes may be
-    ShapeDtypeStructs). Returns (restored groups, step)."""
-    step = step if step is not None else ckpt.latest_step(ckpt_base)
+    ShapeDtypeStructs). Returns (restored groups, step). With no explicit
+    ``step``, torn or content-corrupt step dirs are skipped — the newest
+    step whose checksums verify wins (an explicit step is a caller
+    decision; restore() still raises on mismatch there)."""
+    if step is None:
+        steps = ckpt.complete_steps(ckpt_base)
+        step = steps[-1] if steps else None
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_base}")
     d = os.path.join(ckpt_base, f"step_{step}")

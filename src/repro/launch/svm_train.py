@@ -29,6 +29,21 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--parallel", action="store_true",
                     help="shard_map over all visible devices")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="train on the first N visible devices (implies "
+                         "--parallel). Checkpoints are mesh-portable: "
+                         "--resume re-deals a run saved under ANY device "
+                         "count onto this one")
+    ap.add_argument("--watchdog-threshold", type=float, default=0.0,
+                    help="arm the straggler watchdog: a dispatch slower "
+                         "than this multiple of the running median forces "
+                         "a checkpoint and halves the fused segment "
+                         "budget (0 = off)")
+    ap.add_argument("--chaos", default=None,
+                    help="fault-injection spec (kill@I | kill-save@K | "
+                         "delay@I:S | delay-all@I:S) — see "
+                         "repro.launch.chaos; for testing the recovery "
+                         "path from the command line")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--format", default="dense", choices=("dense", "ell"),
                     help="sample storage: dense or block-ELL sparse")
@@ -82,11 +97,21 @@ def main():
                     row_cache_policy=args.row_cache_policy,
                     compact_backend=args.compact_backend,
                     mirror=args.mirror,
-                    mirror_budget_bytes=args.mirror_budget_bytes)
+                    mirror_budget_bytes=args.mirror_budget_bytes,
+                    watchdog_threshold=args.watchdog_threshold)
+    if args.devices is not None:
+        args.parallel = True
+    if args.chaos:
+        from repro.launch import chaos
+        chaos.install(chaos.parse_spec(args.chaos))
     if spec.n_classes > 2 or args.grid_c:
         from repro.core import MultiProblemDriver
+        mesh = None
+        if args.devices is not None:
+            from repro.core.parallel import data_mesh
+            mesh = data_mesh(args.devices)
         drv = MultiProblemDriver(cfg, backend=args.multi_backend,
-                                 parallel=args.parallel)
+                                 parallel=args.parallel, mesh=mesh)
         if args.grid_c:
             assert spec.n_classes == 2, "--grid-c needs a binary dataset"
             Cs = [float(c) for c in args.grid_c.split(",")]
@@ -117,7 +142,7 @@ def main():
         return
     if args.parallel:
         from repro.core.parallel import ParallelSMOSolver
-        solver = ParallelSMOSolver(cfg)
+        solver = ParallelSMOSolver(cfg, devices=args.devices)
     else:
         solver = SMOSolver(cfg)
     m = solver.fit(X, y)

@@ -1,0 +1,333 @@
+"""Chaos suite: injected faults against the epoch cycle's recovery path.
+
+What must hold (the ISSUE-10 acceptance contract):
+
+  * a fit KILLED at any dispatch/save boundary and resumed — on the same
+    device count or a different one — replays the uninterrupted
+    trajectory: BITWISE on the same mesh (single host, and parallel on
+    the saved device count — the membership mask rebuilds the exact
+    buffer geometry), iterations-equal + objective-equal + ~1-ulp
+    allclose alpha across device counts (different shard shapes compile
+    a different executable; the PR-8 cross-executable contract);
+  * a TRUNCATED or CORRUPTED checkpoint is detected (content checksums)
+    and skipped, with resume falling back to the newest COMPLETE step
+    instead of crashing or silently loading garbage;
+  * a STRAGGLING dispatch trips the watchdog, which forces a checkpoint
+    at that boundary without perturbing the trajectory.
+
+The 4-device kill/rescale matrix runs in a subprocess with its own
+XLA_FLAGS (the pattern of tests/test_distributed.py) so this process
+keeps the default single device.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+from repro.core import MultiProblemDriver, SMOSolver, SVMConfig
+from repro.data import make_sparse
+from repro.launch import chaos
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KW = dict(C=4.0, sigma2=4.0, chunk_iters=64, eps=1e-3,
+          heuristic="multi5pc")
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_sparse(600, 400, 0.04, seed=0)
+
+
+@pytest.fixture(scope="module")
+def full(data):
+    X, y = data
+    m = SMOSolver(SVMConfig(**KW)).fit(X, y)
+    assert m.stats.converged
+    return m
+
+
+def _bitwise(a, b):
+    assert np.array_equal(np.asarray(a).view(np.int32),
+                          np.asarray(b).view(np.int32))
+
+
+# ------------------------------------------------- kill + resume (1 dev) --
+def test_kill_at_dispatch_resumes_bitwise(tmp_path, data, full):
+    X, y = data
+    d = str(tmp_path)
+    cfg = SVMConfig(checkpoint_dir=d, checkpoint_every=2, **KW)
+    kill = max(2, full.stats.dispatches // 2)
+    with chaos.inject(chaos.FaultPlan(kill_at_dispatch=kill)) as plan:
+        with pytest.raises(chaos.InjectedKill):
+            SMOSolver(cfg).fit(X, y)
+    assert plan.dispatches == kill + 1          # died AT the boundary
+    assert ck.complete_steps(d), "no complete checkpoint before the kill"
+    m2 = SMOSolver(dataclasses.replace(cfg, resume=True)).fit(X, y)
+    assert m2.stats.resumed_from >= 0
+    assert m2.stats.iterations == full.stats.iterations
+    _bitwise(m2.alpha, full.alpha)
+    assert m2.dual_objective() == full.dual_objective()
+
+
+def test_kill_at_save_boundary_resumes_from_prior_save(tmp_path, data,
+                                                       full):
+    X, y = data
+    d = str(tmp_path)
+    cfg = SVMConfig(checkpoint_dir=d, checkpoint_every=2, **KW)
+    # saves 0 and 1 complete; the fit dies entering save 2 — the save
+    # boundary is a dispatch boundary, so nothing torn is left behind
+    with chaos.inject(chaos.FaultPlan(kill_at_save=2)):
+        with pytest.raises(chaos.InjectedKill):
+            SMOSolver(cfg).fit(X, y)
+    steps = ck.complete_steps(d)
+    assert len(steps) == 2
+    m2 = SMOSolver(dataclasses.replace(cfg, resume=True)).fit(X, y)
+    assert m2.stats.resumed_from == steps[-1]
+    assert m2.stats.iterations == full.stats.iterations
+    _bitwise(m2.alpha, full.alpha)
+
+
+# ------------------------------------------------- corruption fallback --
+@pytest.mark.parametrize("mode", ["truncate", "flip", "manifest"])
+def test_corrupt_newest_step_falls_back(tmp_path, data, full, mode):
+    X, y = data
+    d = str(tmp_path)
+    cfg = SVMConfig(checkpoint_dir=d, checkpoint_every=1, **KW)
+    cut = int(full.stats.iterations * 0.6)
+    SMOSolver(dataclasses.replace(cfg, max_iters=cut)).fit(X, y)
+    steps = ck.complete_steps(d)
+    assert len(steps) >= 2
+    chaos.corrupt_step(d, mode=mode)
+    assert ck.complete_steps(d) == steps[:-1]
+    m2 = SMOSolver(dataclasses.replace(cfg, resume=True)).fit(X, y)
+    assert m2.stats.resumed_from == steps[-2]
+    assert m2.stats.iterations == full.stats.iterations
+    _bitwise(m2.alpha, full.alpha)
+
+
+def test_config_mismatch_refused(tmp_path, data):
+    X, y = data
+    d = str(tmp_path)
+    cfg = SVMConfig(checkpoint_dir=d, checkpoint_every=1, max_iters=128,
+                    **KW)
+    SMOSolver(cfg).fit(X, y)
+    bad = dataclasses.replace(cfg, C=8.0, resume=True)
+    with pytest.raises(ValueError, match="C"):
+        SMOSolver(bad).fit(X, y)
+
+
+def test_multi_corruption_falls_back_to_prev_generation(tmp_path, data):
+    X, y = data
+    Y = np.broadcast_to(y, (2, y.size)).copy()
+    Cs = np.asarray([1.0, 4.0])
+    kw = dict(KW, chunk_iters=64)
+    full = MultiProblemDriver(SVMConfig(**kw)).fit_tasks(X, Y, C=Cs)
+    cut = max(r["iterations"] for r in full[0].stats.per_problem) // 2
+    d = str(tmp_path)
+    MultiProblemDriver(SVMConfig(checkpoint_dir=d, max_iters=cut,
+                                 **kw)).fit_tasks(X, Y, C=Cs)
+    cur = os.path.join(d, "multi_masters.npz")
+    prev = os.path.join(d, "multi_masters.prev.npz")
+    assert os.path.exists(cur) and os.path.exists(prev)
+    chaos.truncate_file(cur)
+    with pytest.warns(UserWarning, match="corrupt"):
+        m2 = MultiProblemDriver(
+            SVMConfig(checkpoint_dir=d, resume=True,
+                      **kw)).fit_tasks(X, Y, C=Cs)
+    assert m2[0].stats.converged
+    for k in range(2):
+        np.testing.assert_allclose(m2[k].alpha, full[k].alpha, atol=1e-6)
+
+
+# ------------------------------------------------------- watchdog wire --
+def test_watchdog_forces_checkpoint_and_keeps_trajectory(tmp_path, data,
+                                                         full):
+    X, y = data
+    d = str(tmp_path)
+    # cadence would never save (every=10^6); only the watchdog's forced
+    # save can produce a step dir. One injected 0.5 s delay is >> the
+    # CPU dispatch median, so exactly that dispatch straggles.
+    cfg = SVMConfig(checkpoint_dir=d, checkpoint_every=10**6,
+                    watchdog_threshold=5.0, watchdog_warmup=3, **KW)
+    with chaos.inject(chaos.FaultPlan(delay_dispatch=5,
+                                      delay_seconds=0.5)):
+        m = SMOSolver(cfg).fit(X, y)
+    assert m.stats.straggle_events >= 1
+    assert ck.complete_steps(d), "straggle did not force a checkpoint"
+    # a delay changes wall time only — the trajectory is untouched
+    assert m.stats.iterations == full.stats.iterations
+    _bitwise(m.alpha, full.alpha)
+
+
+# ------------------------------------------------ checkpoint layer unit --
+def test_restore_detects_per_array_corruption(tmp_path):
+    d = str(tmp_path / "step_1")
+    arr = {"a": np.arange(32, dtype=np.float32)}
+    ck.save(d, 1, {"g": arr})
+    # rewrite the npz with one array tampered AND patch the file-level
+    # sha to match, leaving the per-array checksums stale — only the
+    # array-content check can catch this
+    fn = os.path.join(d, "g.npz")
+    with np.load(fn) as z:
+        data = {k: np.array(z[k]) for k in z.files}
+    data["a"][3] += 1.0
+    np.savez(fn, **data)
+    man = ck.load_manifest(d)
+    man["groups"]["g"]["sha256"] = ck._sha(fn)
+    import json
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(man, f)
+    with pytest.raises(IOError, match="content checksum"):
+        ck.restore(d, "g", {"a": np.zeros(32, np.float32)})
+
+
+def test_complete_steps_skips_torn_and_corrupt(tmp_path):
+    base = str(tmp_path)
+    for s in (1, 2, 3):
+        ck.save(os.path.join(base, f"step_{s}"), s,
+                {"g": {"a": np.full(8, float(s), np.float32)}})
+    # torn: a dir with no manifest at all (crash before publish never
+    # leaves this, but a partial copy might)
+    os.makedirs(os.path.join(base, "step_4"))
+    # corrupt: flip a byte of step_3's payload
+    chaos.flip_byte(os.path.join(base, "step_3", "g.npz"))
+    assert ck.complete_steps(base) == [1, 2]
+    assert ck.latest_step(base) == 3     # manifest still parses ...
+    assert not ck.step_complete(os.path.join(base, "step_3"))  # ... but
+    # the content check fails, so resume walks back to step_2
+
+
+def test_save_overwrite_replaces_atomically(tmp_path):
+    d = str(tmp_path / "step_5")
+    ck.save(d, 5, {"g": {"a": np.zeros(4, np.float32)}})
+    ck.save(d, 5, {"g": {"a": np.ones(4, np.float32)}})
+    assert ck.step_complete(d)
+    out = ck.restore(d, "g", {"a": np.zeros(4, np.float32)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(4))
+    # no stray temp dirs left in the parent
+    assert sorted(os.listdir(tmp_path)) == ["step_5"]
+
+
+def test_with_retries_bounded_backoff():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    out, retries = ck.with_retries(flaky, attempts=3, backoff=0.001)
+    assert out == "ok" and retries == 2
+
+    def dead():
+        raise OSError("gone")
+
+    with pytest.raises(IOError, match="failed after 2"):
+        ck.with_retries(dead, attempts=2, backoff=0.001)
+
+    def corrupt():
+        raise ValueError("not transient")
+
+    calls["n"] = 0
+    with pytest.raises(ValueError):
+        ck.with_retries(corrupt, attempts=5, backoff=0.001)
+
+
+def test_parse_spec():
+    p = chaos.parse_spec("kill@3")
+    assert p.kill_at_dispatch == 3 and p.kill_at_save is None
+    p = chaos.parse_spec("kill-save@2")
+    assert p.kill_at_save == 2
+    p = chaos.parse_spec("delay@5:0.25")
+    assert p.delay_dispatch == 5 and p.delay_seconds == 0.25 \
+        and not p.delay_every
+    p = chaos.parse_spec("delay-all@1:0.1")
+    assert p.delay_every
+    with pytest.raises(ValueError):
+        chaos.parse_spec("explode@1")
+    with pytest.raises(ValueError):
+        chaos.parse_spec("kill")
+
+
+# --------------------------------------- 4-dev kill -> rescale matrix --
+def test_kill_mid_schedule_resume_on_1_2_4_devices():
+    """THE tentpole acceptance test: a 4-device fit is killed
+    mid-schedule and resumed on 1, 2, and 4 devices; every resume must
+    replay the uninterrupted run — same iteration count, same final
+    alpha/objective. Resuming on the SAME mesh is bitwise (the saved
+    membership mask rebuilds the killed run's exact buffer geometry, so
+    it is the same executable); a DIFFERENT device count changes shard
+    shapes, so XLA compiles a different program and the dense GEMM
+    partitioning drifts by ulps — iterations and objective still match,
+    alpha to ~1-ulp allclose (the PR-8 cross-executable contract).
+
+    Each resume target restores from its OWN copy of the post-kill
+    checkpoint dir: resumed fits write checkpoints too, and sharing one
+    dir would make later targets resume from an earlier target's saves
+    instead of the kill point."""
+    code = """
+        import dataclasses, os, shutil, numpy as np
+        from repro.core import SVMConfig
+        from repro.core.parallel import ParallelSMOSolver
+        from repro.ckpt import checkpoint as ck
+        from repro.data import make_sparse
+        from repro.launch import chaos
+        X, y = make_sparse(600, 400, 0.04, seed=0)
+        kw = dict(C=4.0, sigma2=4.0, heuristic='multi5pc',
+                  chunk_iters=64, eps=1e-3)
+        for fmt in ('dense', 'ell'):
+            ref = ParallelSMOSolver(SVMConfig(format=fmt, **kw),
+                                    devices=4).fit(X, y)
+            assert ref.stats.converged, fmt
+            kill = max(2, ref.stats.dispatches // 2)
+            snap = os.path.join('{tmp}', fmt)
+            cfg = SVMConfig(format=fmt, checkpoint_dir=snap,
+                            checkpoint_every=2, **kw)
+            try:
+                with chaos.inject(chaos.FaultPlan(kill_at_dispatch=kill)):
+                    ParallelSMOSolver(cfg, devices=4).fit(X, y)
+                raise SystemExit('kill did not fire: ' + fmt)
+            except chaos.InjectedKill:
+                pass
+            steps = ck.complete_steps(snap)
+            assert steps and steps[-1] < ref.stats.iterations, \\
+                'kill landed after convergence: ' + fmt
+            for m in (1, 2, 4):
+                d = snap + '_m%d' % m
+                shutil.copytree(snap, d)
+                got = ParallelSMOSolver(
+                    dataclasses.replace(cfg, checkpoint_dir=d,
+                                        resume=True),
+                    devices=m).fit(X, y)
+                assert got.stats.resumed_from == steps[-1], (fmt, m)
+                assert got.stats.iterations == ref.stats.iterations, \\
+                    (fmt, m)
+                if m == 4:
+                    # same mesh -> same buffer geometry -> bitwise
+                    assert np.array_equal(
+                        got.alpha.view(np.int32),
+                        ref.alpha.view(np.int32)), (fmt, m)
+                assert np.allclose(got.alpha, ref.alpha,
+                                   atol=1e-5), (fmt, m)
+                ro = ref.dual_objective()
+                assert abs(got.dual_objective() - ro) <= 1e-4 * (
+                    1.0 + abs(ro)), (fmt, m)
+        print('CHAOS_RESCALE_OK')
+    """
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                   PYTHONPATH=os.path.join(ROOT, "src"))
+        out = subprocess.run(
+            [sys.executable, "-c",
+             textwrap.dedent(code).replace("{tmp}", tmp)],
+            capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "CHAOS_RESCALE_OK" in out.stdout

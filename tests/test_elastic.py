@@ -1,0 +1,150 @@
+"""Unit coverage for ``launch/elastic.py`` — the StragglerWatchdog and
+checkpoint-mediated rescale, both previously untested.
+
+The watchdog tests drive a fake clock through the start/end protocol so
+warmup gating, the bounded median window, threshold events and the
+callback contract are asserted deterministically (no sleeps). The
+rescale tests round-trip a pytree through ``ckpt.save`` -> ``rescale``
+and check that restore targets the CURRENT process topology — the same
+code path the SVM chaos tests exercise end-to-end through the driver.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+from repro.launch import elastic
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture()
+def clock(monkeypatch):
+    c = FakeClock()
+    monkeypatch.setattr(elastic.time, "perf_counter", c)
+    return c
+
+
+def _step(wd, clock, dt):
+    wd.start_step()
+    clock.t += dt
+    return wd.end_step()
+
+
+# ---------------------------------------------------------- watchdog --
+def test_watchdog_warmup_suppresses_events(clock):
+    wd = elastic.StragglerWatchdog(threshold=2.0, warmup=3)
+    # the first `warmup` steps can be arbitrarily slow without an event —
+    # there is no baseline to compare against yet
+    assert _step(wd, clock, 100.0) is False
+    assert _step(wd, clock, 100.0) is False
+    assert _step(wd, clock, 100.0) is False
+    assert wd.events == []
+    # armed now: the window median is 100, so 150 is NOT a straggle ...
+    assert _step(wd, clock, 150.0) is False
+    # ... but > 2x the median is
+    assert _step(wd, clock, 201.0) is True
+    assert len(wd.events) == 1
+
+
+def test_watchdog_threshold_and_median(clock):
+    wd = elastic.StragglerWatchdog(threshold=3.0, warmup=3)
+    for _ in range(5):
+        assert _step(wd, clock, 1.0) is False
+    assert _step(wd, clock, 2.9) is False     # below 3x median(=1.0)
+    assert _step(wd, clock, 3.1) is True      # above
+    step, dt, med = wd.events[-1]
+    assert step == 7
+    assert dt == pytest.approx(3.1)
+    assert med == pytest.approx(1.0)
+
+
+def test_watchdog_straggler_excluded_from_window(clock):
+    # a flagged step must NOT poison the running median — otherwise one
+    # straggle raises the baseline and masks the next one
+    wd = elastic.StragglerWatchdog(threshold=2.0, warmup=3)
+    for _ in range(4):
+        _step(wd, clock, 1.0)
+    assert _step(wd, clock, 10.0) is True
+    assert 10.0 not in wd._times
+    # median still 1.0 -> the same outlier fires again
+    assert _step(wd, clock, 10.0) is True
+    assert len(wd.events) == 2
+
+
+def test_watchdog_window_is_bounded(clock):
+    wd = elastic.StragglerWatchdog(threshold=3.0, window=8, warmup=3)
+    for i in range(50):
+        _step(wd, clock, 1.0 + 0.001 * i)
+    assert len(wd._times) == 8
+    # the window slid: only the newest 8 samples remain
+    assert min(wd._times) == pytest.approx(1.0 + 0.001 * 42)
+
+
+def test_watchdog_callback(clock):
+    seen = []
+    wd = elastic.StragglerWatchdog(
+        threshold=2.0, warmup=3,
+        on_straggle=lambda step, dt, med: seen.append((step, dt, med)))
+    for _ in range(3):
+        _step(wd, clock, 1.0)
+    _step(wd, clock, 5.0)
+    assert len(seen) == 1
+    step, dt, med = seen[0]
+    assert step == 4 and dt == pytest.approx(5.0) \
+        and med == pytest.approx(1.0)
+
+
+def test_watchdog_requires_start(clock):
+    wd = elastic.StragglerWatchdog()
+    with pytest.raises(AssertionError):
+        wd.end_step()
+
+
+# ----------------------------------------------------------- rescale --
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((16, 8)).astype(np.float32),
+            "b": rng.standard_normal((8,)).astype(np.float32)}
+
+
+def test_rescale_round_trip(tmp_path):
+    base = str(tmp_path)
+    params = _tree(0)
+    ck.save(os.path.join(base, "step_7"), 7, {"params": params})
+    like = {"w": np.zeros((16, 8), np.float32),
+            "b": np.zeros((8,), np.float32)}
+    out, step = elastic.rescale(base, {"params": like}, {})
+    assert step == 7
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(out["params"][k]),
+                                      params[k])
+
+
+def test_rescale_picks_newest_complete_step(tmp_path):
+    base = str(tmp_path)
+    old, new = _tree(1), _tree(2)
+    ck.save(os.path.join(base, "step_3"), 3, {"params": old})
+    ck.save(os.path.join(base, "step_9"), 9, {"params": new})
+    like = {k: np.zeros_like(v) for k, v in old.items()}
+    out, step = elastic.rescale(base, {"params": like}, {})
+    assert step == 9
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), new["w"])
+    # explicit step: restore the older generation
+    out3, step3 = elastic.rescale(base, {"params": like}, {}, step=3)
+    assert step3 == 3
+    np.testing.assert_array_equal(np.asarray(out3["params"]["w"]),
+                                  old["w"])
+
+
+def test_rescale_no_checkpoints_raises(tmp_path):
+    like = {"w": np.zeros((2, 2), np.float32)}
+    with pytest.raises(FileNotFoundError):
+        elastic.rescale(str(tmp_path / "empty"), {"params": like}, {})
